@@ -1,0 +1,78 @@
+"""Policy micro-benchmarks across the three implementation tiers:
+Python reference (the paper's timed implementation), vectorised JAX scan, and
+the Pallas kernel (interpret mode on CPU — the TPU number is roofline-derived,
+see roofline_bench)."""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core import jax_cache, policies, simulate, zipf
+
+
+def python_reference(full: bool = False):
+    n, cap = (10_000, 900) if full else (2_000, 180)
+    tlen = zipf.PAPER_TRACE_LEN if full else 20_000
+    trace = zipf.sample_trace(n, tlen, seed=0)
+    rows = []
+    for name in policies.POLICY_NAMES:
+        pol = policies.make_policy(name, cap, n_objects=n)
+        r = simulate.run_trace(pol, trace)
+        rows.append(
+            (f"cache_py/{name}", r.cpu_time_s / tlen * 1e6, f"CHR={r.chr:.4f} meta={r.metadata_entries}")
+        )
+    return rows
+
+
+def jax_batched(full: bool = False):
+    n, cap = (10_000, 900) if full else (2_000, 180)
+    tlen = 20_000 if not full else 50_000
+    samples = 4
+    traces = zipf.sample_traces(n, n_samples=samples, trace_len=tlen, seed=1)
+    rows = []
+    for kind in ("lru", "lfu", "plfu", "plfua"):
+        spec = jax_cache.PolicySpec(kind=kind, n_objects=n, capacity=cap)
+        hits = jax_cache.simulate_batch(spec, traces)  # compile
+        hits.block_until_ready()
+        t0 = time.perf_counter()
+        hits = jax_cache.simulate_batch(spec, traces)
+        hits.block_until_ready()
+        dt = time.perf_counter() - t0
+        chr_ = float(np.asarray(hits).mean())
+        rows.append(
+            (
+                f"cache_jax/{kind}",
+                dt / (tlen * samples) * 1e6,
+                f"CHR={chr_:.4f} ({samples} sims batched)",
+            )
+        )
+    return rows
+
+
+def pallas_interpret(full: bool = False):
+    from repro.kernels.cache_sim.ops import cache_sim
+
+    n, cap, tlen = 512, 64, 2_000  # interpret mode is python-speed: keep small
+    traces = zipf.sample_traces(n, n_samples=2, trace_len=tlen, seed=2)
+    rows = []
+    for kind in ("lfu", "plfu", "plfua"):
+        t0 = time.perf_counter()
+        hits, _, _ = cache_sim(traces, kind=kind, n_objects=n, capacity=cap, interpret=True)
+        hits.block_until_ready()
+        dt = time.perf_counter() - t0
+        rows.append(
+            (
+                f"cache_pallas_interp/{kind}",
+                dt / (tlen * 2) * 1e6,
+                f"CHR={float(np.asarray(hits).sum()) / (tlen * 2):.4f} (correctness tier; TPU perf in roofline)",
+            )
+        )
+    return rows
+
+
+ALL = {
+    "cache_py": python_reference,
+    "cache_jax": jax_batched,
+    "cache_pallas": pallas_interpret,
+}

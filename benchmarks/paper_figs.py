@@ -1,0 +1,200 @@
+"""One benchmark per paper artifact (Figs 2-7 + §4 metadata claim).
+
+Default scale is reduced for CI speed; ``--full`` reproduces the paper's
+exact grid (10 object counts x 6 rates, 12 samples x 100k requests).
+Rows: name,us_per_call,derived  (us_per_call = policy-management CPU time per
+request — the paper's §3 metric).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import policies, simulate, zipf
+from repro.core.zipf import GridCase
+
+
+def _grid(full: bool):
+    if full:
+        return zipf.paper_grid(), zipf.PAPER_NUM_SAMPLES, zipf.PAPER_TRACE_LEN
+    counts = [100, 1000, 10_000]
+    rates = [0.02, 0.0906, 0.25]
+    return zipf.paper_grid(counts, rates), 3, 20_000
+
+
+def fig2_red_columns(full: bool = False):
+    """Fig 2: LFU's re-admission thrash ('red columns') vs PLFU on the
+    ISP-like trace (212 channels, cache 50). Derived: number of mid-popularity
+    channels whose miss ratio improves by >10pp under PLFU + both CHRs."""
+    trace = zipf.synthetic_isp_trace(20_000 if not full else zipf.PAPER_TRACE_LEN)
+    n, cap = zipf.ISP_NUM_CHANNELS, zipf.ISP_CACHE_SIZE
+    out = []
+    scatters = {}
+    for name in ("lfu", "plfu"):
+        pol = policies.make_policy(name, cap)
+        h, m = simulate.hit_miss_scatter(pol, trace, n)
+        scatters[name] = (h, m, pol.chr)
+    h_l, m_l, chr_l = scatters["lfu"]
+    h_p, m_p, chr_p = scatters["plfu"]
+    tot = np.maximum(1, h_l + m_l)
+    improve = (m_l / tot - m_p / np.maximum(1, h_p + m_p))[: 2 * cap]
+    red_cols = int((improve > 0.10).sum())
+    out.append(("fig2/lfu_chr", 0.0, f"CHR={chr_l:.4f}"))
+    out.append(("fig2/plfu_chr", 0.0, f"CHR={chr_p:.4f} (paper: 0.9169->0.9349 on real ISP data)"))
+    out.append(("fig2/red_columns_fixed", 0.0, f"{red_cols} channels improve >10pp under PLFU"))
+    return out
+
+
+def fig3_chr_grid(full: bool = False):
+    """Fig 3(a,b): mean CHR for LFU / PLFU over the (N x rate) grid."""
+    cases, n_samples, tlen = _grid(full)
+    rows = []
+    for policy in ("lfu", "plfu"):
+        for case in cases:
+            r = simulate.run_case(policy, case, n_samples=n_samples, trace_len=tlen)
+            us = r.mean_cpu_s / tlen * 1e6
+            rows.append(
+                (f"fig3/{policy}/N{case.n_objects}_r{case.rate:.3f}", us, f"CHR={r.mean_chr:.4f}")
+            )
+    return rows
+
+
+def fig4_cpu_heatmap(full: bool = False):
+    """Fig 4: total CPU time heat-map + the ridge finding (CPU peaks at
+    intermediate cache sizes; PLFU > LFU in CPU time). The ridge needs the
+    full 6-point rate axis even at reduced scale."""
+    if full:
+        cases, n_samples, tlen = _grid(True)
+    else:
+        cases = zipf.paper_grid([1000, 10_000, 46_415], zipf.paper_cache_rates())
+        n_samples, tlen = 3, 30_000
+    rows = []
+    cpu = {}
+    for policy in ("lfu", "plfu"):
+        for case in cases:
+            # paper-faithful O(C) scan eviction (the heap variant is the
+            # beyond-paper optimisation benchmarked in cache_py)
+            r = simulate.run_case(
+                policy, case, n_samples=n_samples, trace_len=tlen,
+                policy_factory=lambda p=policy, c=case: policies.make_policy(
+                    p, c.cache_size, n_objects=c.n_objects, evict="scan"
+                ),
+            )
+            cpu[(policy, case.n_objects, round(case.rate, 4))] = r.mean_cpu_s
+            rows.append(
+                (
+                    f"fig4/{policy}/N{case.n_objects}_r{case.rate:.3f}",
+                    r.mean_cpu_s / tlen * 1e6,
+                    f"cpu_total_s={r.mean_cpu_s:.4f}",
+                )
+            )
+    # derived claims
+    ns = sorted({k[1] for k in cpu})
+    plfu_worse = sum(
+        cpu[("plfu", n, r)] >= cpu[("lfu", n, r)] for (p, n, r) in cpu if p == "lfu"
+    )
+    total = sum(1 for k in cpu if k[0] == "lfu")
+    rows.append(("fig4/plfu_costs_more_cpu", 0.0, f"{plfu_worse}/{total} cases (paper: nearly all)"))
+    # ridge: for the largest N, is some middle rate the argmax?
+    big_n = ns[-1]
+    rates = sorted({k[2] for k in cpu if k[1] == big_n})
+    series = [cpu[("lfu", big_n, r)] for r in rates]
+    argmax = int(np.argmax(series))
+    rows.append(
+        (
+            "fig4/ridge_at_intermediate_rate",
+            0.0,
+            f"N={big_n}: argmax rate index {argmax} of {len(rates)-1} "
+            f"({'interior' if 0 < argmax < len(rates) - 1 else 'edge'})",
+        )
+    )
+    return rows
+
+
+def fig5_plfua(full: bool = False):
+    """Fig 5: PLFUA CHR + CPU over the grid (prereq: cache <= 10% of N holds
+    for the lower rates; we run the full grid and mark the regime)."""
+    cases, n_samples, tlen = _grid(full)
+    rows = []
+    for case in cases:
+        r = simulate.run_case("plfua", case, n_samples=n_samples, trace_len=tlen)
+        us = r.mean_cpu_s / tlen * 1e6
+        regime = "in-regime" if case.rate <= 0.10 else "out-of-regime"
+        rows.append(
+            (
+                f"fig5/plfua/N{case.n_objects}_r{case.rate:.3f}",
+                us,
+                f"CHR={r.mean_chr:.4f} cpu_s={r.mean_cpu_s:.4f} ({regime})",
+            )
+        )
+    return rows
+
+
+def fig6_chr_increment(full: bool = False):
+    """Fig 6: average CHR increase, PLFUA vs PLFU, per case."""
+    cases, n_samples, tlen = _grid(full)
+    rows = []
+    gains = []
+    for case in cases:
+        a = simulate.run_case("plfua", case, n_samples=n_samples, trace_len=tlen)
+        b = simulate.run_case("plfu", case, n_samples=n_samples, trace_len=tlen)
+        gains.append(a.mean_chr - b.mean_chr)
+        rows.append(
+            (
+                f"fig6/N{case.n_objects}_r{case.rate:.3f}",
+                0.0,
+                f"dCHR={a.mean_chr - b.mean_chr:+.4f}",
+            )
+        )
+    rows.append(("fig6/mean_gain", 0.0, f"mean dCHR={np.mean(gains):+.4f} (paper: positive, largest at small N)"))
+    return rows
+
+
+def fig7_cpu_vs_plfua(full: bool = False):
+    """Fig 7: additional CPU time of LFU / PLFU relative to PLFUA."""
+    cases, n_samples, tlen = _grid(full)
+    rows = []
+    wins = 0
+    for case in cases:
+        t = {
+            p: simulate.run_case(p, case, n_samples=n_samples, trace_len=tlen).mean_cpu_s
+            for p in ("lfu", "plfu", "plfua")
+        }
+        wins += t["plfua"] <= t["plfu"]
+        rows.append(
+            (
+                f"fig7/N{case.n_objects}_r{case.rate:.3f}",
+                t["plfua"] / tlen * 1e6,
+                f"extra_lfu={t['lfu'] - t['plfua']:+.4f}s extra_plfu={t['plfu'] - t['plfua']:+.4f}s",
+            )
+        )
+    rows.append(("fig7/plfua_cheaper_than_plfu", 0.0, f"{wins}/{len(cases)} cases"))
+    return rows
+
+
+def metadata_table(full: bool = False):
+    """§4 claim: PLFUA metadata is 4-50% of PLFU's (= ~2x cache rate)."""
+    cases, n_samples, tlen = _grid(full)
+    rows = []
+    for case in cases:
+        a = simulate.run_case("plfua", case, n_samples=n_samples, trace_len=tlen)
+        b = simulate.run_case("plfu", case, n_samples=n_samples, trace_len=tlen)
+        ratio = a.mean_metadata / max(b.mean_metadata, 1)
+        rows.append(
+            (
+                f"metadata/N{case.n_objects}_r{case.rate:.3f}",
+                0.0,
+                f"plfua/plfu={ratio:.3f} (claim ~{min(1.0, 2 * case.rate):.3f})",
+            )
+        )
+    return rows
+
+
+ALL = {
+    "fig2": fig2_red_columns,
+    "fig3": fig3_chr_grid,
+    "fig4": fig4_cpu_heatmap,
+    "fig5": fig5_plfua,
+    "fig6": fig6_chr_increment,
+    "fig7": fig7_cpu_vs_plfua,
+    "metadata": metadata_table,
+}

@@ -1,0 +1,36 @@
+"""Roofline table reader: one row per (arch x shape x mesh) dry-run cell.
+
+Reads experiments/dryrun/*.json (produced by repro.launch.dryrun). Rows use
+the roofline step time as 'us_per_call' and summarise terms + bottleneck."""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+DRYRUN_DIR = Path("experiments/dryrun")
+
+
+def roofline_table(full: bool = False):
+    rows = []
+    files = sorted(DRYRUN_DIR.glob("*.json")) if DRYRUN_DIR.exists() else []
+    if not files:
+        return [("roofline/missing", 0.0, "run: python -m repro.launch.dryrun --arch all --shape all --mesh both")]
+    for f in files:
+        d = json.loads(f.read_text())
+        if "roofline" not in d:
+            continue
+        r = d["roofline"]
+        rows.append(
+            (
+                f"roofline/{d['arch']}/{d['shape']}/{d['mesh']}",
+                r["step_s"] * 1e6,
+                f"dom={r['dominant']} comp={r['compute_s']*1e3:.1f}ms "
+                f"mem={r['memory_s']*1e3:.1f}ms coll={r['collective_s']*1e3:.1f}ms "
+                f"useful={r['useful_ratio']:.2f} frac={r['roofline_fraction']:.3f} "
+                f"fits={d.get('fits_hbm')}",
+            )
+        )
+    return rows
+
+
+ALL = {"roofline": roofline_table}

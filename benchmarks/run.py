@@ -1,0 +1,44 @@
+"""Benchmark entry point: one function per paper table/figure + the roofline
+and serving-energy tables. Prints ``name,us_per_call,derived`` CSV.
+
+    PYTHONPATH=src python -m benchmarks.run              # reduced scale
+    PYTHONPATH=src python -m benchmarks.run --full       # the paper's grid
+    PYTHONPATH=src python -m benchmarks.run --only fig4
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--full", action="store_true", help="paper-scale grids (slow)")
+    ap.add_argument("--only", default=None, help="run one group (fig2..fig7, metadata, cache_py, cache_jax, cache_pallas, serving_energy, roofline)")
+    args = ap.parse_args()
+
+    from benchmarks import cache_bench, paper_figs, roofline_bench, serving_energy
+
+    groups: dict = {}
+    groups.update(paper_figs.ALL)
+    groups.update(cache_bench.ALL)
+    groups.update(serving_energy.ALL)
+    groups.update(roofline_bench.ALL)
+
+    selected = {args.only: groups[args.only]} if args.only else groups
+    print("name,us_per_call,derived")
+    for gname, fn in selected.items():
+        t0 = time.time()
+        try:
+            rows = fn(full=args.full)
+        except Exception as e:  # pragma: no cover
+            print(f"{gname}/ERROR,0,{type(e).__name__}: {e}")
+            continue
+        for name, us, derived in rows:
+            print(f'{name},{us:.3f},"{derived}"')
+        print(f"# {gname}: {time.time() - t0:.1f}s", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,68 @@
+"""Beyond-paper: the paper's CHR-vs-CPU trade-off priced in model FLOPs.
+
+For each policy, simulate a Zipf(1.1) request stream against a content cache
+(management CPU time measured exactly as the paper does) and price the misses
+as prefill recompute on the serving fleet:
+
+    E_total = n_req * [(1-CHR) * E_prefill + E_decode] + E_mgmt
+
+E_prefill/E_decode use the arch's active-parameter count (mistral-7b-class
+backbone by default, --full uses deepseek-v2's 21B active)."""
+from __future__ import annotations
+
+from repro.core import energy, policies, simulate, zipf
+from repro.configs import get_config
+from repro.models import build
+
+
+def serving_energy_table(full: bool = False):
+    arch = "deepseek-v2-236b" if full else "llava-next-mistral-7b"
+    model = build(get_config(arch))
+    n_active = model.n_active_params
+    n_obj, rate = 5_000, 0.05
+    case = zipf.GridCase(n_obj, rate)
+    tlen = 100_000 if full else 30_000
+    prompt_len, new_tokens = 2_048, 128
+    rows = []
+    for name in ("lru", "lfu", "plfu", "plfua", "tinylfu"):
+        r = simulate.run_case(
+            name, case, n_samples=3, trace_len=tlen, seed=11
+        )
+        rep = energy.serving_energy(
+            chr_value=r.mean_chr,
+            n_requests=tlen,
+            n_params=n_active,
+            prompt_len=prompt_len,
+            new_tokens=new_tokens,
+            mgmt_cpu_s=r.mean_cpu_s,
+        )
+        rows.append(
+            (
+                f"serving_energy/{name}",
+                r.mean_cpu_s / tlen * 1e6,
+                f"CHR={r.mean_chr:.4f} E_total={rep.e_total_j/1e3:.1f}kJ "
+                f"(recompute {rep.e_recompute_j/1e3:.1f}kJ, mgmt {rep.e_mgmt_j:.2f}J)",
+            )
+        )
+    # the paper's ridge finding re-evaluated with recompute priced in:
+    # down-scaling the cache saves mgmt CPU but costs recompute — find the
+    # energy-optimal rate
+    best = None
+    for rate_i in zipf.paper_cache_rates():
+        case_i = zipf.GridCase(n_obj, float(rate_i))
+        r = simulate.run_case("plfua", case_i, n_samples=3, trace_len=tlen, seed=12)
+        rep = energy.serving_energy(r.mean_chr, tlen, n_active, prompt_len, new_tokens, r.mean_cpu_s)
+        if best is None or rep.e_total_j < best[1]:
+            best = (float(rate_i), rep.e_total_j, r.mean_chr)
+    rows.append(
+        (
+            "serving_energy/optimal_rate",
+            0.0,
+            f"rate={best[0]:.3f} E_total={best[1]/1e3:.1f}kJ CHR={best[2]:.4f} "
+            "(recompute dominates -> larger caches win vs paper's CPU-only ridge)",
+        )
+    )
+    return rows
+
+
+ALL = {"serving_energy": serving_energy_table}

@@ -1,0 +1,16 @@
+"""Lower + compile one (arch x shape) cell against the production mesh and
+print its memory + roofline report. Thin wrapper over repro.launch.dryrun.
+
+    PYTHONPATH=src python examples/multi_pod_dryrun.py --arch granite-3-2b --shape train_4k --multi-pod
+"""
+import os
+import subprocess
+import sys
+
+if __name__ == "__main__":
+    args = sys.argv[1:]
+    mesh = "multi" if "--multi-pod" in args else "single"
+    args = [a for a in args if a != "--multi-pod"]
+    cmd = [sys.executable, "-m", "repro.launch.dryrun", "--mesh", mesh] + args
+    env = dict(os.environ, PYTHONPATH="src")
+    raise SystemExit(subprocess.call(cmd, env=env))

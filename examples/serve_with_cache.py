@@ -1,0 +1,60 @@
+"""End-to-end serving driver: batched Zipf-distributed requests through the
+content cache (the paper's policies in their serving home).
+
+Generates with a small LM; repeated prompts hit the PLFUA-managed prefix
+cache and skip prefill. Prints CHR, saved prefill tokens, and the energy
+ledger.
+
+    PYTHONPATH=src python examples/serve_with_cache.py --requests 60
+"""
+import argparse
+import sys
+
+sys.path.insert(0, "src")
+
+import jax
+import numpy as np
+
+from repro.configs import get_config
+from repro.core import energy, zipf
+from repro.models import build
+from repro.serving import ContentCache, Request, Scheduler, SchedulerConfig, ServeEngine
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--requests", type=int, default=60)
+    ap.add_argument("--objects", type=int, default=25)
+    ap.add_argument("--policy", default="plfua", choices=["lru", "lfu", "plfu", "plfua", "wlfu", "tinylfu"])
+    ap.add_argument("--cache-objects", type=int, default=6)
+    args = ap.parse_args()
+
+    cfg = get_config("smollm-360m").reduced()
+    model = build(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+
+    rng = np.random.default_rng(0)
+    prompts = {i: rng.integers(0, cfg.vocab_size, 8).astype(np.int32) for i in range(args.objects)}
+    trace = zipf.sample_trace(args.objects, args.requests, seed=1)
+
+    cache = ContentCache(args.cache_objects, policy=args.policy, n_objects=args.objects)
+    engine = ServeEngine(model, params, cache_len=16, content_cache=cache)
+    sched = Scheduler(engine, SchedulerConfig(max_batch=8))
+    for x in trace:
+        sched.submit(Request(obj_id=int(x), tokens=prompts[int(x)], max_new=4))
+    results = sched.drain()
+
+    st, es = cache.stats, engine.stats
+    print(f"policy={args.policy}  requests={len(results)}  CHR={st.chr:.3f}")
+    print(f"prefill tokens computed={es.prefill_tokens_computed} saved={es.prefill_tokens_saved}")
+    rep = energy.serving_energy(
+        chr_value=st.chr, n_requests=len(results),
+        n_params=7.2e9,  # price recompute at the llava-mistral-7b backbone
+        prompt_len=2048, new_tokens=128, mgmt_cpu_s=st.mgmt_time_s,
+    )
+    for k, v in rep.row().items():
+        print(f"  {k:>14}: {v:,.3f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,35 @@
+"""Render the EXPERIMENTS.md roofline table from experiments/dryrun/*.json."""
+import json
+import sys
+from pathlib import Path
+
+def main(dirpath="experiments/dryrun"):
+    rows = []
+    for f in sorted(Path(dirpath).glob("*.json")):
+        d = json.loads(f.read_text())
+        if "roofline" not in d:
+            continue
+        r = d["roofline"]
+        mm = d.get("memory_model", {})
+        rows.append(
+            (
+                d["arch"], d["shape"], d["mesh"],
+                d.get("grad_accum", 1),
+                mm.get("analytic_peak_bytes", 0) / 2**30,
+                d.get("peak_bytes_per_dev", 0) / 2**30,
+                "Y" if d.get("fits_hbm") else "N",
+                r["compute_s"] * 1e3, r["memory_s"] * 1e3, r["collective_s"] * 1e3,
+                r["dominant"][:4], r["useful_ratio"], r["roofline_fraction"],
+            )
+        )
+    rows.sort(key=lambda x: (x[2], x[0], x[1]))
+    print("| arch | shape | mesh | acc | mem GiB (analytic/cpu) | fits | compute ms | memory ms | collective ms | dom | useful | roofline frac |")
+    print("|---|---|---|---|---|---|---|---|---|---|---|---|")
+    for a, s, m, acc, gib, peak, fits, c, me, co, dom, u, fr in rows:
+        print(
+            f"| {a} | {s} | {m} | {acc} | {gib:.1f} / {peak:.0f} | {fits} | "
+            f"{c:,.0f} | {me:,.0f} | {co:,.0f} | {dom} | {u:.2f} | {fr:.3f} |"
+        )
+
+if __name__ == "__main__":
+    main(*sys.argv[1:])

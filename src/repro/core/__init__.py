@@ -1,0 +1,49 @@
+"""The paper's primary contribution: cache eviction/admission policies with
+CHR + total-CPU-time (energy) metrics, in three tiers:
+
+  * :mod:`repro.core.policies`  — paper-faithful Python reference (the timed baseline)
+  * :mod:`repro.core.jax_cache` — vectorised fixed-shape JAX simulator (TPU adaptation)
+  * :mod:`repro.kernels.cache_sim` — Pallas VMEM-resident kernel (grid over the paper's 60x12 sweep)
+"""
+from repro.core import energy, jax_cache, policies, simulate, zipf
+from repro.core.jax_cache import PolicySpec, simulate as jax_simulate, simulate_batch
+from repro.core.policies import (
+    LFUCache,
+    LRUCache,
+    PLFUACache,
+    PLFUCache,
+    POLICY_NAMES,
+    TinyLFUCache,
+    WLFUCache,
+    make_policy,
+)
+from repro.core.simulate import CaseResult, SimResult, run_case, run_grid, run_trace
+from repro.core.zipf import GridCase, paper_grid, sample_trace, sample_traces
+
+__all__ = [
+    "energy",
+    "jax_cache",
+    "policies",
+    "simulate",
+    "zipf",
+    "PolicySpec",
+    "jax_simulate",
+    "simulate_batch",
+    "LFUCache",
+    "LRUCache",
+    "PLFUACache",
+    "PLFUCache",
+    "POLICY_NAMES",
+    "TinyLFUCache",
+    "WLFUCache",
+    "make_policy",
+    "CaseResult",
+    "SimResult",
+    "run_case",
+    "run_grid",
+    "run_trace",
+    "GridCase",
+    "paper_grid",
+    "sample_trace",
+    "sample_traces",
+]

@@ -1,0 +1,97 @@
+"""Energy models: the paper's CPU-time metric in Joules, and the beyond-paper
+serving-energy accounting that prices cache hits in saved prefill FLOPs.
+
+Paper host: Intel Xeon Gold 6130 (TDP 125 W, 32 cores) — the management loop is
+single-threaded, so we charge one core's TDP share plus an uncore allowance.
+TPU target: v5e (peak 197 TFLOP/s bf16, 819 GB/s HBM); chip power envelope is
+not published exactly — we assume ~200 W and expose it as a parameter.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+# --- hardware constants (v5e target; see EXPERIMENTS.md §Roofline) -----------
+TPU_V5E_PEAK_BF16_FLOPS = 197e12
+TPU_V5E_HBM_BW = 819e9
+TPU_V5E_ICI_BW_PER_LINK = 50e9
+TPU_V5E_POWER_W = 200.0  # assumption, parameterised everywhere
+
+XEON_6130_TDP_W = 125.0
+XEON_6130_CORES = 32
+CPU_CORE_POWER_W = XEON_6130_TDP_W / XEON_6130_CORES * 1.5  # +50% uncore share
+
+
+def mgmt_energy_j(cpu_seconds: float, core_power_w: float = CPU_CORE_POWER_W) -> float:
+    """The paper's metric, converted: E = t_cpu * P_core."""
+    return cpu_seconds * core_power_w
+
+
+def prefill_flops(n_params: float, prompt_len: int) -> float:
+    """~2*N*L FLOPs for a dense forward pass over the prompt."""
+    return 2.0 * n_params * prompt_len
+
+
+def decode_flops(n_params: float, new_tokens: int) -> float:
+    return 2.0 * n_params * new_tokens
+
+
+def tpu_energy_j(
+    flops: float,
+    efficiency: float = 0.4,
+    peak: float = TPU_V5E_PEAK_BF16_FLOPS,
+    power_w: float = TPU_V5E_POWER_W,
+) -> float:
+    """Energy to execute ``flops`` at a given MFU on one chip."""
+    return flops / (peak * efficiency) * power_w
+
+
+@dataclasses.dataclass
+class ServingEnergyReport:
+    """E_total = n_req * [(1-CHR)*E_prefill + E_decode] + E_mgmt (DESIGN.md §4)."""
+
+    chr: float
+    n_requests: int
+    e_prefill_j: float  # per miss
+    e_decode_j: float  # per request
+    e_mgmt_j: float  # whole trace
+
+
+    @property
+    def e_recompute_j(self) -> float:
+        return self.n_requests * (1.0 - self.chr) * self.e_prefill_j
+
+    @property
+    def e_decode_total_j(self) -> float:
+        return self.n_requests * self.e_decode_j
+
+    @property
+    def e_total_j(self) -> float:
+        return self.e_recompute_j + self.e_decode_total_j + self.e_mgmt_j
+
+    def row(self) -> dict:
+        return {
+            "chr": self.chr,
+            "E_recompute_J": self.e_recompute_j,
+            "E_decode_J": self.e_decode_total_j,
+            "E_mgmt_J": self.e_mgmt_j,
+            "E_total_J": self.e_total_j,
+        }
+
+
+def serving_energy(
+    chr_value: float,
+    n_requests: int,
+    n_params: float,
+    prompt_len: int,
+    new_tokens: int,
+    mgmt_cpu_s: float,
+    efficiency: float = 0.4,
+    chip_power_w: float = TPU_V5E_POWER_W,
+) -> ServingEnergyReport:
+    return ServingEnergyReport(
+        chr=chr_value,
+        n_requests=n_requests,
+        e_prefill_j=tpu_energy_j(prefill_flops(n_params, prompt_len), efficiency, power_w=chip_power_w),
+        e_decode_j=tpu_energy_j(decode_flops(n_params, new_tokens), efficiency, power_w=chip_power_w),
+        e_mgmt_j=mgmt_energy_j(mgmt_cpu_s),
+    )

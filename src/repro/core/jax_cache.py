@@ -1,0 +1,166 @@
+"""Vectorised, fixed-shape JAX formulation of the paper's cache policies.
+
+This is the TPU-native re-architecture (DESIGN.md §3): object ids are array
+indices, the cache is an ``in_cache`` mask, the LFU frequency container and the
+PLFU parked-list collapse into a single dense ``freq`` vector (parked = freq of
+non-cached ids; LFU simply zeroes the victim's entry on eviction), and the
+request loop is a ``lax.scan`` whose step is branch-free. Eviction is a masked
+argmin — ties break to the lowest id, matching the reference implementation in
+:mod:`repro.core.policies` decision-for-decision.
+
+``simulate_batch`` vmaps over the paper's 12 samples; the Pallas kernel in
+``repro.kernels.cache_sim`` runs the same step out of VMEM with a grid over
+(case, sample) and is validated against :func:`simulate` as its oracle.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+_I32_MAX = np.iinfo(np.int32).max
+
+JAX_POLICY_KINDS = ("lru", "lfu", "plfu", "plfua", "wlfu")
+
+
+@dataclasses.dataclass(frozen=True)
+class PolicySpec:
+    """Static (hashable) policy configuration for the jitted simulator."""
+
+    kind: str
+    n_objects: int
+    capacity: int
+    hot_size: int = 0  # plfua only; 0 means "2 * capacity" convention applied in init
+    window: int = 0  # wlfu only
+
+    def __post_init__(self):
+        if self.kind not in JAX_POLICY_KINDS:
+            raise ValueError(f"kind={self.kind!r} not in {JAX_POLICY_KINDS}")
+        if self.kind == "wlfu" and self.window < 1:
+            raise ValueError("wlfu requires window >= 1")
+
+    @property
+    def effective_hot(self) -> int:
+        if self.kind != "plfua":
+            return self.n_objects
+        h = self.hot_size or 2 * self.capacity
+        return min(self.n_objects, h)
+
+
+def init_state(spec: PolicySpec) -> dict[str, jax.Array]:
+    """Zero state. ``hot`` is the PLFUA admission mask (rank-prefix hot set)."""
+    n = spec.n_objects
+    state: dict[str, Any] = {
+        "in_cache": jnp.zeros((n,), jnp.bool_),
+        "count": jnp.zeros((), jnp.int32),
+    }
+    if spec.kind == "lru":
+        state["last"] = jnp.zeros((n,), jnp.int32)
+        state["t"] = jnp.zeros((), jnp.int32)
+    else:
+        state["freq"] = jnp.zeros((n,), jnp.int32)
+    if spec.kind == "plfua":
+        state["hot"] = jnp.arange(n, dtype=jnp.int32) < spec.effective_hot
+    if spec.kind == "wlfu":
+        state["ring"] = jnp.full((spec.window,), -1, jnp.int32)
+        state["ptr"] = jnp.zeros((), jnp.int32)
+    return state
+
+
+def _masked_argmin(values: jax.Array, mask: jax.Array) -> jax.Array:
+    """argmin over ``values`` where mask, lowest index on ties (int32 values)."""
+    return jnp.argmin(jnp.where(mask, values, _I32_MAX)).astype(jnp.int32)
+
+
+def step(spec: PolicySpec, state: dict[str, jax.Array], x: jax.Array):
+    """One request. Returns (new_state, hit: bool). Order of operations matches
+    the Python reference exactly (see tests/test_jax_cache.py)."""
+    x = x.astype(jnp.int32)
+    in_cache = state["in_cache"]
+    count = state["count"]
+    cap = jnp.int32(spec.capacity)
+
+    if spec.kind == "wlfu":
+        # Slide the window *before* the hit test, as the reference does.
+        freq, ring, ptr = state["freq"], state["ring"], state["ptr"]
+        old = ring[ptr]
+        freq = freq.at[jnp.maximum(old, 0)].add(jnp.where(old >= 0, -1, 0))
+        ring = ring.at[ptr].set(x)
+        ptr = (ptr + 1) % spec.window
+        freq = freq.at[x].add(1)
+        hit = in_cache[x]
+        need_evict = (~hit) & (count >= cap)
+        victim = _masked_argmin(freq, in_cache)
+        in_cache = in_cache.at[victim].set(in_cache[victim] & ~need_evict)
+        in_cache = in_cache.at[x].set(True)
+        count = count + jnp.where(hit, 0, 1) - need_evict.astype(jnp.int32)
+        return dict(in_cache=in_cache, count=count, freq=freq, ring=ring, ptr=ptr), hit
+
+    if spec.kind == "lru":
+        last, t = state["last"], state["t"]
+        hit = in_cache[x]
+        need_evict = (~hit) & (count >= cap)
+        victim = _masked_argmin(last, in_cache)
+        in_cache = in_cache.at[victim].set(in_cache[victim] & ~need_evict)
+        in_cache = in_cache.at[x].set(True)
+        last = last.at[x].set(t)
+        count = count + jnp.where(hit, 0, 1) - need_evict.astype(jnp.int32)
+        return dict(in_cache=in_cache, count=count, last=last, t=t + 1), hit
+
+    # frequency family: lfu / plfu / plfua
+    freq = state["freq"]
+    hit = in_cache[x]
+    admitted = state["hot"][x] if spec.kind == "plfua" else jnp.bool_(True)
+    touch = hit | admitted
+    need_evict = (~hit) & admitted & (count >= cap)
+    victim = _masked_argmin(freq, in_cache)
+    in_cache = in_cache.at[victim].set(in_cache[victim] & ~need_evict)
+    if spec.kind == "lfu":
+        # in-memory LFU: eviction destroys the metadata -> restart from 1
+        freq = freq.at[victim].set(jnp.where(need_evict, 0, freq[victim]))
+    # PLFU/PLFUA: freq[x] of a non-cached object *is* the parked-list entry,
+    # so `freq[x] + 1` resumes from it; for LFU it is guaranteed zero.
+    freq = freq.at[x].set(jnp.where(touch, freq[x] + 1, freq[x]))
+    insert = (~hit) & admitted
+    in_cache = in_cache.at[x].set(in_cache[x] | insert)
+    count = count + insert.astype(jnp.int32) - need_evict.astype(jnp.int32)
+    out = dict(in_cache=in_cache, count=count, freq=freq)
+    if spec.kind == "plfua":
+        out["hot"] = state["hot"]
+    return out, hit
+
+
+@functools.partial(jax.jit, static_argnums=0)
+def simulate(spec: PolicySpec, trace: jax.Array):
+    """Run a full trace. Returns (hits: bool[T], final_state)."""
+    state = init_state(spec)
+    state, hits = jax.lax.scan(lambda s, x: step(spec, s, x), state, trace)
+    return hits, state
+
+
+@functools.partial(jax.jit, static_argnums=0)
+def simulate_batch(spec: PolicySpec, traces: jax.Array):
+    """vmap over samples: traces (S, T) -> hits (S, T). The paper's 12-sample
+    replication in one device launch."""
+    return jax.vmap(lambda tr: simulate(spec, tr)[0])(traces)
+
+
+def chr_of(hits: jax.Array) -> jax.Array:
+    return hits.mean(axis=-1)
+
+
+def metadata_entries(spec: PolicySpec, state: dict[str, jax.Array]) -> jax.Array:
+    """Live metadata entries, matching CachePolicy.metadata_entries semantics."""
+    if spec.kind == "lru":
+        return state["count"]
+    if spec.kind == "wlfu":
+        return (state["freq"] > 0).sum() + state["count"]
+    if spec.kind == "lfu":
+        return state["count"]
+    # plfu / plfua: cached entries + parked entries
+    parked = ((state["freq"] > 0) & ~state["in_cache"]).sum()
+    return state["count"] + parked

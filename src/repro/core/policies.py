@@ -1,0 +1,426 @@
+"""Paper-faithful reference implementations of the cache policies.
+
+These are the *baseline* implementations whose total CPU time is the paper's
+headline metric (§3): they manage metadata only — no content bytes are stored
+or moved — so timing the request loop times the policy itself.
+
+Implemented policies:
+  * LRU      — recency eviction (paper §1.1 baseline).
+  * LFU      — in-memory LFU: frequency metadata exists only while an object is
+               cached; eviction resets it, so a re-admitted object restarts at 1
+               (the paper's Fig. 2(a) "red column" pathology).
+  * PLFU     — Perfect LFU: evicted objects keep their frequency in a
+               *parked-list*; re-admission resumes from the parked value.
+  * PLFUA    — the paper's contribution: PLFU eviction + an admission policy
+               that only admits a known hot set (2x cache size by prior
+               popularity). Metadata exists only for hot objects.
+  * WLFU     — Window-LFU [Karakostas & Serpanos 2000]: frequency over the last
+               W requests.
+  * TinyLFU  — [Einziger et al. 2017]: count-min-sketch admission filter over
+               LFU eviction (frequency comparison incoming vs victim).
+
+All frequency policies break eviction ties by lowest object id, and all are
+"implemented in the same manner" (paper §1.1): dict metadata + a lazy min-heap
+for eviction, so CPU-time comparisons between them are apples-to-apples.
+The vectorised JAX/Pallas implementations are validated against these
+references decision-for-decision (same hits, same evictions).
+"""
+from __future__ import annotations
+
+import heapq
+from collections import OrderedDict
+from typing import Iterable
+
+import numpy as np
+
+__all__ = [
+    "CachePolicy",
+    "LRUCache",
+    "LFUCache",
+    "PLFUCache",
+    "PLFUACache",
+    "WLFUCache",
+    "TinyLFUCache",
+    "make_policy",
+    "POLICY_NAMES",
+]
+
+
+class CachePolicy:
+    """Base: fixed-capacity cache over integer object ids."""
+
+    name = "base"
+
+    def __init__(self, capacity: int):
+        if capacity < 1:
+            raise ValueError(f"capacity must be >= 1, got {capacity}")
+        self.capacity = int(capacity)
+        self.hits = 0
+        self.misses = 0
+        self.evictions = 0
+
+    # -- interface -----------------------------------------------------------
+    def request(self, x: int) -> bool:
+        """Process one request; returns True on hit."""
+        raise NotImplementedError
+
+    def contains(self, x: int) -> bool:
+        raise NotImplementedError
+
+    @property
+    def metadata_entries(self) -> int:
+        """Number of live metadata entries (the paper's §4 metadata metric)."""
+        raise NotImplementedError
+
+    # -- shared --------------------------------------------------------------
+    @property
+    def chr(self) -> float:
+        total = self.hits + self.misses
+        return self.hits / total if total else 0.0
+
+    def run(self, trace: Iterable[int]) -> None:
+        req = self.request
+        for x in trace:
+            req(x)
+
+
+class LRUCache(CachePolicy):
+    name = "lru"
+
+    def __init__(self, capacity: int):
+        super().__init__(capacity)
+        self._od: OrderedDict[int, None] = OrderedDict()
+
+    def request(self, x: int) -> bool:
+        od = self._od
+        if x in od:
+            od.move_to_end(x)
+            self.hits += 1
+            return True
+        self.misses += 1
+        if len(od) >= self.capacity:
+            od.popitem(last=False)
+            self.evictions += 1
+        od[x] = None
+        return False
+
+    def contains(self, x: int) -> bool:
+        return x in self._od
+
+    @property
+    def metadata_entries(self) -> int:
+        return len(self._od)
+
+
+class _HeapLFUBase(CachePolicy):
+    """Shared eviction machinery for the frequency policies.
+
+    Two decision-identical implementations (victim = min by (freq, id)):
+      * evict="heap" (default): lazy min-heap of (freq, id) snapshots —
+        O(log C) amortised; frequencies only grow while cached, so popping
+        until live yields the exact minimum.
+      * evict="scan": O(C) linear scan per eviction — the paper's cost
+        profile. Fig. 4's CPU ridge at *intermediate* cache sizes only exists
+        under this cost model (eviction cost ~ evictions x C); the heap
+        implementation moves the CPU optimum to the smallest cache
+        (EXPERIMENTS.md §Paper reproduction).
+    """
+
+    def __init__(self, capacity: int, evict: str = "heap"):
+        super().__init__(capacity)
+        self._freq: dict[int, int] = {}  # cached object -> frequency
+        self._heap: list[tuple[int, int]] = []
+        self._scan = evict == "scan"
+
+    def contains(self, x: int) -> bool:
+        return x in self._freq
+
+    def _bump(self, x: int, f: int) -> None:
+        self._freq[x] = f
+        if not self._scan:
+            heapq.heappush(self._heap, (f, x))
+
+    def _evict_min(self) -> int:
+        freq = self._freq
+        if self._scan:
+            victim = min(freq, key=lambda o: (freq[o], o))
+            del freq[victim]
+            self.evictions += 1
+            return victim
+        heap = self._heap
+        while True:
+            f, victim = heapq.heappop(heap)
+            if freq.get(victim) == f:
+                del freq[victim]
+                self.evictions += 1
+                return victim
+
+
+class LFUCache(_HeapLFUBase):
+    """In-memory LFU: frequency restarts at 1 after every (re-)admission."""
+
+    name = "lfu"
+
+    def request(self, x: int) -> bool:
+        freq = self._freq
+        f = freq.get(x)
+        if f is not None:
+            self.hits += 1
+            self._bump(x, f + 1)
+            return True
+        self.misses += 1
+        if len(freq) >= self.capacity:
+            self._evict_min()
+        self._bump(x, 1)  # frequency recommences from 1 (paper §2.1)
+        return False
+
+    @property
+    def metadata_entries(self) -> int:
+        return len(self._freq)
+
+
+class PLFUCache(_HeapLFUBase):
+    """Perfect LFU: evicted frequencies persist in the parked-list (paper §2.2)."""
+
+    name = "plfu"
+
+    def __init__(self, capacity: int, evict: str = "heap"):
+        super().__init__(capacity, evict=evict)
+        self._parked: dict[int, int] = {}  # evicted object -> last frequency
+
+    def request(self, x: int) -> bool:
+        freq = self._freq
+        f = freq.get(x)
+        if f is not None:
+            self.hits += 1
+            self._bump(x, f + 1)
+            return True
+        self.misses += 1
+        if len(freq) >= self.capacity:
+            victim_f = self._freq_of_min()
+            victim = self._evict_min()
+            self._parked[victim] = victim_f
+        # resume from the parked frequency rather than restarting at 1
+        self._bump(x, self._parked.pop(x, 0) + 1)
+        return False
+
+    def _freq_of_min(self) -> int:
+        freq = self._freq
+        if self._scan:
+            return min(freq.values())
+        heap = self._heap
+        while True:
+            f, victim = heap[0]
+            if freq.get(victim) == f:
+                return f
+            heapq.heappop(heap)
+
+    @property
+    def metadata_entries(self) -> int:
+        return len(self._freq) + len(self._parked)
+
+
+class PLFUACache(CachePolicy):
+    """PLFU eviction + hot-set admission (the paper's PLFUA, §4).
+
+    ``hot`` is the prior-popularity hot set (ids). The paper labels twice as
+    many objects as the cache size as hot. Non-hot objects are never admitted
+    and carry no metadata, so metadata is bounded by |hot| (the 4–50 % claim).
+    Within the hot set, eviction semantics are exactly PLFU.
+    """
+
+    name = "plfua"
+
+    def __init__(self, capacity: int, hot: Iterable[int]):
+        super().__init__(capacity)
+        self._hot = frozenset(int(h) for h in hot)
+        self._plfu = PLFUCache(capacity)
+
+    def request(self, x: int) -> bool:
+        if x in self._hot:
+            hit = self._plfu.request(x)
+        else:
+            hit = False
+            self._plfu.misses += 1  # non-admitted request is still a miss
+        self.hits = self._plfu.hits
+        self.misses = self._plfu.misses
+        self.evictions = self._plfu.evictions
+        return hit
+
+    def contains(self, x: int) -> bool:
+        return self._plfu.contains(x)
+
+    @property
+    def metadata_entries(self) -> int:
+        return self._plfu.metadata_entries
+
+    @property
+    def hot_size(self) -> int:
+        return len(self._hot)
+
+
+class WLFUCache(CachePolicy):
+    """Window-LFU: frequencies over the last ``window`` requests.
+
+    Window counts can *decrease* (requests age out), so the lazy heap is
+    invalid; eviction is a linear scan with (freq, id) tie-breaking.
+    """
+
+    name = "wlfu"
+
+    def __init__(self, capacity: int, window: int = 10_000):
+        super().__init__(capacity)
+        self.window = int(window)
+        self._wfreq: dict[int, int] = {}  # windowed frequency, all objects seen
+        self._ring: list[int] = [-1] * self.window
+        self._ptr = 0
+        self._cache: set[int] = set()
+
+    def request(self, x: int) -> bool:
+        wfreq = self._wfreq
+        # slide the window
+        old = self._ring[self._ptr]
+        if old >= 0:
+            c = wfreq[old] - 1
+            if c:
+                wfreq[old] = c
+            else:
+                del wfreq[old]
+        self._ring[self._ptr] = x
+        self._ptr = (self._ptr + 1) % self.window
+        wfreq[x] = wfreq.get(x, 0) + 1
+
+        if x in self._cache:
+            self.hits += 1
+            return True
+        self.misses += 1
+        if len(self._cache) >= self.capacity:
+            victim = min(self._cache, key=lambda o: (wfreq.get(o, 0), o))
+            self._cache.remove(victim)
+            self.evictions += 1
+        self._cache.add(x)
+        return False
+
+    def contains(self, x: int) -> bool:
+        return x in self._cache
+
+    @property
+    def metadata_entries(self) -> int:
+        return len(self._wfreq) + len(self._cache)
+
+
+class _CountMinSketch:
+    """4-row conservative count-min sketch with periodic halving (aging)."""
+
+    def __init__(self, width: int, seed: int = 0x9E3779B9):
+        self.width = int(width)
+        self.rows = np.zeros((4, self.width), dtype=np.int32)
+        self._salts = np.array(
+            [seed, 0x85EBCA6B, 0xC2B2AE35, 0x27D4EB2F], dtype=np.uint64
+        )
+
+    def _idx(self, x: int) -> np.ndarray:
+        h = (np.uint64(x) + np.uint64(1)) * self._salts
+        h ^= h >> np.uint64(33)
+        h *= np.uint64(0xFF51AFD7ED558CCD)
+        h ^= h >> np.uint64(33)
+        return (h % np.uint64(self.width)).astype(np.int64)
+
+    def add(self, x: int) -> None:
+        idx = self._idx(x)
+        self.rows[np.arange(4), idx] += 1
+
+    def estimate(self, x: int) -> int:
+        idx = self._idx(x)
+        return int(self.rows[np.arange(4), idx].min())
+
+    def halve(self) -> None:
+        self.rows >>= 1
+
+
+class TinyLFUCache(_HeapLFUBase):
+    """TinyLFU admission over LFU eviction [Einziger et al. 2017].
+
+    On a miss with a full cache, the incoming object is admitted only if its
+    sketch-estimated frequency exceeds the eviction victim's; the sketch ages
+    by halving every ``window`` requests.
+    """
+
+    name = "tinylfu"
+
+    def __init__(self, capacity: int, window: int | None = None, sketch_width: int | None = None):
+        super().__init__(capacity)
+        self.window = int(window or max(10 * capacity, 1000))
+        self._sketch = _CountMinSketch(sketch_width or max(4 * capacity, 256))
+        self._seen = 0
+
+    def request(self, x: int) -> bool:
+        self._sketch.add(x)
+        self._seen += 1
+        if self._seen >= self.window:
+            self._sketch.halve()
+            self._seen = 0
+
+        freq = self._freq
+        f = freq.get(x)
+        if f is not None:
+            self.hits += 1
+            self._bump(x, f + 1)
+            return True
+        self.misses += 1
+        if len(freq) < self.capacity:
+            self._bump(x, 1)
+            return False
+        # admission duel: incoming vs victim, by sketch estimate
+        vf, victim = self._peek_min()
+        if self._sketch.estimate(x) > self._sketch.estimate(victim):
+            self._evict_min()
+            self._bump(x, 1)
+        return False
+
+    def _peek_min(self) -> tuple[int, int]:
+        freq = self._freq
+        heap = self._heap
+        while True:
+            f, victim = heap[0]
+            if freq.get(victim) == f:
+                return f, victim
+            heapq.heappop(heap)
+
+    @property
+    def metadata_entries(self) -> int:
+        return len(self._freq) + self._sketch.rows.size
+
+
+POLICY_NAMES = ("lru", "lfu", "plfu", "plfua", "wlfu", "tinylfu")
+
+
+def make_policy(
+    name: str,
+    capacity: int,
+    *,
+    n_objects: int | None = None,
+    hot: Iterable[int] | None = None,
+    window: int | None = None,
+    evict: str = "heap",
+) -> CachePolicy:
+    """Factory. PLFUA needs a hot set: explicit ``hot`` ids, or the rank prefix
+    [0, 2*capacity) when ids are popularity ranks (our Zipf traces).
+    ``evict``: "heap" (optimised) or "scan" (the paper's O(C) cost profile)."""
+    name = name.lower()
+    if name == "lru":
+        return LRUCache(capacity)
+    if name == "lfu":
+        return LFUCache(capacity, evict=evict)
+    if name == "plfu":
+        return PLFUCache(capacity, evict=evict)
+    if name == "plfua":
+        if hot is None:
+            hi = 2 * capacity if n_objects is None else min(n_objects, 2 * capacity)
+            hot = range(hi)
+        return PLFUACache(capacity, hot)
+    if name == "wlfu":
+        return WLFUCache(capacity, window or 10_000)
+    if name == "tinylfu":
+        return TinyLFUCache(capacity, window)
+    raise ValueError(f"unknown policy {name!r}; expected one of {POLICY_NAMES}")

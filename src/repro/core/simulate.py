@@ -1,0 +1,133 @@
+"""CHR + total-CPU-time measurement harness (the paper's §3 methodology).
+
+The paper measures the *management loop only* (no content stored or moved) with
+cProfile on a quiet host, over 12 Zipf(1.1) samples per case, and reports mean
+totals. We time ``policy.run(trace)`` with ``time.process_time`` (CPU time, the
+paper's metric) and ``time.perf_counter`` (wall), convert the trace to a Python
+list beforehand so trace decoding is excluded, and repeat over samples.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Sequence
+
+import numpy as np
+
+from . import policies, zipf
+
+
+@dataclasses.dataclass
+class SimResult:
+    policy: str
+    n_objects: int
+    capacity: int
+    chr: float
+    hits: int
+    misses: int
+    evictions: int
+    cpu_time_s: float
+    wall_time_s: float
+    metadata_entries: int
+
+
+def run_trace(policy: policies.CachePolicy, trace: Sequence[int] | np.ndarray) -> SimResult:
+    """Single-trace run with CPU-time instrumentation of the loop only."""
+    if isinstance(trace, np.ndarray):
+        trace = trace.tolist()
+    c0, w0 = time.process_time(), time.perf_counter()
+    policy.run(trace)
+    c1, w1 = time.process_time(), time.perf_counter()
+    return SimResult(
+        policy=policy.name,
+        n_objects=-1,
+        capacity=policy.capacity,
+        chr=policy.chr,
+        hits=policy.hits,
+        misses=policy.misses,
+        evictions=policy.evictions,
+        cpu_time_s=c1 - c0,
+        wall_time_s=w1 - w0,
+        metadata_entries=policy.metadata_entries,
+    )
+
+
+@dataclasses.dataclass
+class CaseResult:
+    """Mean over the per-case samples (the paper reports means of 12)."""
+
+    policy: str
+    case: zipf.GridCase
+    mean_chr: float
+    std_chr: float
+    mean_cpu_s: float
+    std_cpu_s: float
+    mean_metadata: float
+    mean_evictions: float
+
+
+def run_case(
+    policy_name: str,
+    case: zipf.GridCase,
+    n_samples: int = zipf.PAPER_NUM_SAMPLES,
+    trace_len: int = zipf.PAPER_TRACE_LEN,
+    alpha: float = zipf.PAPER_ALPHA,
+    seed: int = 0,
+    policy_factory: Callable[[], policies.CachePolicy] | None = None,
+) -> CaseResult:
+    chrs, cpus, metas, evs = [], [], [], []
+    for s in range(n_samples):
+        trace = zipf.sample_trace(case.n_objects, trace_len, alpha, seed=seed * 7919 + s)
+        if policy_factory is not None:
+            pol = policy_factory()
+        else:
+            pol = policies.make_policy(
+                policy_name, case.cache_size, n_objects=case.n_objects
+            )
+        r = run_trace(pol, trace)
+        chrs.append(r.chr)
+        cpus.append(r.cpu_time_s)
+        metas.append(r.metadata_entries)
+        evs.append(r.evictions)
+    return CaseResult(
+        policy=policy_name,
+        case=case,
+        mean_chr=float(np.mean(chrs)),
+        std_chr=float(np.std(chrs)),
+        mean_cpu_s=float(np.mean(cpus)),
+        std_cpu_s=float(np.std(cpus)),
+        mean_metadata=float(np.mean(metas)),
+        mean_evictions=float(np.mean(evs)),
+    )
+
+
+def run_grid(
+    policy_name: str,
+    cases: Sequence[zipf.GridCase] | None = None,
+    n_samples: int = zipf.PAPER_NUM_SAMPLES,
+    trace_len: int = zipf.PAPER_TRACE_LEN,
+    alpha: float = zipf.PAPER_ALPHA,
+    seed: int = 0,
+) -> list[CaseResult]:
+    """The paper's 60-case grid (or a caller-supplied reduction)."""
+    if cases is None:
+        cases = zipf.paper_grid()
+    return [
+        run_case(policy_name, c, n_samples=n_samples, trace_len=trace_len, alpha=alpha, seed=seed)
+        for c in cases
+    ]
+
+
+def hit_miss_scatter(
+    policy: policies.CachePolicy, trace: np.ndarray, n_objects: int
+) -> tuple[np.ndarray, np.ndarray]:
+    """Per-object (hits, misses) counts — the data behind the paper's Fig. 2
+    rank-order scatter (red columns diagnostic)."""
+    hits = np.zeros(n_objects, dtype=np.int64)
+    misses = np.zeros(n_objects, dtype=np.int64)
+    for x in trace.tolist():
+        if policy.request(x):
+            hits[x] += 1
+        else:
+            misses[x] += 1
+    return hits, misses

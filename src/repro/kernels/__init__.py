@@ -1,0 +1,8 @@
+"""Pallas TPU kernels for the framework's compute hot-spots.
+
+  * cache_sim        — the paper's policy simulation, VMEM-resident (DESIGN.md §3)
+  * flash_attention  — blocked online-softmax attention (prefill/decode serving path)
+
+Each kernel ships <name>.py (pl.pallas_call + BlockSpec), ops.py (jit wrapper,
+interpret=True off-TPU) and ref.py (pure-jnp oracle used by the test sweeps).
+"""

@@ -1,0 +1,44 @@
+"""Jitted public wrapper for the cache_sim Pallas kernel."""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.kernels.cache_sim.cache_sim import KERNEL_KINDS, cache_sim_pallas
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@functools.partial(
+    jax.jit, static_argnames=("kind", "n_objects", "capacity", "hot_size", "interpret")
+)
+def cache_sim(
+    traces,
+    *,
+    kind: str,
+    n_objects: int,
+    capacity: int,
+    hot_size: int = 0,
+    interpret: bool | None = None,
+):
+    """Batched cache-policy simulation (see cache_sim_pallas for the contract).
+
+    ``interpret`` defaults to True off-TPU so the same call validates on CPU
+    and compiles natively on TPU.
+    """
+    if interpret is None:
+        interpret = not _on_tpu()
+    return cache_sim_pallas(
+        traces,
+        kind=kind,
+        n_objects=n_objects,
+        capacity=capacity,
+        hot_size=hot_size,
+        interpret=interpret,
+    )
+
+
+__all__ = ["cache_sim", "KERNEL_KINDS"]

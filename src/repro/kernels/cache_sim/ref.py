@@ -1,0 +1,38 @@
+"""Pure-jnp oracle for the cache_sim kernel: the validated lax.scan simulator.
+
+(`repro.core.jax_cache.simulate` is itself validated decision-for-decision
+against the paper-faithful Python reference in tests/test_jax_cache.py, so the
+kernel inherits a two-deep validation chain.)
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import jax_cache
+
+
+def cache_sim_ref(traces, *, kind, n_objects, capacity, hot_size=0):
+    """Same contract as cache_sim_pallas: (hits, freq/stamps, in_cache)."""
+    spec = jax_cache.PolicySpec(
+        kind=kind,
+        n_objects=n_objects,
+        capacity=capacity,
+        hot_size=hot_size,
+    )
+    hits_list, freqs, caches = [], [], []
+    for s in range(traces.shape[0]):
+        hits, state = jax_cache.simulate(spec, jnp.asarray(traces[s], jnp.int32))
+        hits_list.append(np.asarray(hits).sum())
+        if kind == "lru":
+            # kernel stamps are t+1 with 0 = never touched; scan state stores
+            # last-access t with 0 ambiguous -> compare stamps only where cached
+            freqs.append(np.asarray(state["last"]) + 1)
+        else:
+            freqs.append(np.asarray(state["freq"]))
+        caches.append(np.asarray(state["in_cache"]))
+    return (
+        np.array(hits_list, np.int32),
+        np.stack(freqs).astype(np.int32),
+        np.stack(caches),
+    )

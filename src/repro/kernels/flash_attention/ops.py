@@ -1,0 +1,42 @@
+"""Jitted public wrapper for the flash-attention Pallas kernel."""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.kernels.flash_attention.flash_attention import flash_attention_pallas
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("causal", "scale", "kv_len", "block_q", "block_k", "interpret"),
+)
+def flash_attention(
+    q,
+    k,
+    v,
+    *,
+    causal: bool = True,
+    scale: float | None = None,
+    kv_len: int | None = None,
+    block_q: int = 128,
+    block_k: int = 128,
+    interpret: bool | None = None,
+):
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    return flash_attention_pallas(
+        q,
+        k,
+        v,
+        causal=causal,
+        scale=scale,
+        kv_len=kv_len,
+        block_q=block_q,
+        block_k=block_k,
+        interpret=interpret,
+    )
+
+
+__all__ = ["flash_attention"]

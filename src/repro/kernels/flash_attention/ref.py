@@ -1,0 +1,29 @@
+"""Pure-jnp oracle: naive (materialised-scores) attention with GQA."""
+from __future__ import annotations
+
+import math
+
+import jax.numpy as jnp
+
+
+def naive_attention(q, k, v, *, causal=True, scale=None, kv_len=None):
+    """(B, H, Sq, D) x (B, KH, Skv, D) -> (B, H, Sq, D), f32 softmax."""
+    b, h, sq, d = q.shape
+    _, kh, skv, _ = k.shape
+    group = h // kh
+    scale = 1.0 / math.sqrt(d) if scale is None else scale
+    kv_len = skv if kv_len is None else kv_len
+
+    kq = jnp.repeat(k, group, axis=1).astype(jnp.float32)
+    vq = jnp.repeat(v, group, axis=1).astype(jnp.float32)
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32), kq) * scale
+    col = jnp.arange(skv)[None, None, None, :]
+    mask = col < kv_len
+    if causal:
+        row = jnp.arange(sq)[None, None, :, None]
+        mask = mask & (col <= row)
+    s = jnp.where(mask, s, -1e30)
+    p = jnp.exp(s - s.max(axis=-1, keepdims=True))
+    l = p.sum(axis=-1, keepdims=True)
+    out = jnp.einsum("bhqk,bhkd->bhqd", p, vq) / jnp.where(l == 0.0, 1.0, l)
+    return out.astype(q.dtype)

@@ -1,0 +1,331 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^^ MUST be set before any jax-importing module below: jax locks the device
+# count at first init. Only the dry-run sees 512 placeholder devices.
+
+import argparse  # noqa: E402
+import json  # noqa: E402
+import time  # noqa: E402
+import traceback  # noqa: E402
+from pathlib import Path  # noqa: E402
+
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+from jax.sharding import NamedSharding, PartitionSpec as P  # noqa: E402
+
+from repro.configs import ARCH_IDS, SHAPES, get_config  # noqa: E402
+from repro.launch.mesh import make_production_mesh  # noqa: E402
+from repro.models import build  # noqa: E402
+from repro.models.model import input_specs  # noqa: E402
+from repro.roofline import analysis as RA  # noqa: E402
+from repro.sharding import rules as R  # noqa: E402
+from repro.sharding.ctx import activation_rules  # noqa: E402
+from repro.train.optimizer import OptConfig  # noqa: E402
+from repro.train.train_step import TrainConfig, make_train_step  # noqa: E402
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell against
+the production mesh, prove memory fits, and extract the roofline inputs.
+
+Usage:
+    PYTHONPATH=src python -m repro.launch.dryrun --arch granite-3-2b --shape train_4k
+    PYTHONPATH=src python -m repro.launch.dryrun --all --mesh both --out experiments/dryrun
+"""
+
+HBM_PER_CHIP = 16 * 1024**3  # v5e
+
+
+def _grad_accum_for(cfg, shape, multi_pod: bool) -> int:
+    """Bound the remat carry stash (n_blocks x B_micro x S x d, bf16) to
+    ~2 GiB/device via gradient accumulation. The microbatch must stay
+    shardable over the DP axes."""
+    from repro.models.transformer import stack_pattern
+
+    dp = 32 if multi_pod else 16
+    b_loc = max(1, shape.global_batch // dp)
+    if cfg.encoder_decoder:
+        n_blocks = cfg.n_layers + cfg.n_encoder_layers
+        seq = shape.seq_len + cfg.max_target_positions
+        seq_sharded = False
+    else:
+        _, pattern, n_blocks = stack_pattern(cfg)
+        n_blocks += cfg.first_k_dense
+        seq = shape.seq_len
+        # SP residual stream: the saved block carry is seq-sharded over the
+        # model axis when the block entry is an attention-family sublayer
+        seq_sharded = pattern[0].mixer in ("gqa", "mla") and seq % 16 == 0
+    stash = n_blocks * b_loc * seq * cfg.d_model * 2  # bf16
+    if seq_sharded:
+        stash //= 16
+    # Memory-model-driven choice (§Perf D2/D3): the smallest accumulation
+    # whose *analytic* peak (stash + grad buffer + working sets + state)
+    # stays under ~15 GiB — fewer microbatches means fewer FSDP weight
+    # re-gathers, so collective time is monotone-better at lower accum.
+    from repro.models.model import build
+    from repro.roofline.memory_model import estimate_bytes
+
+    model = build(cfg)
+    n = model.n_params
+    pbytes = 2 if cfg.param_dtype == "bfloat16" else 4
+    sbytes = 2 if n > 8e10 else 4
+    static = n * (pbytes + 2 * sbytes) // (dp * 16)
+    max_accum = max(1, shape.global_batch // dp)
+    accum = 1
+    while accum < max_accum:
+        est = estimate_bytes(cfg, shape, accum=accum, multi_pod=multi_pod, static_live=static)
+        if est["analytic_peak_bytes"] <= 15 * 1024**3:
+            break
+        accum *= 2
+    return accum
+
+
+def build_cell(arch: str, shape_name: str, multi_pod: bool):
+    """Returns (jitted_fn, example_args (ShapeDtypeStructs), meta dict)."""
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    if shape_name not in cfg.applicable_shapes():
+        return None, None, {"skipped": f"{shape_name} needs sub-quadratic attention"}
+    model = build(cfg)
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    long_ctx = shape_name == "long_500k"
+    rules = R.logical_rules(kind=shape.kind, multi_pod=multi_pod, long_context=long_ctx)
+    batch_specs = input_specs(cfg, shape)
+    param_sh = R.param_shardings(model.param_specs, rules, mesh)
+    param_sds = model.param_shapes()
+
+    if shape.kind == "train":
+        big = model.n_params > 8e10
+        accum = _grad_accum_for(cfg, shape, multi_pod)
+        tcfg = TrainConfig(
+            opt=OptConfig(state_dtype="bfloat16" if big else "float32"),
+            grad_accum=accum,
+            accum_dtype="bfloat16" if model.n_params > 3e11 else "float32",
+        )
+        step = make_train_step(model, tcfg)
+        sdt = jnp.dtype(tcfg.opt.state_dtype)
+        opt_sds = {
+            "m": jax.tree_util.tree_map(lambda s: jax.ShapeDtypeStruct(s.shape, sdt), param_sds),
+            "v": jax.tree_util.tree_map(lambda s: jax.ShapeDtypeStruct(s.shape, sdt), param_sds),
+            "step": jax.ShapeDtypeStruct((), jnp.int32),
+        }
+        opt_sh = {"m": param_sh, "v": param_sh, "step": NamedSharding(mesh, P())}
+        batch_sh = R.batch_shardings(batch_specs, rules, mesh)
+        fn = jax.jit(
+            step,
+            in_shardings=(param_sh, opt_sh, batch_sh),
+            out_shardings=(param_sh, opt_sh, None),
+            donate_argnums=(0, 1),  # params/opt update in place
+        )
+        args = (param_sds, opt_sds, batch_specs)
+        # enc-dec: the encoder processes seq_len frames and the decoder 448
+        # targets; both count toward useful model FLOPs
+        tokens = shape.global_batch * (
+            (shape.seq_len + cfg.max_target_positions) if cfg.encoder_decoder else shape.seq_len
+        )
+    elif shape.kind == "prefill":
+        def prefill_step(params, batch):
+            logits, cache = model.prefill(params, batch, shape.seq_len)
+            return logits[:, -1, :], cache
+
+        cache_axes = model.cache_spec(shape.global_batch, shape.seq_len)
+        cache_sh = R.cache_shardings(cache_axes, rules, mesh)
+        batch_sh = R.batch_shardings(batch_specs, rules, mesh)
+        fn = jax.jit(
+            prefill_step,
+            in_shardings=(param_sh, batch_sh),
+            out_shardings=(None, cache_sh),
+        )
+        args = (param_sds, batch_specs)
+        tokens = shape.global_batch * shape.seq_len
+    else:  # decode
+        def serve_step(params, tokens_, pos, cache):
+            logits, new_cache = model.decode_step(params, cache, tokens_, pos)
+            return logits, new_cache
+
+        cache_axes = model.cache_spec(shape.global_batch, shape.seq_len)
+        cache_sh = R.cache_shardings(cache_axes, rules, mesh)
+        cache_sds = jax.tree_util.tree_map(
+            lambda leaf: jax.ShapeDtypeStruct(leaf[0], leaf[2]),
+            cache_axes,
+            is_leaf=lambda x: isinstance(x, tuple) and len(x) == 3 and isinstance(x[0], tuple),
+        )
+        tok_sh = R.batch_shardings(
+            {"tokens": batch_specs["tokens"], "pos": batch_specs["pos"]}, rules, mesh
+        )
+        fn = jax.jit(
+            serve_step,
+            in_shardings=(param_sh, tok_sh["tokens"], tok_sh["pos"], cache_sh),
+            out_shardings=(None, cache_sh),
+            donate_argnums=(3,),  # KV cache updates in place
+        )
+        args = (param_sds, batch_specs["tokens"], batch_specs["pos"], cache_sds)
+        tokens = shape.global_batch  # one token per sequence per step
+
+    meta = {
+        "arch": arch,
+        "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "kind": shape.kind,
+        "n_params": model.n_params,
+        "n_active_params": model.n_active_params,
+        "tokens_per_step": tokens,
+        "grad_accum": _grad_accum_for(cfg, shape, multi_pod) if shape.kind == "train" else 1,
+    }
+    return fn, args, meta
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool, out_dir: Path | None = None, hlo_dir: Path | None = None):
+    t0 = time.time()
+    fn, args, meta = build_cell(arch, shape_name, multi_pod)
+    if fn is None:
+        print(f"[skip] {arch} x {shape_name}: {meta['skipped']}")
+        return meta
+    n_dev = 512 if multi_pod else 256
+    try:
+        mesh = make_production_mesh(multi_pod=multi_pod)
+        shape = SHAPES[shape_name]
+        rules = R.logical_rules(
+            kind=shape.kind, multi_pod=multi_pod, long_context=shape_name == "long_500k"
+        )
+        with activation_rules(mesh, rules):
+            lowered = fn.lower(*args)
+        compiled = lowered.compile()
+    except Exception as e:  # sharding mismatch / OOM at compile are bugs
+        meta["error"] = f"{type(e).__name__}: {e}"
+        print(f"[FAIL] {arch} x {shape_name} mesh={meta['mesh']}: {meta['error']}")
+        traceback.print_exc()
+        return meta
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    hlo = compiled.as_text()
+    kind = meta["kind"]
+    mflops = RA.model_flops(
+        meta["n_params"], meta["n_active_params"], meta["tokens_per_step"], kind
+    )
+    roof = RA.analyze(hlo, cost, n_devices=n_dev, model_flops_global=mflops)
+
+    artifact = _cpu_upcast_artifact_bytes(hlo)
+    peak = _peak_bytes(mem)
+    md = _mem_dict(mem)
+    # statically-live floor: arguments + outputs - donated aliases
+    static_live = (
+        md.get("argument_size_in_bytes", 0)
+        + md.get("output_size_in_bytes", 0)
+        - md.get("alias_size_in_bytes", 0)
+    )
+    from repro.roofline.memory_model import estimate_bytes
+
+    memest = estimate_bytes(
+        get_config(arch), SHAPES[shape_name],
+        accum=meta.get("grad_accum", 1), multi_pod=multi_pod, static_live=static_live,
+    )
+    analytic = memest["analytic_peak_bytes"]
+    meta.update(
+        compile_s=round(time.time() - t0, 1),
+        memory_analysis=_mem_dict(mem),
+        peak_bytes_per_dev=peak,
+        cpu_f32_upcast_artifact_bytes=artifact,
+        static_live_bytes=static_live,
+        memory_model=memest,
+        fits_hbm=bool(analytic <= HBM_PER_CHIP),
+        roofline=roof.row(),
+    )
+    print(
+        f"[ok] {arch} x {shape_name} mesh={meta['mesh']}: "
+        f"peak={peak/2**30:.2f} GiB/dev (static {static_live/2**30:.2f} + "
+        f"transient-> analytic {analytic/2**30:.2f}; cpu-f32-artifact "
+        f"{artifact/2**30:.2f}) fits={meta['fits_hbm']} "
+        f"flops/dev={roof.flops_per_dev:.3g} dominant={roof.dominant} "
+        f"step>={roof.step_s*1e3:.2f} ms roofline_frac={roof.roofline_fraction:.3f} "
+        f"(compile {meta['compile_s']}s)"
+    )
+    if out_dir is not None:
+        out_dir.mkdir(parents=True, exist_ok=True)
+        name = f"{arch}_{shape_name}_{meta['mesh']}.json"
+        (out_dir / name).write_text(json.dumps(meta, indent=1, default=str))
+    if hlo_dir is not None:
+        hlo_dir.mkdir(parents=True, exist_ok=True)
+        (hlo_dir / f"{arch}_{shape_name}_{meta['mesh']}.hlo.txt").write_text(hlo)
+    return meta
+
+
+def _cpu_upcast_artifact_bytes(hlo: str) -> int:
+    """XLA:CPU has no bf16 GEMM: it inserts f32 copies of bf16 weights/caches
+    and hoists them out of loops. These buffers do not exist on TPU (native
+    bf16 MXU). Detected as convert-only ops/fusions bf16 -> f32 of >=32 MiB
+    with identical element counts; their sum is reported and subtracted to
+    give the TPU-comparable peak."""
+    from repro.roofline import hlo_model as H
+
+    comps = H.parse_module(hlo)
+    total = 0
+    for cname, comp in comps.items():
+        if cname == "__entry__":
+            continue
+        for op in comp.ops:
+            if op.kind == "convert" and op.type_str.startswith("f32["):
+                refs = H._OPERANDS.findall(op.line.split("(", 1)[1])
+                if not refs:
+                    continue
+                src = comp.symbols.get(refs[0], "")
+                if src.startswith("bf16[") and H._shape_bytes(op.type_str) >= 32 * 2**20:
+                    if H._shape_bytes(src) * 2 == H._shape_bytes(op.type_str):
+                        total += H._shape_bytes(op.type_str)
+            elif op.kind == "fusion" and "wrapped_convert" in op.name:
+                if op.type_str.startswith("f32[") and H._shape_bytes(op.type_str) >= 32 * 2**20:
+                    total += H._shape_bytes(op.type_str)
+    return total
+
+
+def _mem_dict(mem) -> dict:
+    if mem is None:
+        return {}
+    keys = (
+        "temp_size_in_bytes",
+        "argument_size_in_bytes",
+        "output_size_in_bytes",
+        "alias_size_in_bytes",
+        "generated_code_size_in_bytes",
+    )
+    return {k: int(getattr(mem, k)) for k in keys if hasattr(mem, k)}
+
+
+def _peak_bytes(mem) -> int:
+    d = _mem_dict(mem)
+    return d.get("temp_size_in_bytes", 0) + d.get("argument_size_in_bytes", 0) + d.get(
+        "output_size_in_bytes", 0
+    ) - d.get("alias_size_in_bytes", 0)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", default="all", help="arch id or 'all'")
+    ap.add_argument("--shape", default="all", help="shape name or 'all'")
+    ap.add_argument("--mesh", default="single", choices=["single", "multi", "both"])
+    ap.add_argument("--out", default="experiments/dryrun")
+    ap.add_argument("--hlo-out", default=None, help="also dump per-cell HLO text")
+    args = ap.parse_args()
+
+    archs = ARCH_IDS if args.arch == "all" else [args.arch]
+    shapes = list(SHAPES) if args.shape == "all" else [args.shape]
+    meshes = {"single": [False], "multi": [True], "both": [False, True]}[args.mesh]
+    out_dir = Path(args.out)
+    hlo_dir = Path(args.hlo_out) if args.hlo_out else None
+
+    results = []
+    for mp in meshes:
+        for arch in archs:
+            for shape in shapes:
+                results.append(run_cell(arch, shape, mp, out_dir, hlo_dir))
+    failed = [r for r in results if "error" in r]
+    skipped = [r for r in results if "skipped" in r]
+    print(
+        f"\n=== dry-run: {len(results) - len(failed) - len(skipped)} ok, "
+        f"{len(skipped)} skipped (documented), {len(failed)} FAILED ==="
+    )
+    if failed:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

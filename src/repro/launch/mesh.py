@@ -1,0 +1,23 @@
+"""Production mesh definitions (v5e pods).
+
+Functions, not module-level constants — importing this module never touches
+jax device state. The dry-run sets XLA_FLAGS for 512 host devices *before*
+any jax import; smoke tests and benchmarks see the 1 real device.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> jax.sharding.Mesh:
+    """16x16 = 256 chips per pod; 2 pods over DCN for the multi-pod run."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh(model_axis: int = 1) -> jax.sharding.Mesh:
+    """Whatever this host actually has — used by tests and CPU examples."""
+    n = len(jax.devices())
+    assert n % model_axis == 0
+    return jax.make_mesh((n // model_axis, model_axis), ("data", "model"))

@@ -1,0 +1,54 @@
+"""Production training launcher.
+
+On real hardware every host runs this under ``jax.distributed.initialize``
+with the production mesh; on this CPU container it drives the same Trainer
+single-host (see examples/train_smollm.py for a runnable configuration).
+
+    PYTHONPATH=src python -m repro.launch.train --arch smollm-360m --steps 100 --reduced
+"""
+from __future__ import annotations
+
+import argparse
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--global-batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--ckpt-dir", default="checkpoints/run")
+    ap.add_argument("--reduced", action="store_true", help="smoke-scale config")
+    ap.add_argument("--compress-grads", action="store_true")
+    args = ap.parse_args()
+
+    import jax
+
+    from repro.configs import get_config
+    from repro.models import build
+    from repro.train.data import DataConfig, ZipfBigramStream
+    from repro.train.optimizer import OptConfig
+    from repro.train.train_step import TrainConfig
+    from repro.train.trainer import Trainer, TrainerConfig
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced()
+    model = build(cfg)
+    print(f"[launch] {cfg.name}: {model.n_params/1e9:.3f}B params on {jax.device_count()} device(s)")
+    stream = ZipfBigramStream(DataConfig(cfg.vocab_size, args.seq, args.global_batch))
+    tcfg = TrainConfig(
+        opt=OptConfig(lr=1e-3, total_steps=args.steps), compress_grads=args.compress_grads
+    )
+    trainer = Trainer(
+        model, tcfg,
+        TrainerConfig(total_steps=args.steps, ckpt_every=max(10, args.steps // 4), ckpt_dir=args.ckpt_dir),
+        stream,
+    )
+    trainer.install_preemption_handler()
+    out = trainer.run()
+    print(f"[launch] done: step {out['final_step']} loss {out['final_loss']:.4f}")
+
+
+if __name__ == "__main__":
+    main()

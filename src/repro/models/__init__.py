@@ -1,0 +1,4 @@
+"""Pure-functional model zoo (params = pytrees, scan-over-layers stacks)."""
+from repro.models.model import Model, build, input_specs
+
+__all__ = ["Model", "build", "input_specs"]

@@ -1,0 +1,196 @@
+"""Attention blocks: GQA (dense archs) and MLA (deepseek-v2).
+
+Each block exposes ``specs(cfg)`` (ParamSpec tree with logical axes),
+``apply(params, x, cfg, ...)`` for full sequences (train/prefill) and
+``decode(params, x, cache, pos, cfg)`` for single-token decoding.
+
+Cache layouts (per layer; stacked on a leading "layers" axis by the stacks):
+  GQA: {"k": (B, S, KH, D), "v": (B, S, KH, D)}
+  MLA: {"ckv": (B, S, kv_lora), "k_rope": (B, S, rope_dim)}  — the MLA point:
+       the cache is the compressed latent, not full K/V.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import common
+from repro.models.common import ParamSpec, full_attention, decode_attention, rope
+from repro.sharding.ctx import shard_hint
+
+
+# ------------------------------------------------------------------ GQA
+
+def gqa_specs(cfg: ModelConfig, prefix=()) -> dict:
+    d, h, kh, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    ax = tuple(prefix)
+    return {
+        "wq": ParamSpec((d, h, hd), ax + ("embed", "heads", "head_dim")),
+        "wk": ParamSpec((d, kh, hd), ax + ("embed", "kv_heads", "head_dim")),
+        "wv": ParamSpec((d, kh, hd), ax + ("embed", "kv_heads", "head_dim")),
+        "wo": ParamSpec((h, hd, d), ax + ("heads", "head_dim", "embed")),
+    }
+
+
+def _gqa_project(params, x, cfg, positions):
+    wq = shard_hint(params["wq"], "embed_use", "heads", "head_dim")
+    wk = shard_hint(params["wk"], "embed_use", "kv_heads", "head_dim")
+    wv = shard_hint(params["wv"], "embed_use", "kv_heads", "head_dim")
+    q = shard_hint(jnp.einsum("bsd,dhk->bshk", x, wq), "batch", None, "heads", None)
+    k = shard_hint(jnp.einsum("bsd,dhk->bshk", x, wk), "batch", None, "kv_heads", None)
+    v = shard_hint(jnp.einsum("bsd,dhk->bshk", x, wv), "batch", None, "kv_heads", None)
+    q = rope(q, positions, cfg.rope_theta)
+    k = rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def gqa_apply(params, x, cfg: ModelConfig, *, causal=True, positions=None):
+    b, s, _ = x.shape
+    if positions is None:
+        positions = jnp.arange(s)[None, :].astype(jnp.int32)
+    q, k, v = _gqa_project(params, x, cfg, positions)
+    o = full_attention(q, k, v, causal=causal, cfg=cfg)
+    wo = shard_hint(params["wo"], "heads", "head_dim", "embed_use")
+    return jnp.einsum("bshk,hkd->bsd", o, wo)
+
+
+def gqa_prefill(params, x, cfg: ModelConfig, cache_len: int):
+    """Full-sequence pass that also returns a right-padded KV cache."""
+    b, s, _ = x.shape
+    positions = jnp.arange(s)[None, :].astype(jnp.int32)
+    q, k, v = _gqa_project(params, x, cfg, positions)
+    o = full_attention(q, k, v, causal=True, cfg=cfg)
+    pad = cache_len - s
+    cache = {
+        "k": jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0))),
+        "v": jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0))),
+    }
+    wo = shard_hint(params["wo"], "heads", "head_dim", "embed_use")
+    return jnp.einsum("bshk,hkd->bsd", o, wo), cache
+
+
+def gqa_decode(params, x, cache, pos, cfg: ModelConfig):
+    """x: (B, 1, d); pos: scalar int32 index of this token."""
+    positions = jnp.full((x.shape[0], 1), pos, jnp.int32)
+    q, k, v = _gqa_project(params, x, cfg, positions)
+    k_cache = jax.lax.dynamic_update_slice(cache["k"], k.astype(cache["k"].dtype), (0, pos, 0, 0))
+    v_cache = jax.lax.dynamic_update_slice(cache["v"], v.astype(cache["v"].dtype), (0, pos, 0, 0))
+    o = decode_attention(q, k_cache, v_cache, pos)
+    return jnp.einsum("bshk,hkd->bsd", o, params["wo"]), {"k": k_cache, "v": v_cache}
+
+
+def gqa_cache_spec(cfg: ModelConfig, batch: int, cache_len: int, dtype):
+    shp = (batch, cache_len, cfg.n_kv_heads, cfg.head_dim)
+    axes = ("batch", "kv_len", "kv_heads", "head_dim")
+    return {"k": (shp, axes, dtype), "v": (shp, axes, dtype)}
+
+
+# ------------------------------------------------------------------ MLA
+
+def mla_specs(cfg: ModelConfig, prefix=()) -> dict:
+    d, h = cfg.d_model, cfg.n_heads
+    r_kv, r_q = cfg.kv_lora_rank, cfg.q_lora_rank
+    dn, dr, dv = cfg.nope_head_dim, cfg.rope_head_dim, cfg.v_head_dim
+    ax = tuple(prefix)
+    return {
+        "wq_a": ParamSpec((d, r_q), ax + ("embed", "lora")),
+        "wq_b": ParamSpec((r_q, h, dn + dr), ax + ("lora", "heads", "head_dim")),
+        "wkv_a": ParamSpec((d, r_kv + dr), ax + ("embed", "lora")),
+        "wk_b": ParamSpec((r_kv, h, dn), ax + ("lora", "heads", "head_dim")),
+        "wv_b": ParamSpec((r_kv, h, dv), ax + ("lora", "heads", "head_dim")),
+        "wo": ParamSpec((h, dv, d), ax + ("heads", "head_dim", "embed")),
+    }
+
+
+def _mla_qkv(params, x, cfg: ModelConfig, positions):
+    """Returns q (B,S,H,dn+dr), latent ckv (B,S,r_kv), k_rope (B,S,dr)."""
+    dn, dr = cfg.nope_head_dim, cfg.rope_head_dim
+    wq_a = shard_hint(params["wq_a"], "embed_use", "lora")
+    q = jnp.einsum("bsd,dr->bsr", x, wq_a)
+    q = shard_hint(jnp.einsum("bsr,rhk->bshk", q, params["wq_b"]), "batch", None, "heads", None)
+    q_nope, q_rope = q[..., :dn], q[..., dn:]
+    q_rope = rope(q_rope, positions, cfg.rope_theta)
+    wkv_a = shard_hint(params["wkv_a"], "embed_use", "lora")
+    kv = jnp.einsum("bsd,dr->bsr", x, wkv_a)
+    ckv, k_rope = kv[..., : cfg.kv_lora_rank], kv[..., cfg.kv_lora_rank :]
+    k_rope = rope(k_rope[:, :, None, :], positions, cfg.rope_theta)[:, :, 0, :]
+    return jnp.concatenate([q_nope, q_rope], -1), ckv, k_rope
+
+
+def _mla_expand_kv(params, ckv, k_rope, cfg: ModelConfig):
+    """Latent -> per-head K (nope+rope) and V."""
+    h = cfg.n_heads
+    k_nope = shard_hint(jnp.einsum("bsr,rhk->bshk", ckv, params["wk_b"]), "batch", None, "heads", None)
+    v = shard_hint(jnp.einsum("bsr,rhk->bshk", ckv, params["wv_b"]), "batch", None, "heads", None)
+    k_rope_h = jnp.broadcast_to(
+        k_rope[:, :, None, :], (*k_rope.shape[:2], h, cfg.rope_head_dim)
+    )
+    k = jnp.concatenate([k_nope, k_rope_h], -1)
+    return k, v
+
+
+def mla_apply(params, x, cfg: ModelConfig, *, causal=True, positions=None):
+    b, s, _ = x.shape
+    if positions is None:
+        positions = jnp.arange(s)[None, :].astype(jnp.int32)
+    q, ckv, k_rope = _mla_qkv(params, x, cfg, positions)
+    k, v = _mla_expand_kv(params, ckv, k_rope, cfg)
+    # pad V up to the QK head dim so the shared attention core can run,
+    # then slice back (dv <= dn+dr always holds for deepseek-v2)
+    dqk = cfg.nope_head_dim + cfg.rope_head_dim
+    vpad = jnp.pad(v, ((0, 0), (0, 0), (0, 0), (0, dqk - cfg.v_head_dim)))
+    o = full_attention(q, k, vpad, causal=causal, cfg=cfg)[..., : cfg.v_head_dim]
+    wo = shard_hint(params["wo"], "heads", "head_dim", "embed_use")
+    return jnp.einsum("bshk,hkd->bsd", o, wo)
+
+
+def mla_prefill(params, x, cfg: ModelConfig, cache_len: int):
+    b, s, _ = x.shape
+    positions = jnp.arange(s)[None, :].astype(jnp.int32)
+    q, ckv, k_rope = _mla_qkv(params, x, cfg, positions)
+    k, v = _mla_expand_kv(params, ckv, k_rope, cfg)
+    dqk = cfg.nope_head_dim + cfg.rope_head_dim
+    vpad = jnp.pad(v, ((0, 0), (0, 0), (0, 0), (0, dqk - cfg.v_head_dim)))
+    o = full_attention(q, k, vpad, causal=True, cfg=cfg)[..., : cfg.v_head_dim]
+    pad = cache_len - s
+    cache = {
+        "ckv": jnp.pad(ckv, ((0, 0), (0, pad), (0, 0))),
+        "k_rope": jnp.pad(k_rope, ((0, 0), (0, pad), (0, 0))),
+    }
+    return jnp.einsum("bshk,hkd->bsd", o, params["wo"]), cache
+
+
+def mla_decode(params, x, cache, pos, cfg: ModelConfig):
+    positions = jnp.full((x.shape[0], 1), pos, jnp.int32)
+    q, ckv, k_rope = _mla_qkv(params, x, cfg, positions)
+    ckv_c = jax.lax.dynamic_update_slice(cache["ckv"], ckv.astype(cache["ckv"].dtype), (0, pos, 0))
+    kr_c = jax.lax.dynamic_update_slice(cache["k_rope"], k_rope.astype(cache["k_rope"].dtype), (0, pos, 0))
+    q_nope, q_rope = q[..., : cfg.nope_head_dim], q[..., cfg.nope_head_dim :]
+    # Weight-absorbed MLA decode (DeepSeek-V2's inference path): attention runs
+    # *directly on the compressed latent cache* — per-head K/V are never
+    # materialised, which is the whole point of MLA at decode time.
+    # score = (wk_b^T q_nope) . c_t + q_rope . k_rope_t
+    q_eff = jnp.einsum("bshn,rhn->bshr", q_nope, params["wk_b"])
+    s_lat = jnp.einsum("bshr,btr->bhst", q_eff, ckv_c, preferred_element_type=jnp.float32)
+    s_rope = jnp.einsum("bshk,btk->bhst", q_rope, kr_c, preferred_element_type=jnp.float32)
+    scores = (s_lat + s_rope) / math.sqrt(cfg.nope_head_dim + cfg.rope_head_dim)
+    scores = shard_hint(scores, "batch", "heads", None, "kv_len")
+    t = scores.shape[-1]
+    mask = jnp.arange(t)[None, None, None, :] <= pos
+    p = jax.nn.softmax(jnp.where(mask, scores, -1e30), axis=-1)
+    o_lat = jnp.einsum("bhst,btr->bshr", p.astype(ckv_c.dtype), ckv_c, preferred_element_type=jnp.float32)
+    o = jnp.einsum("bshr,rhv->bshv", o_lat.astype(x.dtype), params["wv_b"])
+    return (
+        jnp.einsum("bshk,hkd->bsd", o, params["wo"]),
+        {"ckv": ckv_c, "k_rope": kr_c},
+    )
+
+
+def mla_cache_spec(cfg: ModelConfig, batch: int, cache_len: int, dtype):
+    return {
+        "ckv": ((batch, cache_len, cfg.kv_lora_rank), ("batch", "kv_len", "lora"), dtype),
+        "k_rope": ((batch, cache_len, cfg.rope_head_dim), ("batch", "kv_len", "head_dim"), dtype),
+    }

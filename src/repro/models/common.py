@@ -1,0 +1,296 @@
+"""Shared model machinery: parameter specs with logical axes, norms, RoPE,
+MLPs, and the chunked online-softmax attention core.
+
+Models are pure-functional pytrees. Every parameter is declared as a
+``ParamSpec(shape, logical_axes)``; ``init_params`` materialises them and
+``repro.sharding.rules`` maps logical axes -> mesh PartitionSpecs, so the
+dry-run can build shardings without allocating anything.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.sharding.ctx import shard_hint
+
+# ----------------------------------------------------------------- params
+
+@dataclasses.dataclass(frozen=True)
+class ParamSpec:
+    shape: tuple[int, ...]
+    logical_axes: tuple[str | None, ...]  # e.g. ("layers", "embed", "mlp")
+    init: str = "normal"  # normal | zeros | ones | small
+    scale: float = 0.02
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.logical_axes), (self.shape, self.logical_axes)
+
+
+SpecTree = dict[str, Any]  # nested dict of ParamSpec
+
+
+def init_params(key: jax.Array, specs: SpecTree, dtype: jnp.dtype) -> dict:
+    """Materialise a spec tree into a parameter pytree."""
+    leaves, treedef = jax.tree_util.tree_flatten(
+        specs, is_leaf=lambda x: isinstance(x, ParamSpec)
+    )
+    keys = jax.random.split(key, len(leaves))
+    out = []
+    for k, spec in zip(keys, leaves):
+        if spec.init == "zeros":
+            out.append(jnp.zeros(spec.shape, dtype))
+        elif spec.init == "ones":
+            out.append(jnp.ones(spec.shape, dtype))
+        else:
+            scale = spec.scale if spec.init == "normal" else 1e-3
+            out.append((jax.random.normal(k, spec.shape, jnp.float32) * scale).astype(dtype))
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def spec_shapes(specs: SpecTree, dtype: jnp.dtype) -> dict:
+    """ShapeDtypeStruct tree (dry-run: no allocation)."""
+    return jax.tree_util.tree_map(
+        lambda s: jax.ShapeDtypeStruct(s.shape, dtype),
+        specs,
+        is_leaf=lambda x: isinstance(x, ParamSpec),
+    )
+
+
+def count_params(specs: SpecTree) -> int:
+    leaves = jax.tree_util.tree_leaves(
+        specs, is_leaf=lambda x: isinstance(x, ParamSpec)
+    )
+    return int(sum(np.prod(s.shape) for s in leaves))
+
+
+# ----------------------------------------------------------------- layers
+
+def rms_norm(x: jax.Array, gamma: jax.Array, eps: float = 1e-5) -> jax.Array:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    x = x * jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + eps)
+    return (x * gamma.astype(jnp.float32)).astype(dt)
+
+
+def layer_norm(x: jax.Array, gamma: jax.Array, beta: jax.Array, eps: float = 1e-5):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    mu = x.mean(-1, keepdims=True)
+    var = ((x - mu) ** 2).mean(-1, keepdims=True)
+    y = (x - mu) * jax.lax.rsqrt(var + eps)
+    return (y * gamma.astype(jnp.float32) + beta.astype(jnp.float32)).astype(dt)
+
+
+def rope(x: jax.Array, positions: jax.Array, theta: float = 10_000.0) -> jax.Array:
+    """Rotary embedding. x: (..., S, H, D_even), positions: (..., S)."""
+    d = x.shape[-1]
+    inv = 1.0 / (theta ** (jnp.arange(0, d, 2, dtype=jnp.float32) / d))
+    ang = positions[..., :, None, None].astype(jnp.float32) * inv  # (..., S, 1, d/2)
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = x[..., 0::2], x[..., 1::2]
+    y1 = x1 * cos - x2 * sin
+    y2 = x1 * sin + x2 * cos
+    out = jnp.stack([y1, y2], axis=-1).reshape(x.shape)
+    return out.astype(x.dtype)
+
+
+def activation(name: str, gate: jax.Array, up: jax.Array | None = None) -> jax.Array:
+    if name == "swiglu":
+        assert up is not None
+        return jax.nn.silu(gate) * up
+    if name == "gelu":
+        return jax.nn.gelu(gate)
+    if name == "relu_sq":
+        return jnp.square(jax.nn.relu(gate))
+    raise ValueError(name)
+
+
+def mlp_specs(d_model: int, d_ff: int, act: str, prefix_axes=()) -> SpecTree:
+    ax = tuple(prefix_axes)
+
+    def sp(shape, axes):
+        return ParamSpec(tuple(s for s in shape), ax + tuple(axes))
+
+    if act == "swiglu":
+        return {
+            "w_gate": sp((d_model, d_ff), ("embed", "mlp")),
+            "w_up": sp((d_model, d_ff), ("embed", "mlp")),
+            "w_down": sp((d_ff, d_model), ("mlp", "embed")),
+        }
+    return {
+        "w_in": sp((d_model, d_ff), ("embed", "mlp")),
+        "w_out": sp((d_ff, d_model), ("mlp", "embed")),
+    }
+
+
+def mlp_apply(params: dict, x: jax.Array, act: str) -> jax.Array:
+    if act == "swiglu":
+        wg = shard_hint(params["w_gate"], "embed_use", "mlp")
+        wu = shard_hint(params["w_up"], "embed_use", "mlp")
+        wd = shard_hint(params["w_down"], "mlp", "embed_use")
+        h = activation("swiglu", x @ wg, x @ wu)
+        h = shard_hint(h, "batch", None, "mlp")
+        return h @ wd
+    wi = shard_hint(params["w_in"], "embed_use", "mlp")
+    wo = shard_hint(params["w_out"], "mlp", "embed_use")
+    h = activation(act, x @ wi)
+    h = shard_hint(h, "batch", None, "mlp")
+    return h @ wo
+
+
+# -------------------------------------------- chunked online-softmax attention
+#
+# Memory-safe full-sequence attention for long context (pure JAX; the Pallas
+# flash kernel is the TPU-native version — this is the XLA path used under
+# pjit for the dry-run, and the oracle the kernel is validated against).
+# Causal mode only *computes* the lower-triangular blocks (python-unrolled over
+# query chunks, lax.scan over key chunks), so HLO FLOPs stay near the useful
+# 0.5*S^2 instead of the masked-dense S^2.
+
+def _online_attn_block(q, k, v, mask, scale, kv_sharded):
+    """One (cq x ck) block, grouped GQA form: q (B,cq,KH,G,D), k/v (B,ck,KH,D).
+    Returns (max (B,KH,G,cq), sum, acc (B,cq,KH,G,D)) — K/V are never
+    repeated to the full head count."""
+    s = jnp.einsum("bqkgd,btkd->bkgqt", q, k, preferred_element_type=jnp.float32) * scale
+    if kv_sharded:
+        s = shard_hint(s, "batch", "kv_heads", None, None, None)
+    else:
+        s = shard_hint(s, "batch", None, None, "q_len", None)
+    s = jnp.where(mask, s, -1e30)
+    m = s.max(axis=-1)
+    p = jnp.exp(s - m[..., None])
+    l = p.sum(axis=-1)
+    acc = jnp.einsum("bkgqt,btkd->bqkgd", p.astype(v.dtype), v, preferred_element_type=jnp.float32)
+    return m, l, acc
+
+
+def chunked_attention(
+    q: jax.Array,  # (B, Sq, H, D)
+    k: jax.Array,  # (B, Skv, KH, D)
+    v: jax.Array,
+    *,
+    causal: bool,
+    chunk_q: int,
+    chunk_k: int,
+    scale: float | None = None,
+    q_offset: int = 0,
+) -> jax.Array:
+    b, sq, h, d = q.shape
+    _, skv, kh, _ = k.shape
+    group = h // kh
+    # grouped form: K/V never repeated. If the kv-head count itself shards
+    # over the model axis (MLA 128, MHA 20-head whisper at smaller meshes),
+    # keep head-sharded scores; otherwise (GQA kh=8 on a 16-way axis) q
+    # re-shards to seq-sharded (SP-consistent) so the grouped reshape never
+    # fights the head sharding (mistral/grok/deepseek regressions, §Perf).
+    from repro.sharding.ctx import current_rules
+
+    ctx = current_rules()
+    model_ways = ctx[0].shape.get("model", 16) if ctx else 16
+    kv_sharded = kh % model_ways == 0 and kh >= model_ways
+    if kv_sharded:
+        qg = shard_hint(q.reshape(b, sq, kh, group, d), "batch", None, "kv_heads", None, None)
+    else:
+        qg = shard_hint(q.reshape(b, sq, kh, group, d), "batch", "seq", None, None, None)
+    scale = 1.0 / math.sqrt(d) if scale is None else scale
+
+    cq = min(chunk_q, sq)
+    ck = min(chunk_k, skv)
+    assert sq % cq == 0 and skv % ck == 0, (sq, cq, skv, ck)
+    nq, nk = sq // cq, skv // ck
+
+    out_chunks = []
+    for i in range(nq):
+        qi = qg[:, i * cq : (i + 1) * cq]
+        row = q_offset + i * cq + jnp.arange(cq)
+        # causal: keys beyond this q-chunk's last row can never contribute
+        hi = min(nk, (q_offset + (i + 1) * cq + ck - 1) // ck) if causal else nk
+        ks = k[:, : hi * ck].reshape(b, hi, ck, kh, d).transpose(1, 0, 2, 3, 4)
+        vs = v[:, : hi * ck].reshape(b, hi, ck, kh, d).transpose(1, 0, 2, 3, 4)
+
+        def step(carry, inp):
+            m_run, l_run, acc_run, j = carry  # (B,KH,G,cq), ..., (B,cq,KH,G,D)
+            kj, vj = inp
+            col = j * ck + jnp.arange(ck)
+            if causal:
+                mask = (col[None, None, None, None, :] <= row[None, None, None, :, None])
+            else:
+                mask = jnp.ones((1, 1, 1, 1, ck), bool)
+            m, l, acc = _online_attn_block(qi, kj, vj, mask, scale, kv_sharded)
+            m_new = jnp.maximum(m_run, m)
+            a_old = jnp.exp(m_run - m_new)
+            a_new = jnp.exp(m - m_new)
+            l_new = l_run * a_old + l * a_new
+            scale_old = a_old.transpose(0, 3, 1, 2)[..., None]  # (B,cq,KH,G,1)
+            scale_new = a_new.transpose(0, 3, 1, 2)[..., None]
+            acc_new = acc_run * scale_old + acc * scale_new
+            return (m_new, l_new, acc_new, j + 1), None
+
+        m0 = jnp.full((b, kh, group, cq), -1e30, jnp.float32)
+        l0 = jnp.zeros((b, kh, group, cq), jnp.float32)
+        a0 = jnp.zeros((b, cq, kh, group, d), jnp.float32)
+        (m_f, l_f, acc_f, _), _ = jax.lax.scan(step, (m0, l0, a0, jnp.int32(0)), (ks, vs))
+        l_f = jnp.where(l_f == 0.0, 1.0, l_f)
+        o = acc_f / l_f.transpose(0, 3, 1, 2)[..., None]
+        out_chunks.append(o.reshape(b, cq, h, d).astype(q.dtype))
+    return jnp.concatenate(out_chunks, axis=1)
+
+
+def naive_causal_attention(q, k, v, *, causal=True, scale=None, q_offset=0):
+    """Plain masked attention for short sequences (single materialised score)."""
+    # short-sequence path: head-sharded scores with K/V repeat — cheap at 4k
+    # and layout-friendly for training (the grouped form lives on the chunked
+    # path where the 32k K/V repeat would actually hurt; §Perf)
+    b, sq, h, d = q.shape
+    _, skv, kh, _ = k.shape
+    group = h // kh
+    if group > 1:
+        k = jnp.repeat(k, group, axis=2)
+        v = jnp.repeat(v, group, axis=2)
+    scale = 1.0 / math.sqrt(d) if scale is None else scale
+    s = jnp.einsum("bqhd,bkhd->bhqk", q, k, preferred_element_type=jnp.float32) * scale
+    s = shard_hint(s, "batch", "heads", "q_len", None)
+    if causal:
+        row = q_offset + jnp.arange(sq)[:, None]
+        col = jnp.arange(skv)[None, :]
+        s = jnp.where(col <= row, s, -1e30)
+    p = jax.nn.softmax(s, axis=-1).astype(v.dtype)
+    o = jnp.einsum("bhqk,bkhd->bqhd", p, v, preferred_element_type=jnp.float32).astype(q.dtype)
+    return shard_hint(o, "batch", None, "heads", None)
+
+
+def full_attention(q, k, v, *, causal, cfg, q_offset=0):
+    """Dispatch: chunked path beyond the threshold, dense below it."""
+    if q.shape[1] > cfg.attn_chunk_threshold:
+        return chunked_attention(
+            q, k, v, causal=causal, chunk_q=cfg.attn_chunk_q,
+            chunk_k=cfg.attn_chunk_k, q_offset=q_offset,
+        )
+    return naive_causal_attention(q, k, v, causal=causal, q_offset=q_offset)
+
+
+def decode_attention(q, k_cache, v_cache, pos):
+    """Single-token attention against a (possibly longer) KV cache.
+
+    q: (B, 1, H, D); caches: (B, S, KH, D); pos: scalar current position.
+    Masked beyond pos (inclusive).
+    """
+    b, _, h, d = q.shape
+    _, s, kh, _ = k_cache.shape
+    group = h // kh
+    scale = 1.0 / math.sqrt(d)
+    qf = q.reshape(b, kh, group, d)
+    # bf16 operands + f32 accumulation: the cache is never up-cast (an
+    # .astype(f32) here doubles HBM and gets hoisted out of the layer scan)
+    s_logits = jnp.einsum("bkgd,bskd->bkgs", qf, k_cache, preferred_element_type=jnp.float32) * scale
+    s_logits = shard_hint(s_logits, "batch", "kv_heads", None, "kv_len")
+    mask = jnp.arange(s)[None, None, None, :] <= pos
+    s_logits = jnp.where(mask, s_logits, -1e30)
+    p = jax.nn.softmax(s_logits, axis=-1).astype(v_cache.dtype)  # stay in cache dtype
+    out = jnp.einsum("bkgs,bskd->bkgd", p, v_cache, preferred_element_type=jnp.float32)
+    return out.reshape(b, 1, h, d).astype(q.dtype)

@@ -1,0 +1,194 @@
+"""Public model API: build(cfg) -> Model with init/apply/prefill/decode_step.
+
+All archs share this surface:
+  * ``apply(params, batch)``            — full forward (train / scoring)
+  * ``prefill(params, batch)``          — forward + decode-cache construction
+  * ``decode_step(params, cache, tok, pos)`` — one-token serve step
+  * ``param_specs`` / ``cache_spec``    — ParamSpec / (shape, axes, dtype)
+    trees: the dry-run builds ShapeDtypeStructs and shardings from these
+    without allocating anything.
+
+Batch keys: "tokens" always; "prefix_embeds" (vlm stub) and "enc_embeds"
+(audio stub) per frontend; "loss_mask" optional.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.models import transformer, whisper
+from repro.models.common import ParamSpec, count_params, init_params, rms_norm, spec_shapes
+from repro.sharding.ctx import shard_hint
+
+
+def lm_specs(cfg: ModelConfig) -> dict:
+    d, v = cfg.d_model, cfg.vocab_size
+    return {
+        "embed": ParamSpec((v, d), ("vocab", "embed")),
+        "stack": transformer.stack_specs(cfg),
+        "ln_f": ParamSpec((d,), ("embed",), init="ones"),
+        "unembed": ParamSpec((d, v), ("embed", "vocab")),
+    }
+
+
+def _embed_tokens(cfg, params, batch):
+    cdt = jnp.dtype(cfg.compute_dtype)
+    x = jnp.take(params["embed"], batch["tokens"], axis=0).astype(cdt)
+    if cfg.n_prefix_embeds:
+        pre = batch["prefix_embeds"].astype(cdt)
+        x = jnp.concatenate([pre, x], axis=1)
+    return shard_hint(x, "batch", None, None)
+
+
+def cast_floating(tree, dtype):
+    """Mixed precision: compute in cfg.compute_dtype against master params.
+    astype is sharding-preserving; its gradient casts back, so AdamW still
+    updates the master-dtype params."""
+    return jax.tree_util.tree_map(
+        lambda a: a.astype(dtype) if jnp.issubdtype(a.dtype, jnp.floating) else a, tree
+    )
+
+
+@dataclasses.dataclass(frozen=True)
+class Model:
+    cfg: ModelConfig
+
+    # ------------------------------------------------------------- params
+    @property
+    def param_specs(self) -> dict:
+        if self.cfg.encoder_decoder:
+            return whisper.whisper_specs(self.cfg)
+        return lm_specs(self.cfg)
+
+    def init(self, key: jax.Array) -> dict:
+        return init_params(key, self.param_specs, jnp.dtype(self.cfg.param_dtype))
+
+    def param_shapes(self) -> dict:
+        return spec_shapes(self.param_specs, jnp.dtype(self.cfg.param_dtype))
+
+    @property
+    def n_params(self) -> int:
+        return count_params(self.param_specs)
+
+    @property
+    def n_active_params(self) -> int:
+        """Per-token active params (MoE: routed fraction only)."""
+        cfg = self.cfg
+        if not cfg.n_experts:
+            return self.n_params
+        total = 0
+        f = cfg.moe_d_ff or cfg.d_ff
+        per_expert = 3 * cfg.d_model * f if cfg.act == "swiglu" else 2 * cfg.d_model * f
+        for i in range(cfg.n_layers):
+            if cfg.moe_at(i):
+                total += per_expert * (cfg.n_experts - cfg.experts_per_token - cfg.n_shared_experts)
+        return self.n_params - total
+
+    # ------------------------------------------------------------ forward
+    def hidden(self, params, batch) -> jax.Array:
+        """Final normed hidden states (B, S, d) — the train path pairs this
+        with a chunked cross-entropy so the (B, S, vocab) logits tensor is
+        never materialised (200k-vocab configs would not fit otherwise)."""
+        cfg = self.cfg
+        params = cast_floating(params, jnp.dtype(cfg.compute_dtype))
+        if cfg.encoder_decoder:
+            return whisper.hidden(cfg, params, batch)
+        x = _embed_tokens(cfg, params, batch)
+        x = transformer.stack_apply(cfg, params["stack"], x)
+        return rms_norm(x, params["ln_f"], cfg.norm_eps)
+
+    def apply(self, params, batch) -> jax.Array:
+        return (self.hidden(params, batch) @ self.unembed(params)).astype(jnp.float32)
+
+    def unembed(self, params) -> jax.Array:
+        return params["unembed"]
+
+    # ------------------------------------------------------------- serve
+    def cache_spec(self, batch: int, cache_len: int):
+        cfg = self.cfg
+        dtype = jnp.dtype(cfg.compute_dtype)
+        if cfg.encoder_decoder:
+            return whisper.cache_spec(cfg, batch, cache_len, dtype)
+        return transformer.stack_cache_spec(cfg, batch, cache_len, dtype)
+
+    def init_cache(self, batch: int, cache_len: int):
+        return jax.tree_util.tree_map(
+            lambda leaf: jnp.zeros(leaf[0], leaf[2]),
+            self.cache_spec(batch, cache_len),
+            is_leaf=_is_cache_leaf,
+        )
+
+    def prefill(self, params, batch, cache_len: int):
+        cfg = self.cfg
+        params = cast_floating(params, jnp.dtype(cfg.compute_dtype))
+        if cfg.encoder_decoder:
+            return whisper.prefill(cfg, params, batch)
+        x = _embed_tokens(cfg, params, batch)
+        x, cache = transformer.stack_prefill(cfg, params["stack"], x, cache_len)
+        x = rms_norm(x, params["ln_f"], cfg.norm_eps)
+        return (x @ params["unembed"]).astype(jnp.float32), cache
+
+    def decode_step(self, params, cache, tokens, pos):
+        """tokens: (B, 1) int32; pos: scalar int32. Returns (logits (B, V), cache)."""
+        cfg = self.cfg
+        params = cast_floating(params, jnp.dtype(cfg.compute_dtype))
+        if cfg.encoder_decoder:
+            return whisper.decode_step(cfg, params, cache, tokens, pos)
+        cdt = jnp.dtype(cfg.compute_dtype)
+        x = jnp.take(params["embed"], tokens, axis=0).astype(cdt)
+        x, cache = transformer.stack_decode(cfg, params["stack"], x, cache, pos)
+        x = rms_norm(x, params["ln_f"], cfg.norm_eps)
+        return (x[:, -1, :] @ params["unembed"]).astype(jnp.float32), cache
+
+
+def _is_cache_leaf(x) -> bool:
+    return isinstance(x, tuple) and len(x) == 3 and isinstance(x[0], tuple)
+
+
+def build(cfg: ModelConfig) -> Model:
+    return Model(cfg)
+
+
+# --------------------------------------------------------------- input specs
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig) -> dict[str, Any]:
+    """ShapeDtypeStruct stand-ins for every model input of this cell.
+
+    train/prefill: token batch (+ stub frontend embeddings).
+    decode: one new token + the fully-materialised cache spec at seq_len.
+    """
+    b, s = shape.global_batch, shape.seq_len
+    cdt = jnp.dtype(cfg.compute_dtype)
+    i32 = jnp.int32
+    model = build(cfg)
+
+    def sds(shp, dt):
+        return jax.ShapeDtypeStruct(shp, dt)
+
+    if cfg.encoder_decoder:
+        tgt = cfg.max_target_positions
+        if shape.kind in ("train", "prefill"):
+            return {
+                "enc_embeds": sds((b, s, cfg.d_model), cdt),
+                "tokens": sds((b, tgt), i32),
+            }
+        cache = jax.tree_util.tree_map(
+            lambda leaf: sds(leaf[0], leaf[2]), model.cache_spec(b, s), is_leaf=_is_cache_leaf
+        )
+        return {"tokens": sds((b, 1), i32), "pos": sds((), i32), "cache": cache}
+
+    if shape.kind in ("train", "prefill"):
+        out = {"tokens": sds((b, s - cfg.n_prefix_embeds), i32)}
+        if cfg.n_prefix_embeds:
+            out["prefix_embeds"] = sds((b, cfg.n_prefix_embeds, cfg.d_model), cdt)
+        return out
+
+    cache = jax.tree_util.tree_map(
+        lambda leaf: sds(leaf[0], leaf[2]), model.cache_spec(b, s), is_leaf=_is_cache_leaf
+    )
+    return {"tokens": sds((b, 1), i32), "pos": sds((), i32), "cache": cache}

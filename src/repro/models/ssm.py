@@ -1,0 +1,279 @@
+"""SSM mixers: RWKV-6 ("Finch") time-mix and Mamba-1 selective SSM.
+
+Both are linear-recurrence mixers with O(1) decode state — the reason the
+long_500k cell is runnable for rwkv6/jamba while quadratic-attention archs
+skip it. Training uses a lax.scan over time (a chunked matmul formulation is a
+recorded §Perf candidate); decode carries the state in the cache pytree.
+
+RWKV-6 (arXiv:2404.05892), per head h with head_dim n:
+    S_t = diag(w_t) S_{t-1} + k_t^T v_t          (S: n x n)
+    o_t = r_t (S_{t-1} + diag(u) k_t^T v_t)
+with data-dependent decay w_t = exp(-exp(x_t W_w lora)) and token-shift mixing
+on all branch inputs.
+
+Mamba-1 (selective scan), d_inner = expand*d:
+    h_t = exp(dt_t A) h_{t-1} + dt_t B_t x_t ;  y_t = C_t h_t + D x_t
+with causal depthwise conv + SiLU in front and a SiLU gate behind.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.common import ParamSpec
+from repro.sharding.ctx import shard_hint
+
+
+# ================================================================== RWKV-6
+
+RWKV_LORA = 64  # decay/mix lora rank (7B scale)
+
+
+def rwkv6_specs(cfg: ModelConfig, prefix=()) -> dict:
+    d, h, n = cfg.d_model, cfg.n_heads, cfg.head_dim
+    ax = tuple(prefix)
+    return {
+        "mix": ParamSpec((5, d), ax + (None, "embed"), init="small"),  # r,k,v,w,g shifts
+        "wr": ParamSpec((d, h, n), ax + ("embed", "heads", "head_dim")),
+        "wk": ParamSpec((d, h, n), ax + ("embed", "heads", "head_dim")),
+        "wv": ParamSpec((d, h, n), ax + ("embed", "heads", "head_dim")),
+        "wg": ParamSpec((d, h, n), ax + ("embed", "heads", "head_dim")),
+        "w_decay_a": ParamSpec((d, RWKV_LORA), ax + ("embed", "lora"), init="small"),
+        "w_decay_b": ParamSpec((RWKV_LORA, d), ax + ("lora", "embed"), init="small"),
+        "decay_base": ParamSpec((h, n), ax + ("heads", "head_dim"), init="zeros"),
+        "bonus_u": ParamSpec((h, n), ax + ("heads", "head_dim"), init="small"),
+        "wo": ParamSpec((h, n, d), ax + ("heads", "head_dim", "embed")),
+        "ln_x": ParamSpec((d,), ax + ("embed",), init="ones"),
+    }
+
+
+def _token_shift(x, prev):
+    """Shift by one: position t sees t-1; position 0 sees `prev` (decode carry)."""
+    return jnp.concatenate([prev[:, None, :], x[:, :-1, :]], axis=1)
+
+
+def _rwkv6_inputs(params, x, prev, cfg):
+    b, s, d = x.shape
+    h, n = cfg.n_heads, cfg.head_dim
+    xx = _token_shift(x, prev)
+    mix = params["mix"]  # (5, d)
+    branches = [x + mix[i] * (xx - x) for i in range(5)]
+    xr, xk, xv, xw, xg = branches
+    wr_, wk_, wv_, wg_ = (
+        shard_hint(params[n], "embed_use", "heads", "head_dim") for n in ("wr", "wk", "wv", "wg")
+    )
+    r = shard_hint(jnp.einsum("bsd,dhn->bshn", xr, wr_), "batch", None, "heads", None)
+    k = shard_hint(jnp.einsum("bsd,dhn->bshn", xk, wk_), "batch", None, "heads", None)
+    v = shard_hint(jnp.einsum("bsd,dhn->bshn", xv, wv_), "batch", None, "heads", None)
+    g = jax.nn.silu(jnp.einsum("bsd,dhn->bshn", xg, wg_))
+    # data-dependent decay in (0, 1): exp(-exp(.))
+    dd = jnp.tanh(xw @ params["w_decay_a"]) @ params["w_decay_b"]  # (b, s, d)
+    w = jnp.exp(-jnp.exp(
+        (params["decay_base"].reshape(1, 1, h, n) + dd.reshape(b, s, h, n)).astype(jnp.float32)
+    ))
+    return r, k, v, g, w
+
+
+TIME_CHUNK = 256  # remat granularity for recurrence scans (memory control)
+
+
+def _chunked_time_scan(step, carry, xs, chunk: int = TIME_CHUNK):
+    """lax.scan with per-chunk rematerialisation: residuals are saved only at
+    chunk boundaries and recomputed inside each chunk during the backward
+    pass — the training-memory fix for 4k+ step recurrences (SSM stacks)."""
+    s = xs[0].shape[0] if isinstance(xs, tuple) else jax.tree_util.tree_leaves(xs)[0].shape[0]
+    if s <= chunk or s % chunk:
+        return jax.lax.scan(step, carry, xs)
+    n = s // chunk
+    xs_c = jax.tree_util.tree_map(
+        lambda a: a.reshape((n, chunk) + a.shape[1:]), xs
+    )
+
+    def outer(c, xc):
+        return jax.lax.scan(step, c, xc)
+
+    carry, ys = jax.lax.scan(jax.checkpoint(outer), carry, xs_c)
+    ys = jax.tree_util.tree_map(lambda a: a.reshape((s,) + a.shape[2:]), ys)
+    return carry, ys
+
+
+def _wkv_scan(r, k, v, w, u, state):
+    """Linear recurrence over time. Shapes: (B,S,H,N); state (B,H,N,N)."""
+
+    def step(s_prev, inp):
+        r_t, k_t, v_t, w_t = inp  # (B,H,N)
+        kv = k_t[..., :, None] * v_t[..., None, :]  # (B,H,N,N)
+        out = jnp.einsum("bhn,bhnm->bhm", r_t, s_prev + u[None, :, :, None] * kv)
+        s_new = w_t[..., :, None] * s_prev + kv
+        return s_new, out
+
+    xs = tuple(a.transpose(1, 0, 2, 3) for a in (r, k, v, w))  # time-major
+    state, outs = _chunked_time_scan(step, state, xs)
+    return outs.transpose(1, 0, 2, 3), state  # (B,S,H,N)
+
+
+def rwkv6_apply(params, x, cfg: ModelConfig, state=None, prev_x=None):
+    """Full-sequence time-mix. Returns (out, (new_state, last_x))."""
+    b, s, d = x.shape
+    h, n = cfg.n_heads, cfg.head_dim
+    if prev_x is None:
+        prev_x = jnp.zeros((b, d), x.dtype)
+    if state is None:
+        state = jnp.zeros((b, h, n, n), jnp.float32)
+    r, k, v, g, w = _rwkv6_inputs(params, x, prev_x, cfg)
+    u = params["bonus_u"].astype(jnp.float32)
+    outs, state = _wkv_scan(
+        r.astype(jnp.float32), k.astype(jnp.float32), v.astype(jnp.float32), w, u, state
+    )
+    o = (outs.astype(x.dtype) * g).reshape(b, s, h * n)
+    # group-norm-ish output norm (ln_x), then project
+    o = o * jax.lax.rsqrt(jnp.mean(o.astype(jnp.float32) ** 2, -1, keepdims=True) + 1e-5).astype(x.dtype)
+    o = o * params["ln_x"]
+    wo_ = shard_hint(params["wo"], "heads", "head_dim", "embed_use")
+    out = jnp.einsum("bshn,hnd->bsd", o.reshape(b, s, h, n), wo_)
+    return out, (state, x[:, -1, :])
+
+
+def rwkv6_decode(params, x, cache, cfg: ModelConfig):
+    """x: (B, 1, d). cache: {"state": (B,H,N,N) f32, "prev_x": (B,d)}."""
+    out, (state, last_x) = rwkv6_apply(params, x, cfg, cache["state"], cache["prev_x"])
+    return out, {"state": state, "prev_x": last_x}
+
+
+def rwkv6_cache_spec(cfg: ModelConfig, batch: int, dtype):
+    h, n, d = cfg.n_heads, cfg.head_dim, cfg.d_model
+    return {
+        "state": ((batch, h, n, n), ("batch", "heads", None, None), jnp.float32),
+        "prev_x": ((batch, d), ("batch", None), dtype),
+    }
+
+
+# ================================================================== Mamba-1
+
+def mamba_d_inner(cfg: ModelConfig) -> int:
+    return cfg.mamba_expand * cfg.d_model
+
+
+def mamba_specs(cfg: ModelConfig, prefix=()) -> dict:
+    d = cfg.d_model
+    di = mamba_d_inner(cfg)
+    ns, nc = cfg.mamba_d_state, cfg.mamba_d_conv
+    dt_rank = max(16, d // 16)
+    ax = tuple(prefix)
+    return {
+        "w_in": ParamSpec((d, 2 * di), ax + ("embed", "mlp")),
+        "conv_w": ParamSpec((nc, di), ax + (None, "mlp"), init="small"),
+        "conv_b": ParamSpec((di,), ax + ("mlp",), init="zeros"),
+        "w_x": ParamSpec((di, dt_rank + 2 * ns), ax + ("mlp", None)),
+        "w_dt": ParamSpec((dt_rank, di), ax + ("lora", "mlp"), init="small"),
+        "dt_bias": ParamSpec((di,), ax + ("mlp",), init="small"),
+        "a_log": ParamSpec((di, ns), ax + ("mlp", None), init="small"),
+        "d_skip": ParamSpec((di,), ax + ("mlp",), init="ones"),
+        "w_out": ParamSpec((di, d), ax + ("mlp", "embed")),
+    }
+
+
+def _mamba_conv_full(xz, conv_w, conv_b, prev):
+    """Causal depthwise conv over time. xz: (B,S,di); prev: (B,nc-1,di)."""
+    nc = conv_w.shape[0]
+    xpad = jnp.concatenate([prev, xz], axis=1)  # (B, S+nc-1, di)
+    out = sum(
+        xpad[:, i : i + xz.shape[1], :] * conv_w[i][None, None, :] for i in range(nc)
+    )
+    return out + conv_b, xpad[:, -(nc - 1) :, :]
+
+
+def _mamba_core(params, u, cfg, h0):
+    """u: (B,S,di) post-conv post-silu. Returns (y, h_final)."""
+    di = u.shape[-1]
+    ns = cfg.mamba_d_state
+    dt_rank = params["w_dt"].shape[0]
+    proj = jnp.einsum("bsd,de->bse", u, params["w_x"])
+    dt_in, b_in, c_in = (
+        proj[..., :dt_rank],
+        proj[..., dt_rank : dt_rank + ns],
+        proj[..., dt_rank + ns :],
+    )
+    dt = jax.nn.softplus(jnp.einsum("bsr,rd->bsd", dt_in, params["w_dt"]) + params["dt_bias"])
+    a = -jnp.exp(params["a_log"].astype(jnp.float32))  # (di, ns)
+
+    def step(h, inp):
+        # discretisation happens *inside* the step so the (B, S, di, ns) f32
+        # da/dbu tensors are never materialised at full sequence length
+        dt_t, b_t, c_t, u_t = inp  # (B,di), (B,ns), (B,ns), (B,di)
+        da_t = jnp.exp(dt_t.astype(jnp.float32)[..., None] * a)
+        dbu_t = (
+            dt_t.astype(jnp.float32)[..., None]
+            * b_t.astype(jnp.float32)[:, None, :]
+            * u_t.astype(jnp.float32)[..., None]
+        )
+        h = da_t * h + dbu_t
+        y = jnp.einsum("bdn,bn->bd", h, c_t.astype(jnp.float32))
+        return h, y
+
+    xs = (
+        dt.transpose(1, 0, 2),
+        b_in.transpose(1, 0, 2),
+        c_in.transpose(1, 0, 2),
+        u.transpose(1, 0, 2),
+    )
+    h_f, ys = _chunked_time_scan(step, h0, xs)
+    y = ys.transpose(1, 0, 2).astype(u.dtype) + u * params["d_skip"]
+    return y, h_f
+
+
+def mamba_apply(params, x, cfg: ModelConfig, cache=None):
+    """Full-sequence Mamba mixer. Returns (out, new_cache)."""
+    b, s, d = x.shape
+    di = mamba_d_inner(cfg)
+    nc = cfg.mamba_d_conv
+    if cache is None:
+        cache = {
+            "h": jnp.zeros((b, di, cfg.mamba_d_state), jnp.float32),
+            "conv": jnp.zeros((b, nc - 1, di), x.dtype),
+        }
+    xz = shard_hint(x @ shard_hint(params["w_in"], "embed_use", "mlp"), "batch", None, "mlp")
+    xi, z = xz[..., :di], xz[..., di:]
+    u, conv_state = _mamba_conv_full(xi, params["conv_w"], params["conv_b"], cache["conv"])
+    u = jax.nn.silu(u)
+    y, h_f = _mamba_core(params, u, cfg, cache["h"])
+    out = (y * jax.nn.silu(z)) @ shard_hint(params["w_out"], "mlp", "embed_use")
+    return out, {"h": h_f, "conv": conv_state}
+
+
+def mamba_cache_spec(cfg: ModelConfig, batch: int, dtype):
+    di = mamba_d_inner(cfg)
+    return {
+        "h": ((batch, di, cfg.mamba_d_state), ("batch", "mlp", None), jnp.float32),
+        "conv": ((batch, cfg.mamba_d_conv - 1, di), ("batch", None, "mlp"), dtype),
+    }
+
+
+# ----------------------------------------------- RWKV-6 channel mix (FFN)
+
+def rwkv6_cmix_specs(cfg: ModelConfig, prefix=()) -> dict:
+    d, f = cfg.d_model, cfg.d_ff
+    ax = tuple(prefix)
+    return {
+        "mix": ParamSpec((2, d), ax + (None, "embed"), init="small"),  # k, r shifts
+        "wk": ParamSpec((d, f), ax + ("embed", "mlp")),
+        "wv": ParamSpec((f, d), ax + ("mlp", "embed")),
+        "wr": ParamSpec((d, d), ax + ("embed", "embed_out")),
+    }
+
+
+def rwkv6_cmix_apply(params, x, cfg: ModelConfig, prev_x=None):
+    """Receptance-gated squared-relu FFN with token shift.
+
+    Returns (out, last_x) — last_x feeds the decode-time token shift.
+    """
+    b, s, d = x.shape
+    if prev_x is None:
+        prev_x = jnp.zeros((b, d), x.dtype)
+    xx = _token_shift(x, prev_x)
+    xk = x + params["mix"][0] * (xx - x)
+    xr = x + params["mix"][1] * (xx - x)
+    k = shard_hint(jnp.square(jax.nn.relu(xk @ shard_hint(params["wk"], "embed_use", "mlp"))), "batch", None, "mlp")
+    r = jax.nn.sigmoid(xr @ shard_hint(params["wr"], "embed_use", "embed_out"))
+    return r * (k @ shard_hint(params["wv"], "mlp", "embed_use")), x[:, -1, :]

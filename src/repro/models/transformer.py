@@ -1,0 +1,289 @@
+"""Unified decoder stack for all decoder-only archs (dense, MoE, MLA, SSM,
+hybrid). Layers are grouped into the smallest repeating *pattern* (jamba: one
+attention + seven mamba with alternating dense/MoE FFNs; deepseek: one dense
+prefix layer then 59 identical MoE layers) and the pattern blocks are scanned
+with stacked parameters — one traced block body regardless of depth, which
+keeps HLO size and compile time flat across the 2B..398B configs.
+
+Remat (jax.checkpoint) wraps the scanned block body when cfg.remat.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import attention as attn
+from repro.models import moe as moe_mod
+from repro.models import ssm
+from repro.models.common import ParamSpec, mlp_apply, mlp_specs, rms_norm
+from repro.sharding.ctx import shard_hint
+
+
+@dataclasses.dataclass(frozen=True)
+class LayerDesc:
+    mixer: str  # "gqa" | "mla" | "rwkv6" | "mamba"
+    ffn: str  # "dense" | "moe" | "cmix"
+
+
+def layer_descs(cfg: ModelConfig) -> list[LayerDesc]:
+    out = []
+    for i in range(cfg.n_layers):
+        if cfg.ssm_kind == "rwkv6":
+            mixer = "rwkv6"
+        elif cfg.ssm_kind == "mamba":
+            mixer = "gqa" if cfg.attn_at(i) else "mamba"
+        elif cfg.use_mla:
+            mixer = "mla"
+        else:
+            mixer = "gqa"
+        if cfg.ssm_kind == "rwkv6":
+            ffn = "cmix"
+        else:
+            ffn = "moe" if cfg.moe_at(i) else "dense"
+        out.append(LayerDesc(mixer, ffn))
+    return out
+
+
+def stack_pattern(cfg: ModelConfig):
+    """Returns (prefix_descs, pattern_descs, n_blocks): prefix layers are
+    unrolled; the remaining layers are `n_blocks` repeats of the pattern."""
+    descs = layer_descs(cfg)
+    prefix = descs[: cfg.first_k_dense]
+    rest = descs[cfg.first_k_dense :]
+    plen = len(rest)
+    for cand in range(1, len(rest) + 1):
+        if len(rest) % cand == 0 and all(rest[i] == rest[i % cand] for i in range(len(rest))):
+            plen = cand
+            break
+    return prefix, rest[:plen], len(rest) // plen
+
+
+# --------------------------------------------------------------- sublayer
+
+def _mixer_specs(cfg, desc):
+    if desc.mixer == "gqa":
+        return attn.gqa_specs(cfg)
+    if desc.mixer == "mla":
+        return attn.mla_specs(cfg)
+    if desc.mixer == "rwkv6":
+        return ssm.rwkv6_specs(cfg)
+    if desc.mixer == "mamba":
+        return ssm.mamba_specs(cfg)
+    raise ValueError(desc.mixer)
+
+
+def _ffn_specs(cfg, desc):
+    if desc.ffn == "dense":
+        return mlp_specs(cfg.d_model, cfg.d_ff, cfg.act)
+    if desc.ffn == "moe":
+        return moe_mod.moe_specs(cfg)
+    if desc.ffn == "cmix":
+        return ssm.rwkv6_cmix_specs(cfg)
+    raise ValueError(desc.ffn)
+
+
+def sublayer_specs(cfg: ModelConfig, desc: LayerDesc) -> dict:
+    return {
+        "ln1": ParamSpec((cfg.d_model,), ("embed",), init="ones"),
+        "mixer": _mixer_specs(cfg, desc),
+        "ln2": ParamSpec((cfg.d_model,), ("embed",), init="ones"),
+        "ffn": _ffn_specs(cfg, desc),
+    }
+
+
+def sublayer_apply(cfg, desc, p, x, *, causal=True):
+    seq_ax = "seq" if desc.mixer in ("gqa", "mla") else None
+    x = shard_hint(x, "batch", seq_ax, None)
+    h = rms_norm(x, p["ln1"], cfg.norm_eps)
+    if desc.mixer == "gqa":
+        mix = attn.gqa_apply(p["mixer"], h, cfg, causal=causal)
+    elif desc.mixer == "mla":
+        mix = attn.mla_apply(p["mixer"], h, cfg, causal=causal)
+    elif desc.mixer == "rwkv6":
+        mix, _ = ssm.rwkv6_apply(p["mixer"], h, cfg)
+    else:  # mamba
+        mix, _ = ssm.mamba_apply(p["mixer"], h, cfg)
+    x = x + mix
+    h2 = rms_norm(x, p["ln2"], cfg.norm_eps)
+    if desc.ffn == "dense":
+        f = mlp_apply(p["ffn"], h2, cfg.act)
+    elif desc.ffn == "moe":
+        f = moe_mod.moe_apply(p["ffn"], h2, cfg)
+    else:  # cmix
+        f, _ = ssm.rwkv6_cmix_apply(p["ffn"], h2, cfg)
+    return x + f
+
+
+def sublayer_prefill(cfg, desc, p, x, cache_len):
+    """Full-sequence pass that also emits this layer's decode cache."""
+    cache = {}
+    seq_ax = "seq" if desc.mixer in ("gqa", "mla") else None
+    x = shard_hint(x, "batch", seq_ax, None)
+    h = rms_norm(x, p["ln1"], cfg.norm_eps)
+    if desc.mixer == "gqa":
+        mix, cache = attn.gqa_prefill(p["mixer"], h, cfg, cache_len)
+    elif desc.mixer == "mla":
+        mix, cache = attn.mla_prefill(p["mixer"], h, cfg, cache_len)
+    elif desc.mixer == "rwkv6":
+        mix, (state, last) = ssm.rwkv6_apply(p["mixer"], h, cfg)
+        cache = {"state": state, "prev_x": last}
+    else:
+        mix, c = ssm.mamba_apply(p["mixer"], h, cfg)
+        cache = c
+    x = x + mix
+    h2 = rms_norm(x, p["ln2"], cfg.norm_eps)
+    if desc.ffn == "dense":
+        f = mlp_apply(p["ffn"], h2, cfg.act)
+    elif desc.ffn == "moe":
+        f = moe_mod.moe_apply(p["ffn"], h2, cfg)
+    else:
+        f, last_c = ssm.rwkv6_cmix_apply(p["ffn"], h2, cfg)
+        cache["prev_x_c"] = last_c
+    return x + f, cache
+
+
+def sublayer_decode(cfg, desc, p, x, cache, pos):
+    new_cache = dict(cache)
+    x = shard_hint(x, "batch", None, None)
+    h = rms_norm(x, p["ln1"], cfg.norm_eps)
+    if desc.mixer == "gqa":
+        mix, kv = attn.gqa_decode(p["mixer"], h, cache, pos, cfg)
+        new_cache.update(kv)
+    elif desc.mixer == "mla":
+        mix, c = attn.mla_decode(p["mixer"], h, cache, pos, cfg)
+        new_cache.update(c)
+    elif desc.mixer == "rwkv6":
+        mix, c = ssm.rwkv6_decode(
+            p["mixer"], h, {"state": cache["state"], "prev_x": cache["prev_x"]}, cfg
+        )
+        new_cache.update(c)
+    else:
+        mix, c = ssm.mamba_apply(p["mixer"], h, cfg, {"h": cache["h"], "conv": cache["conv"]})
+        new_cache.update(c)
+    x = x + mix
+    h2 = rms_norm(x, p["ln2"], cfg.norm_eps)
+    if desc.ffn == "dense":
+        f = mlp_apply(p["ffn"], h2, cfg.act)
+    elif desc.ffn == "moe":
+        f = moe_mod.moe_apply(p["ffn"], h2, cfg)
+    else:
+        f, last_c = ssm.rwkv6_cmix_apply(p["ffn"], h2, cfg, prev_x=cache["prev_x_c"])
+        new_cache["prev_x_c"] = last_c
+    return x + f, new_cache
+
+
+def sublayer_cache_spec(cfg, desc, batch, cache_len, dtype):
+    """(shape, logical_axes, dtype) tree for this sublayer's decode cache."""
+    spec = {}
+    if desc.mixer == "gqa":
+        spec.update(attn.gqa_cache_spec(cfg, batch, cache_len, dtype))
+    elif desc.mixer == "mla":
+        spec.update(attn.mla_cache_spec(cfg, batch, cache_len, dtype))
+    elif desc.mixer == "rwkv6":
+        spec.update(ssm.rwkv6_cache_spec(cfg, batch, dtype))
+    else:
+        spec.update(ssm.mamba_cache_spec(cfg, batch, dtype))
+    if desc.ffn == "cmix":
+        spec["prev_x_c"] = ((batch, cfg.d_model), ("batch", None), dtype)
+    return spec
+
+
+# ------------------------------------------------------------------ stack
+
+def _stacked(specs, n: int):
+    return jax.tree_util.tree_map(
+        lambda s: ParamSpec((n,) + s.shape, ("layers",) + s.logical_axes, s.init, s.scale),
+        specs,
+        is_leaf=lambda x: isinstance(x, ParamSpec),
+    )
+
+
+def stack_specs(cfg: ModelConfig) -> dict:
+    prefix, pattern, n_blocks = stack_pattern(cfg)
+    specs: dict = {}
+    if prefix:
+        specs["prefix"] = {str(i): sublayer_specs(cfg, d) for i, d in enumerate(prefix)}
+    specs["blocks"] = _stacked(
+        {str(j): sublayer_specs(cfg, d) for j, d in enumerate(pattern)}, n_blocks
+    )
+    return specs
+
+
+def stack_apply(cfg: ModelConfig, params, x, *, causal=True):
+    prefix, pattern, _ = stack_pattern(cfg)
+    for i, d in enumerate(prefix):
+        x = sublayer_apply(cfg, d, params["prefix"][str(i)], x, causal=causal)
+
+    def block(h, bp):
+        for j, d in enumerate(pattern):
+            h = sublayer_apply(cfg, d, bp[str(j)], h, causal=causal)
+        return h, None
+
+    body = jax.checkpoint(block) if cfg.remat else block
+    x, _ = jax.lax.scan(body, x, params["blocks"])
+    return x
+
+
+def stack_cache_spec(cfg: ModelConfig, batch: int, cache_len: int, dtype):
+    prefix, pattern, n_blocks = stack_pattern(cfg)
+    spec: dict = {}
+    if prefix:
+        spec["prefix"] = {
+            str(i): sublayer_cache_spec(cfg, d, batch, cache_len, dtype)
+            for i, d in enumerate(prefix)
+        }
+    def stk(leaf):
+        shape, axes, dt = leaf
+        return ((n_blocks,) + shape, ("layers",) + axes, dt)
+
+    spec["blocks"] = jax.tree_util.tree_map(
+        stk,
+        {str(j): sublayer_cache_spec(cfg, d, batch, cache_len, dtype) for j, d in enumerate(pattern)},
+        is_leaf=lambda x: isinstance(x, tuple) and len(x) == 3 and isinstance(x[0], tuple),
+    )
+    return spec
+
+
+def stack_prefill(cfg: ModelConfig, params, x, cache_len: int):
+    prefix, pattern, _ = stack_pattern(cfg)
+    caches: dict = {}
+    if prefix:
+        caches["prefix"] = {}
+        for i, d in enumerate(prefix):
+            x, c = sublayer_prefill(cfg, d, params["prefix"][str(i)], x, cache_len)
+            caches["prefix"][str(i)] = c
+
+    def block(h, bp):
+        cs = {}
+        for j, d in enumerate(pattern):
+            h, cs[str(j)] = sublayer_prefill(cfg, d, bp[str(j)], h, cache_len)
+        return h, cs
+
+    body = jax.checkpoint(block) if cfg.remat else block
+    x, block_caches = jax.lax.scan(body, x, params["blocks"])
+    caches["blocks"] = block_caches
+    return x, caches
+
+
+def stack_decode(cfg: ModelConfig, params, x, cache, pos):
+    prefix, pattern, _ = stack_pattern(cfg)
+    new_cache: dict = {}
+    if prefix:
+        new_cache["prefix"] = {}
+        for i, d in enumerate(prefix):
+            x, c = sublayer_decode(cfg, d, params["prefix"][str(i)], x, cache["prefix"][str(i)], pos)
+            new_cache["prefix"][str(i)] = c
+
+    def block(h, inp):
+        bp, bc = inp
+        cs = {}
+        for j, d in enumerate(pattern):
+            h, cs[str(j)] = sublayer_decode(cfg, d, bp[str(j)], h, bc[str(j)], pos)
+        return h, cs
+
+    x, block_caches = jax.lax.scan(block, x, (params["blocks"], cache["blocks"]))
+    new_cache["blocks"] = block_caches
+    return x, new_cache

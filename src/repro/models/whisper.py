@@ -1,0 +1,188 @@
+"""Whisper-style encoder-decoder backbone (audio frontend stubbed).
+
+Per the assignment, the conv/mel frontend is a stub: ``enc_embeds``
+(B, S_frames, d_model) arrive precomputed. The encoder is a non-causal
+attention stack; the decoder interleaves causal self-attention, cross-attention
+into the encoder output, and a dense FFN. Decoder length is bounded by
+``max_target_positions`` (448); the *serving* shapes put their seq_len on the
+encoder side (long-audio prefill / decode against a 32k-frame cross cache).
+
+RoPE replaces Whisper's learned/sinusoidal positions (backbone-only fidelity;
+recorded in DESIGN.md §9).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import attention as attn
+from repro.models.common import (
+    ParamSpec,
+    full_attention,
+    decode_attention,
+    mlp_apply,
+    mlp_specs,
+    rms_norm,
+)
+from repro.models.transformer import _stacked
+from repro.sharding.ctx import shard_hint
+
+
+def _cross_specs(cfg: ModelConfig) -> dict:
+    d, h, kh, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    return {
+        "wq": ParamSpec((d, h, hd), ("embed", "heads", "head_dim")),
+        "wk": ParamSpec((d, kh, hd), ("embed", "kv_heads", "head_dim")),
+        "wv": ParamSpec((d, kh, hd), ("embed", "kv_heads", "head_dim")),
+        "wo": ParamSpec((h, hd, d), ("heads", "head_dim", "embed")),
+    }
+
+
+def _cross_kv(p, enc_out):
+    k = jnp.einsum("bsd,dhk->bshk", enc_out, p["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", enc_out, p["wv"])
+    return k, v
+
+
+def _cross_apply(p, x, k, v, cfg):
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    o = full_attention(q, k, v, causal=False, cfg=cfg)
+    return jnp.einsum("bshk,hkd->bsd", o, p["wo"])
+
+
+def _cross_decode(p, x, k, v):
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    o = decode_attention(q, k, v, jnp.int32(k.shape[1] - 1))  # full source visible
+    return jnp.einsum("bshk,hkd->bsd", o, p["wo"])
+
+
+def _enc_layer_specs(cfg):
+    return {
+        "ln1": ParamSpec((cfg.d_model,), ("embed",), init="ones"),
+        "attn": attn.gqa_specs(cfg),
+        "ln2": ParamSpec((cfg.d_model,), ("embed",), init="ones"),
+        "ffn": mlp_specs(cfg.d_model, cfg.d_ff, cfg.act),
+    }
+
+
+def _dec_layer_specs(cfg):
+    return {
+        "ln1": ParamSpec((cfg.d_model,), ("embed",), init="ones"),
+        "self": attn.gqa_specs(cfg),
+        "ln_x": ParamSpec((cfg.d_model,), ("embed",), init="ones"),
+        "cross": _cross_specs(cfg),
+        "ln2": ParamSpec((cfg.d_model,), ("embed",), init="ones"),
+        "ffn": mlp_specs(cfg.d_model, cfg.d_ff, cfg.act),
+    }
+
+
+def whisper_specs(cfg: ModelConfig) -> dict:
+    d, v = cfg.d_model, cfg.vocab_size
+    return {
+        "encoder": _stacked(_enc_layer_specs(cfg), cfg.n_encoder_layers),
+        "enc_ln_f": ParamSpec((d,), ("embed",), init="ones"),
+        "decoder": _stacked(_dec_layer_specs(cfg), cfg.n_layers),
+        "embed": ParamSpec((v, d), ("vocab", "embed")),
+        "ln_f": ParamSpec((d,), ("embed",), init="ones"),
+        "unembed": ParamSpec((d, v), ("embed", "vocab")),
+    }
+
+
+def encode(cfg: ModelConfig, params, enc_embeds):
+    def layer(h, p):
+        h = shard_hint(h, "batch", None, None)
+        a = attn.gqa_apply(p["attn"], rms_norm(h, p["ln1"], cfg.norm_eps), cfg, causal=False)
+        h = h + a
+        f = mlp_apply(p["ffn"], rms_norm(h, p["ln2"], cfg.norm_eps), cfg.act)
+        return h + f, None
+
+    body = jax.checkpoint(layer) if cfg.remat else layer
+    h, _ = jax.lax.scan(body, enc_embeds, params["encoder"])
+    return rms_norm(h, params["enc_ln_f"], cfg.norm_eps)
+
+
+def _dec_layer(cfg, p, h, enc_out, *, causal=True):
+    h = shard_hint(h, "batch", None, None)
+    a = attn.gqa_apply(p["self"], rms_norm(h, p["ln1"], cfg.norm_eps), cfg, causal=causal)
+    h = h + a
+    k, v = _cross_kv(p["cross"], enc_out)
+    c = _cross_apply(p["cross"], rms_norm(h, p["ln_x"], cfg.norm_eps), k, v, cfg)
+    h = h + c
+    f = mlp_apply(p["ffn"], rms_norm(h, p["ln2"], cfg.norm_eps), cfg.act)
+    return h + f
+
+
+def hidden(cfg: ModelConfig, params, batch):
+    """batch: {"enc_embeds": (B, S_src, d), "tokens": (B, S_tgt)} -> (B, S_tgt, d)."""
+    cdt = jnp.dtype(cfg.compute_dtype)
+    enc_out = encode(cfg, params, batch["enc_embeds"].astype(cdt))
+    x = jnp.take(params["embed"], batch["tokens"], axis=0).astype(cdt)
+
+    def layer(h, p):
+        return _dec_layer(cfg, p, h, enc_out), None
+
+    body = jax.checkpoint(layer) if cfg.remat else layer
+    x, _ = jax.lax.scan(body, x, params["decoder"])
+    return rms_norm(x, params["ln_f"], cfg.norm_eps)
+
+
+def apply(cfg: ModelConfig, params, batch):
+    return (hidden(cfg, params, batch) @ params["unembed"]).astype(jnp.float32)
+
+
+def cache_spec(cfg: ModelConfig, batch: int, src_len: int, dtype):
+    kh, hd = cfg.n_kv_heads, cfg.head_dim
+    tgt = cfg.max_target_positions
+    L = cfg.n_layers
+    return {
+        "self_k": ((L, batch, tgt, kh, hd), ("layers", "batch", None, "kv_heads", "head_dim"), dtype),
+        "self_v": ((L, batch, tgt, kh, hd), ("layers", "batch", None, "kv_heads", "head_dim"), dtype),
+        "cross_k": ((L, batch, src_len, kh, hd), ("layers", "batch", "kv_len", "kv_heads", "head_dim"), dtype),
+        "cross_v": ((L, batch, src_len, kh, hd), ("layers", "batch", "kv_len", "kv_heads", "head_dim"), dtype),
+    }
+
+
+def prefill(cfg: ModelConfig, params, batch):
+    """Encode source + run decoder prompt; returns (logits, cache)."""
+    cdt = jnp.dtype(cfg.compute_dtype)
+    enc_out = encode(cfg, params, batch["enc_embeds"].astype(cdt))
+    tokens = batch["tokens"]
+    b, s = tokens.shape
+    tgt = cfg.max_target_positions
+    x = jnp.take(params["embed"], tokens, axis=0).astype(cdt)
+
+    def layer(h, p):
+        a, kv = attn.gqa_prefill(p["self"], rms_norm(h, p["ln1"], cfg.norm_eps), cfg, tgt)
+        h = h + a
+        ck, cv = _cross_kv(p["cross"], enc_out)
+        c = _cross_apply(p["cross"], rms_norm(h, p["ln_x"], cfg.norm_eps), ck, cv, cfg)
+        h = h + c
+        f = mlp_apply(p["ffn"], rms_norm(h, p["ln2"], cfg.norm_eps), cfg.act)
+        return h + f, {"self_k": kv["k"], "self_v": kv["v"], "cross_k": ck, "cross_v": cv}
+
+    x, caches = jax.lax.scan(layer, x, params["decoder"])
+    x = rms_norm(x, params["ln_f"], cfg.norm_eps)
+    return (x @ params["unembed"]).astype(jnp.float32), caches
+
+
+def decode_step(cfg: ModelConfig, params, cache, tokens, pos):
+    """tokens: (B, 1) decoder token at position ``pos``."""
+    cdt = jnp.dtype(cfg.compute_dtype)
+    x = jnp.take(params["embed"], tokens, axis=0).astype(cdt)
+
+    def layer(h, inp):
+        p, c = inp
+        a, kv = attn.gqa_decode(
+            p["self"], rms_norm(h, p["ln1"], cfg.norm_eps),
+            {"k": c["self_k"], "v": c["self_v"]}, pos, cfg,
+        )
+        h = h + a
+        cr = _cross_decode(p["cross"], rms_norm(h, p["ln_x"], cfg.norm_eps), c["cross_k"], c["cross_v"])
+        h = h + cr
+        f = mlp_apply(p["ffn"], rms_norm(h, p["ln2"], cfg.norm_eps), cfg.act)
+        return h + f, {"self_k": kv["k"], "self_v": kv["v"], "cross_k": c["cross_k"], "cross_v": c["cross_v"]}
+
+    x, new_cache = jax.lax.scan(layer, x, (params["decoder"], cache))
+    x = rms_norm(x, params["ln_f"], cfg.norm_eps)
+    return (x[:, -1, :] @ params["unembed"]).astype(jnp.float32), new_cache

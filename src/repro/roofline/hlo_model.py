@@ -1,0 +1,332 @@
+"""Structural HLO cost model.
+
+XLA:CPU's ``compiled.cost_analysis()`` counts while-loop bodies **once**
+(calibrated in tests/test_roofline.py), which under-counts every lax.scan —
+and all our stacks/losses/SSMs are scans. This module re-derives per-device
+FLOPs, HBM traffic and collective bytes directly from the post-SPMD HLO text:
+
+  * the module is split into computations with a per-computation symbol table
+    (every op line defines ``%name = TYPE op(...)``),
+  * dot FLOPs = 2 * prod(result dims) * prod(lhs contracting dims),
+  * HBM traffic is modelled per *top-level op*: result + operand bytes
+    (fusion internals excluded — a fused kernel touches HBM at its boundary),
+  * collective bytes use ring factors (all-reduce 2(n-1)/n, gather/scatter
+    (n-1)/n, permute 1 hop) with group sizes parsed from replica_groups,
+  * a memoised DFS from ENTRY multiplies ``while`` bodies by their trip count
+    (largest s32 constant compared against in the loop condition — exact for
+    lax.scan/fori_loop) and adds ``fusion``/``call``/``conditional`` callees.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from collections import defaultdict
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "s32": 4, "s16": 2, "s8": 1, "u64": 8, "u32": 4, "u16": 2,
+    "u8": 1, "pred": 1, "c64": 8, "c128": 16, "s4": 1, "u4": 1,
+}
+
+_COMP_HEADER = re.compile(r"^(ENTRY\s+)?%?([\w\.\-_]+)\s*\(.*\)\s*->.*\{")
+# type may be a tuple "(s32[], bf16[..]{..}, /*index=5*/f32[..])" — match to the
+# first ')' (jax-emitted tuples are flat), else a non-space token.
+_OP_LINE = re.compile(r"^\s*(?:ROOT\s+)?%([\w\.\-_]+)\s*=\s*(\([^)]*\)|\S+)\s+([\w\-]+)\(")
+_TRIP_CFG = re.compile(r"\"known_trip_count\":\{\"n\":\"(\d+)\"\}")
+_SHAPE = re.compile(r"(\w+)\[([\d,]*)\]")
+_CALLS = re.compile(r"(?:calls|to_apply|body)=%?([\w\.\-_]+)")
+_COND = re.compile(r"condition=%?([\w\.\-_]+)")
+_BODY = re.compile(r"body=%?([\w\.\-_]+)")
+_CONTRACT = re.compile(r"lhs_contracting_dims=\{([\d,]*)\}")
+_OPERANDS = re.compile(r"%([\w\.\-_]+)")
+_IOTA_GROUPS = re.compile(r"replica_groups=\[(\d+),(\d+)\]<=\[")
+_LIST_GROUPS = re.compile(r"replica_groups=\{\{([^}]*)\}")
+_CONST = re.compile(r"constant\((\d+)\)")
+
+_COLL_OPS = {
+    "all-gather", "all-reduce", "reduce-scatter", "all-to-all", "collective-permute",
+    "all-gather-start", "all-reduce-start", "collective-permute-start",
+}
+
+# Fusion-optimistic HBM model: XLA:CPU fuses far less than XLA:TPU, so
+# charging every top-level op would overstate TPU HBM traffic ~10x. We charge
+# only ops that materialise buffers on TPU too: matmuls, fusions (at their
+# boundary), reductions, data movement, and collectives. Elementwise chains,
+# broadcasts, selects, converts and compares are assumed fused into neighbours.
+_TRAFFIC_OPS = {
+    "fusion", "reduce", "reduce-window", "scatter", "gather",
+    "dynamic-update-slice", "dynamic-slice", "transpose", "copy",
+    "concatenate", "pad", "sort", "reverse", "select-and-scatter", "iota",
+}
+
+
+def _shape_bytes(type_str: str) -> int:
+    total = 0
+    for m in _SHAPE.finditer(type_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _shape_dims(type_str: str) -> list[int]:
+    m = _SHAPE.search(type_str)
+    if not m or not m.group(2):
+        return []
+    return [int(d) for d in m.group(2).split(",")]
+
+
+@dataclasses.dataclass
+class _Op:
+    name: str
+    type_str: str
+    kind: str
+    line: str
+
+
+@dataclasses.dataclass
+class _Computation:
+    name: str
+    ops: list[_Op]
+    symbols: dict  # name -> type_str
+
+
+def parse_module(hlo: str) -> dict[str, _Computation]:
+    comps: dict[str, _Computation] = {}
+    cur: _Computation | None = None
+    entry_name = None
+    for line in hlo.splitlines():
+        h = _COMP_HEADER.match(line.strip())
+        if h and line.rstrip().endswith("{"):
+            cur = _Computation(h.group(2), [], {})
+            comps[cur.name] = cur
+            if h.group(1):
+                entry_name = cur.name
+            continue
+        if cur is None:
+            continue
+        if line.strip() == "}":
+            cur = None
+            continue
+        m = _OP_LINE.match(line)
+        if m:
+            name, type_str, kind = m.groups()
+            cur.ops.append(_Op(name, type_str, kind, line.strip()))
+            cur.symbols[name] = type_str
+    if entry_name is not None:
+        comps["__entry__"] = comps[entry_name]
+    return comps
+
+
+def _group_size(line: str) -> int:
+    m = _IOTA_GROUPS.search(line)
+    if m:
+        return int(m.group(2))
+    m = _LIST_GROUPS.search(line)
+    if m:
+        return len(m.group(1).split(","))
+    return 2
+
+
+def _trip_count(cond: _Computation) -> int:
+    """lax.scan/fori conditions compare the counter against a constant."""
+    best = 1
+    for op in cond.ops:
+        for c in _CONST.findall(op.line):
+            best = max(best, int(c))
+    return best
+
+
+@dataclasses.dataclass
+class HloCost:
+    flops: float = 0.0
+    traffic_bytes: float = 0.0
+    coll_ring_bytes: float = 0.0
+    coll_raw: dict = dataclasses.field(default_factory=dict)
+    coll_counts: dict = dataclasses.field(default_factory=dict)
+    traffic_by: dict = dataclasses.field(default_factory=dict)
+
+    def add_traffic(self, kind: str, nbytes: float) -> None:
+        self.traffic_bytes += nbytes
+        self.traffic_by[kind] = self.traffic_by.get(kind, 0.0) + nbytes
+
+    def scaled(self, k: float) -> "HloCost":
+        return HloCost(
+            self.flops * k,
+            self.traffic_bytes * k,
+            self.coll_ring_bytes * k,
+            {a: b * k for a, b in self.coll_raw.items()},
+            {a: b * k for a, b in self.coll_counts.items()},
+            {a: b * k for a, b in self.traffic_by.items()},
+        )
+
+    def __iadd__(self, o: "HloCost"):
+        self.flops += o.flops
+        self.traffic_bytes += o.traffic_bytes
+        self.coll_ring_bytes += o.coll_ring_bytes
+        for k, v in o.coll_raw.items():
+            self.coll_raw[k] = self.coll_raw.get(k, 0.0) + v
+        for k, v in o.coll_counts.items():
+            self.coll_counts[k] = self.coll_counts.get(k, 0.0) + v
+        for k, v in o.traffic_by.items():
+            self.traffic_by[k] = self.traffic_by.get(k, 0.0) + v
+        return self
+
+
+def _local_cost(
+    comp: _Computation, fused: bool = False, comps: dict | None = None
+) -> tuple[HloCost, list[tuple[str, float]]]:
+    """Own cost + list of (callee, multiplier). ``fused`` computations (bodies
+    of fusion ops) contribute FLOPs but no HBM traffic — their buffers live in
+    registers/VMEM; the fusion node's boundary is charged by the caller."""
+    cost = HloCost()
+    calls: list[tuple[str, float]] = []
+    for op in comp.ops:
+        kind = op.kind
+        if kind == "dot":
+            out_dims = _shape_dims(op.type_str)
+            k = 1
+            cm = _CONTRACT.search(op.line)
+            # lhs operand: first %ref inside the parens after 'dot('
+            args = op.line.split("dot(", 1)[1]
+            refs = _OPERANDS.findall(args)
+            if cm and refs:
+                lhs_t = comp.symbols.get(refs[0], "")
+                lhs_dims = _shape_dims(lhs_t)
+                if cm.group(1):
+                    for ci in cm.group(1).split(","):
+                        ci = int(ci)
+                        if ci < len(lhs_dims):
+                            k *= lhs_dims[ci]
+            out_n = 1
+            for d in out_dims:
+                out_n *= d
+            cost.flops += 2.0 * out_n * k
+            if not fused:
+                cost.add_traffic("dot", _shape_bytes(op.type_str) + sum(
+                    _shape_bytes(comp.symbols.get(r, "")) for r in refs[:2]
+                ))
+            continue
+        base = kind.replace("-start", "")
+        if base in ("all-gather", "all-reduce", "reduce-scatter", "all-to-all", "collective-permute") and kind != "all-reduce-done":
+            nbytes = _shape_bytes(op.type_str)
+            g = _group_size(op.line)
+            if g > 1:
+                cost.coll_counts[base] = cost.coll_counts.get(base, 0) + 1
+                cost.coll_raw[base] = cost.coll_raw.get(base, 0.0) + nbytes
+                if base == "all-reduce":
+                    cost.coll_ring_bytes += 2.0 * nbytes * (g - 1) / g
+                elif base == "collective-permute":
+                    cost.coll_ring_bytes += nbytes
+                else:
+                    cost.coll_ring_bytes += nbytes * (g - 1) / g
+            cost.add_traffic("collective", 2.0 * nbytes)
+            continue
+        if kind == "while":
+            b = _BODY.search(op.line)
+            c = _COND.search(op.line)
+            t = _TRIP_CFG.search(op.line)  # exact when XLA annotates it
+            trip = t.group(1) if t else ""
+            calls.append(
+                ("__while__:" + (b.group(1) if b else "") + ":" + (c.group(1) if c else "") + ":" + trip, 1.0)
+            )
+            continue
+        if kind in ("fusion", "call", "conditional", "async-start"):
+            for callee in _CALLS.findall(op.line):
+                calls.append((("__fused__:" if kind == "fusion" else "") + callee, 1.0))
+        if fused or kind not in _TRAFFIC_OPS:
+            continue
+        args = op.line.split("(", 1)[1] if "(" in op.line else ""
+        refs = _OPERANDS.findall(args.split(")")[0]) if args else []
+        rbytes = _shape_bytes(op.type_str)
+        if kind == "dynamic-update-slice":
+            # in-place update: read+write the *slice*, not the whole buffer
+            upd = _shape_bytes(comp.symbols.get(refs[1], "")) if len(refs) > 1 else rbytes
+            cost.add_traffic(kind, 2.0 * upd)
+        elif kind in ("dynamic-slice", "transpose", "copy", "concatenate",
+                      "pad", "reverse", "sort", "gather"):
+            cost.add_traffic(kind, 2.0 * rbytes)  # read + write of the moved data
+        elif kind == "scatter":
+            upd = _shape_bytes(comp.symbols.get(refs[1], "")) if len(refs) > 1 else rbytes
+            cost.add_traffic(kind, 2.0 * upd)
+        elif kind in ("reduce", "reduce-window", "select-and-scatter"):
+            op0 = _shape_bytes(comp.symbols.get(refs[0], "")) if refs else 0
+            cost.add_traffic(kind, op0 + rbytes)
+        elif kind == "iota":
+            cost.add_traffic(kind, rbytes)
+        else:  # fusion boundary
+            km = re.search(r"kind=k(\w+)", op.line)
+            fkind = km.group(1) if km else "Loop"
+            # in-place scan-buffer update fused with elementwise ops: charge
+            # the updated slice, not the aliased whole buffer
+            dus_bytes = 0
+            if comps is not None:
+                cm = _CALLS.search(op.line)
+                callee = comps.get(cm.group(1)) if cm else None
+                if callee is not None:
+                    for o2 in callee.ops:
+                        if o2.kind == "dynamic-update-slice":
+                            a2 = o2.line.split("(", 1)[1]
+                            r2 = _OPERANDS.findall(a2.split(")")[0])
+                            if len(r2) > 1:
+                                dus_bytes = _shape_bytes(callee.symbols.get(r2[1], ""))
+                            break
+            if dus_bytes:
+                cost.add_traffic("fusion", 2.0 * dus_bytes)
+                continue
+            if fkind == "Input":
+                # reduction fusion: genuinely streams its operands
+                charge = rbytes + sum(
+                    _shape_bytes(comp.symbols.get(r, "")) for r in refs[:4]
+                )
+            else:
+                # kLoop/kOutput: elementwise-ish; operands that dwarf the
+                # result are sliced internally (stacked scan buffers) — cap
+                # each operand read at the result size.
+                charge = rbytes + sum(
+                    min(_shape_bytes(comp.symbols.get(r, "")), rbytes) for r in refs[:4]
+                )
+            cost.add_traffic("fusion", charge)
+    return cost, calls
+
+
+def module_cost(hlo: str) -> HloCost:
+    comps = parse_module(hlo)
+    if "__entry__" not in comps:
+        return HloCost()
+    memo: dict[tuple[str, bool], HloCost] = {}
+
+    def visit(name: str, stack=(), fused: bool = False) -> HloCost:
+        key = (name, fused)
+        if key in memo:
+            return memo[key]
+        comp = comps.get(name)
+        if comp is None or name in stack:
+            return HloCost()
+        cost, calls = _local_cost(comp, fused=fused, comps=comps)
+        total = HloCost()
+        total += cost
+        for callee, mult in calls:
+            if callee.startswith("__while__:"):
+                _, body, cond, trip_s = callee.split(":")
+                if trip_s:
+                    trip = int(trip_s)  # XLA's known_trip_count annotation
+                else:
+                    trip = _trip_count(comps[cond]) if cond in comps else 1
+                inner = HloCost()
+                inner += visit(body, stack + (name,), fused)
+                inner += visit(cond, stack + (name,), fused)
+                total += inner.scaled(float(trip))
+            elif callee.startswith("__fused__:"):
+                total += visit(callee.split(":", 1)[1], stack + (name,), True)
+            else:
+                total += visit(callee, stack + (name,), fused)
+        memo[key] = total
+        return total
+
+    return visit(comps["__entry__"].name)

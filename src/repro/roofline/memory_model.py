@@ -1,0 +1,145 @@
+"""Analytic per-device memory estimate for each (arch x shape x mesh) cell.
+
+XLA:CPU's ``memory_analysis()`` is the letter of the dry-run, but two CPU-only
+behaviours inflate it far beyond a TPU compile of the same module: (1) the CPU
+backend has no native bf16 GEMM, so it materialises f32 copies of bf16
+weights/caches and hoists them out of loops; (2) its buffer assignment keeps
+loop transients live that TPU's scheduling reuses. We therefore report three
+numbers per cell (EXPERIMENTS.md §Dry-run):
+
+  * xla_cpu_peak   — raw memory_analysis (args + temp + out − alias)
+  * static_live    — args + outputs − donated aliases (exact, artifact-free)
+  * analytic_peak  — static_live + the transient model below (the number a
+                     TPU HBM budget is judged against; every term is stated)
+
+Transient model (per device, bf16 activations, f32 where noted):
+  train:   remat carry stash  n_blocks * B_micro * S * d * 2B
+         + f32 grad-accum buffer (params_local * 4B, when grad_accum > 1)
+         + 2x the largest single-layer working set (fwd + bwd recompute)
+  prefill: 2x largest single-layer working set
+  decode:  largest layer working set (scores f32 + partial sums)
+
+Largest-layer working set = max(attention scores, MLP hidden, MoE buffers,
+SSM scan residuals, loss-chunk logits), each with its actual sharding.
+"""
+from __future__ import annotations
+
+import math
+
+from repro.configs.base import ModelConfig, ShapeConfig
+
+
+def _ceil_div(a: int, b: int) -> int:
+    return -(-a // b)
+
+
+def _shard(dim: int, ways: int) -> int:
+    """Local size after sharding `dim` over `ways` (replicated if indivisible)."""
+    return dim // ways if ways > 1 and dim % ways == 0 and dim >= ways else dim
+
+
+def estimate_bytes(
+    cfg: ModelConfig,
+    shape: ShapeConfig,
+    *,
+    accum: int = 1,
+    multi_pod: bool = False,
+    static_live: int = 0,
+) -> dict:
+    dp = 32 if multi_pod else 16
+    tp = 16
+    B, S = shape.global_batch, shape.seq_len
+    d = cfg.d_model
+    b_loc = _shard(B, dp) if B % dp == 0 else B
+    b_micro = max(1, b_loc // accum) if shape.kind == "train" else b_loc
+
+    if cfg.encoder_decoder and shape.kind == "train":
+        seq = S + cfg.max_target_positions
+    elif cfg.encoder_decoder and shape.kind == "decode":
+        seq = 1
+    else:
+        seq = S if shape.kind != "decode" else 1
+
+    h_loc = _shard(cfg.n_heads, tp)
+    hd = cfg.head_dim
+    f_loc = _shard(cfg.d_ff, tp)
+    v_loc = _shard(cfg.vocab_size, tp)
+
+    # ---- per-layer working sets -------------------------------------------
+    ws = []
+    if not cfg.ssm_kind or cfg.attn_period:
+        if shape.kind == "decode":
+            # decode scores (B, KH, G, S_cache) f32 + bf16 p
+            kh = cfg.n_kv_heads
+            g = cfg.n_heads // kh
+            ws.append(b_loc * kh * g * S * 6)
+        else:
+            use_chunked = seq > cfg.attn_chunk_threshold
+            cq = min(cfg.attn_chunk_q, seq) if use_chunked else seq
+            ck = min(cfg.attn_chunk_k, seq) if use_chunked else seq
+            # q-seq takes the model axis when heads couldn't shard
+            q_len_loc = _shard(cq, tp) if h_loc == cfg.n_heads else cq
+            score = b_micro * h_loc * q_len_loc * ck * 4 * 2  # s + p, f32
+            kv = b_micro * seq * cfg.n_kv_heads * hd * 2 * 2  # grouped: no repeat
+            ws.append(score + kv)
+    if cfg.ssm_kind == "rwkv6":
+        # r,k,v,g,w in f32 time-major + chunk-boundary states
+        ws.append(5 * b_micro * seq * h_loc * hd * 4 + (seq // 256 + 1) * b_micro * h_loc * hd * hd * 4)
+    if cfg.ssm_kind == "mamba":
+        di_loc = _shard(cfg.mamba_expand * d, tp)
+        ns = cfg.mamba_d_state
+        # discretisation is in-step (per 256-chunk): bf16 dt/u streams +
+        # chunk-boundary f32 states + one chunk of f32 da/dbu
+        ws.append(
+            2 * b_micro * seq * di_loc * 2
+            + (seq // 256 + 1) * b_micro * di_loc * ns * 4
+            + 2 * b_micro * 256 * di_loc * ns * 8
+        )
+    if cfg.n_experts:
+        e_loc = _shard(cfg.n_experts, tp)
+        f_exp = cfg.moe_d_ff or cfg.d_ff
+        f_exp_loc = f_exp if cfg.n_experts % tp == 0 else _shard(f_exp, tp)
+        tokens_loc = b_micro * seq
+        cap = max(8, int(tokens_loc * cfg.experts_per_token * cfg.capacity_factor / cfg.n_experts))
+        ws.append(e_loc * cap * (d + f_exp_loc) * 2 * 2)
+    # dense MLP hidden
+    ws.append(b_micro * seq * f_loc * 2 * 3)
+    # loss chunk logits (train only)
+    if shape.kind == "train":
+        ws.append(b_micro * min(512, seq) * v_loc * 4 * 2)
+
+    working = max(ws)
+
+    transient = 0
+    if shape.kind == "train":
+        from repro.models.transformer import stack_pattern
+
+        if cfg.encoder_decoder:
+            n_blocks = cfg.n_layers + cfg.n_encoder_layers
+            seq_sharded = False
+        else:
+            _, pattern, n_blocks = stack_pattern(cfg)
+            n_blocks += cfg.first_k_dense
+            seq_sharded = pattern[0].mixer in ("gqa", "mla") and seq % tp == 0
+        stash = n_blocks * b_micro * seq * d * 2
+        if seq_sharded:
+            stash //= tp
+        grad_buf = 0
+        if accum > 1:
+            # grad accumulator, sharded like params (~256-way); >300B configs
+            # accumulate in bf16 (train_step.accum_dtype)
+            from repro.models.model import build
+
+            n = build(cfg).n_params
+            grad_buf = n * (2 if n > 3e11 else 4) // (dp * tp)
+        transient = stash + grad_buf + 2 * working
+    elif shape.kind == "prefill":
+        transient = 2 * working
+    else:
+        transient = working
+
+    return {
+        "working_set_bytes": int(working),
+        "transient_bytes": int(transient),
+        "analytic_peak_bytes": int(static_live + transient),
+    }

@@ -1,0 +1,6 @@
+"""Serving layer: the paper's cache policies drive the content/prefix cache."""
+from repro.serving.content_cache import ContentCache
+from repro.serving.engine import Request, Result, ServeEngine
+from repro.serving.scheduler import Scheduler, SchedulerConfig
+
+__all__ = ["ContentCache", "Request", "Result", "ServeEngine", "Scheduler", "SchedulerConfig"]

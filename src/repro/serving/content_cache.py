@@ -1,0 +1,100 @@
+"""The paper's technique as a serving feature: a content/prefix cache whose
+admission + eviction policy is pluggable (LRU / LFU / PLFU / PLFUA / WLFU /
+TinyLFU — the reference implementations from repro.core.policies drive the
+decisions; this layer adds payload storage and energy accounting).
+
+A "content object" is whatever the engine wants to reuse per object id:
+a prefill KV/latent/SSM-state cache, an encoder output, or generated text.
+A hit skips prefill entirely — the CHR-vs-management-cost trade-off from the
+paper, now priced in model FLOPs (core.energy.serving_energy)."""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable
+
+from repro.core import policies as pol_mod
+
+
+@dataclasses.dataclass
+class CacheStats:
+    hits: int = 0
+    misses: int = 0
+    inserts: int = 0
+    evictions: int = 0
+    mgmt_time_s: float = 0.0  # the paper's metric: policy-management CPU time
+    bytes_stored: int = 0
+
+    @property
+    def chr(self) -> float:
+        total = self.hits + self.misses
+        return self.hits / total if total else 0.0
+
+
+class ContentCache:
+    """Fixed-capacity object cache with a paper-policy brain.
+
+    The policy decides *membership*; this class keeps the payloads in sync
+    with the policy's view and meters the management CPU time (the paper's
+    §3 isolation: management only, payload moves are the engine's business).
+    """
+
+    def __init__(
+        self,
+        capacity: int,
+        policy: str = "plfua",
+        *,
+        n_objects: int | None = None,
+        hot: list[int] | None = None,
+        window: int | None = None,
+        size_of: Callable[[Any], int] = lambda p: 1,
+    ):
+        self.policy = pol_mod.make_policy(
+            policy, capacity, n_objects=n_objects, hot=hot, window=window
+        )
+        self._payloads: dict[int, Any] = {}
+        self._size_of = size_of
+        self.stats = CacheStats()
+
+    def lookup(self, obj_id: int) -> Any | None:
+        """One request against the cache. Returns the payload on a hit.
+
+        On a miss the policy has already decided whether the object is
+        *admitted* — call ``offer`` with the payload afterwards to store it.
+        """
+        t0 = time.perf_counter()
+        hit = self.policy.request(obj_id)
+        self.stats.mgmt_time_s += time.perf_counter() - t0
+        if hit and obj_id in self._payloads:
+            self.stats.hits += 1
+            return self._payloads[obj_id]
+        self.stats.misses += 1
+        return None
+
+    def offer(self, obj_id: int, payload: Any) -> bool:
+        """Store the payload iff the policy admitted the object on lookup."""
+        t0 = time.perf_counter()
+        admitted = self.policy.contains(obj_id)
+        self.stats.mgmt_time_s += time.perf_counter() - t0
+        if not admitted:
+            return False
+        self._payloads[obj_id] = payload
+        self.stats.inserts += 1
+        self.stats.bytes_stored += self._size_of(payload)
+        self._sync_evictions()
+        return True
+
+    def _sync_evictions(self):
+        """Drop payloads the policy has evicted since the last sync."""
+        dead = [k for k in self._payloads if not self.policy.contains(k)]
+        for k in dead:
+            self.stats.bytes_stored -= self._size_of(self._payloads[k])
+            del self._payloads[k]
+            self.stats.evictions += 1
+
+    @property
+    def metadata_entries(self) -> int:
+        return self.policy.metadata_entries
+
+    def __len__(self) -> int:
+        return len(self._payloads)

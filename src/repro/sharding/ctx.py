@@ -1,0 +1,54 @@
+"""Activation-sharding hints (with_sharding_constraint plumbing).
+
+GSPMD propagates parameter/input shardings, but inside scanned layer bodies it
+can legally pick pathological layouts (e.g. replicate the batch and pay a
+256-way all-gather of the attention scores). Model code therefore marks the
+key activations with *logical* axis names via ``shard_hint``; when the
+dry-run/launcher installs ``activation_rules(mesh, rules)``, the hint becomes a
+``with_sharding_constraint`` using the same logical->mesh mapping (and the same
+divisibility fallbacks) as the parameter shardings. Outside any context —
+smoke tests, single-device runs — hints are no-ops, so the model code never
+depends on a mesh.
+"""
+from __future__ import annotations
+
+import contextlib
+import contextvars
+
+import jax
+from jax.sharding import Mesh, NamedSharding
+
+from repro.sharding.rules import partition_spec
+
+_ACTIVE: contextvars.ContextVar = contextvars.ContextVar("repro_act_rules", default=None)
+
+
+@contextlib.contextmanager
+def activation_rules(mesh: Mesh, rules):
+    token = _ACTIVE.set((mesh, rules))
+    try:
+        yield
+    finally:
+        _ACTIVE.reset(token)
+
+
+def current_rules():
+    """(mesh, rules) when an activation_rules context is installed, else None.
+    Model code uses this to switch manual-SPMD islands (shard_map) on."""
+    return _ACTIVE.get()
+
+
+def shard_hint(x: jax.Array, *logical_axes: str | None) -> jax.Array:
+    """Constrain ``x``'s sharding by logical axis names ('batch', 'heads', ...).
+
+    No-op without an active activation_rules context. Axis count must match
+    x.ndim; unshardable dims fall back to replicated exactly like params.
+    """
+    ctx = _ACTIVE.get()
+    if ctx is None:
+        return x
+    mesh, rules = ctx
+    if len(logical_axes) != x.ndim:
+        raise ValueError(f"shard_hint: {len(logical_axes)} axes for ndim {x.ndim}")
+    spec = partition_spec(x.shape, tuple(logical_axes), rules, mesh)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))

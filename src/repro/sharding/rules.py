@@ -1,0 +1,162 @@
+"""Logical-axis -> mesh-axis sharding rules (MaxText-style), with automatic
+per-tensor fallback.
+
+Every parameter / cache / batch tensor carries logical axis names (see
+models/common.ParamSpec and *_cache_spec). ``partition_spec`` walks a tensor's
+dims in order and assigns the mapped mesh axes, skipping any assignment whose
+dimension is not divisible by the mesh-axis size or whose mesh axis was
+already consumed by an earlier dim of the same tensor. That one rule encodes
+all the per-arch fallbacks:
+
+  * smollm 15 q-heads / 5 kv-heads  -> head dims replicate, d_ff/embed shard
+  * granite/whisper vocab not /16   -> vocab replicates
+  * grok 8 experts on a 16-way axis -> experts replicate, TP inside experts
+  * deepseek 160 experts            -> expert-parallel over "model"
+  * long_500k batch=1               -> batch replicates, kv_len shards (SP)
+
+Regimes:
+  train/prefill: FSDP ("embed" -> data) + TP ("heads/mlp/vocab/experts" -> model)
+  decode:        TP only (serving keeps weights resident; no per-step all-gather)
+  multi-pod:     batch -> ("pod", "data"); FSDP stays intra-pod (DCN carries
+                 only the once-per-step gradient all-reduce)
+"""
+from __future__ import annotations
+
+from typing import Any, Mapping
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+Axis = str | tuple[str, ...] | None
+
+
+def _is_param_spec(x) -> bool:  # duck-typed to avoid a models<->sharding cycle
+    return hasattr(x, "logical_axes") and hasattr(x, "shape")
+
+
+def logical_rules(*, kind: str, multi_pod: bool, long_context: bool) -> dict[str, Axis]:
+    """Rule values may be a single axis-tuple or a *list of candidates* tried
+    in order (first one whose axes are free and divide the dim wins)."""
+    batch: Axis = ("pod", "data") if multi_pod else ("data",)
+    serve = kind in ("decode", "prefill")
+    rules: dict[str, Axis] = {
+        # activations / batch
+        "batch": batch,
+        # KV caches: the length dim stays UNSHARDED — updating a dynamic
+        # position in a length-sharded dim forces GSPMD into a full-cache
+        # masked select (read-modify-write of the whole cache every step).
+        # Instead serving shards the head_dim / MLA-lora dim over "model"
+        # (after kv_heads, which wins when it divides) — the cache update is
+        # then an in-place slice write and attention contracts the sharded
+        # dim with one small partial-sum all-reduce.
+        "kv_len": None,
+        # attention scores: if the head count could not shard (smollm 15H,
+        # decode grouped heads), the query-sequence dim takes the model axis
+        "q_len": [("model",), ("data",)],
+        # Megatron-SP-style residual stream: between attention-family layers
+        # the sequence dim shards over the model axis (row-wise norms/FFN
+        # entry stay local; attention re-gathers seq where it must). This
+        # divides the remat carry stash by the TP degree, which in turn lets
+        # gradient accumulation drop — fewer FSDP weight re-gathers (§Perf).
+        "seq": [("model",)],
+        # params: 2D weight sharding everywhere (FSDP-style on embed for
+        # train; for decode it is plain weight-stationary 2D TP — the
+        # contraction-dim partial sums cost one small activation all-reduce)
+        "embed": ("data",),
+        # ZeRO-3 use-form: training layers constrain weights to the gathered
+        # form before the einsum (all-gather over data once per layer, local
+        # contraction, reduce-scattered grads via the transpose) instead of
+        # GSPMD's activation partial-sum choice. Decode keeps the stored 2D
+        # layout: per-token activations are tiny, weights must stay resident.
+        "embed_use": None if kind == "train" else ("data",),
+        "embed_out": ("model",),
+        "heads": ("model",),
+        "kv_heads": ("model",),
+        "head_dim": [("model",)] if serve else None,
+        "mlp": ("model",),
+        "vocab": ("model",),
+        "experts": ("model",),
+        "experts_in": None,
+        "lora": [("model",)] if serve else None,
+        "layers": None,
+    }
+    return rules
+
+
+def partition_spec(
+    shape: tuple[int, ...],
+    logical_axes: tuple[str | None, ...],
+    rules: Mapping[str, Axis],
+    mesh: Mesh,
+) -> P:
+    used: set[str] = set()
+    out = []
+    for dim, name in zip(shape, logical_axes):
+        assigned: Axis = None
+        if name is not None:
+            cand = rules.get(name)
+            candidates = cand if isinstance(cand, list) else [cand]
+            for c in candidates:
+                if c is None:
+                    continue
+                cand_t = (c,) if isinstance(c, str) else tuple(c)
+                size = 1
+                ok = True
+                for ax in cand_t:
+                    if ax in used or ax not in mesh.shape:
+                        ok = False
+                        break
+                    size *= mesh.shape[ax]
+                if ok and dim % size == 0 and dim >= size:
+                    assigned = cand_t
+                    used.update(cand_t)
+                    break
+        out.append(assigned if assigned is None else (assigned[0] if len(assigned) == 1 else assigned))
+    # strip trailing Nones for tidiness
+    while out and out[-1] is None:
+        out.pop()
+    return P(*out)
+
+
+def param_shardings(specs, rules, mesh: Mesh):
+    """ParamSpec tree -> NamedSharding tree."""
+    return jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh, partition_spec(s.shape, s.logical_axes, rules, mesh)),
+        specs,
+        is_leaf=_is_param_spec,
+    )
+
+
+def cache_shardings(cache_spec_tree, rules, mesh: Mesh):
+    """(shape, axes, dtype) tree -> NamedSharding tree."""
+    def is_leaf(x):
+        return isinstance(x, tuple) and len(x) == 3 and isinstance(x[0], tuple)
+
+    return jax.tree_util.tree_map(
+        lambda leaf: NamedSharding(mesh, partition_spec(leaf[0], leaf[1], rules, mesh)),
+        cache_spec_tree,
+        is_leaf=is_leaf,
+    )
+
+
+BATCH_KEY_AXES = {
+    "tokens": ("batch", None),
+    "loss_mask": ("batch", None),
+    "prefix_embeds": ("batch", None, None),
+    "enc_embeds": ("batch", None, None),
+    "pos": (),
+}
+
+
+def batch_shardings(batch_specs: dict, rules, mesh: Mesh, *, cache_axes_tree=None):
+    """ShapeDtypeStruct batch tree -> NamedSharding tree. The "cache" entry
+    (decode shapes) takes its logical axes from the model's cache_spec tree."""
+    out = {}
+    for k, v in batch_specs.items():
+        if k == "cache":
+            assert cache_axes_tree is not None, "decode batch needs cache axes"
+            out[k] = cache_shardings(cache_axes_tree, rules, mesh)
+        else:
+            axes = BATCH_KEY_AXES.get(k, (None,) * v.ndim)
+            out[k] = NamedSharding(mesh, partition_spec(v.shape, axes, rules, mesh))
+    return out

@@ -1,0 +1,144 @@
+"""Train step factory: chunked sharded cross-entropy + AdamW + grad clip.
+
+The loss never materialises the (B, S, vocab) logits tensor: the sequence is
+processed in chunks whose logits are recomputed in the backward pass
+(jax.checkpoint on the chunk body). With the unembedding sharded over the
+mesh "model" axis, the log-sum-exp and label gather reduce over a sharded
+vocab dimension and GSPMD inserts the matching collectives.
+
+Optional cross-pod gradient compression (int8 + stochastic rounding) is applied
+to the gradient pytree before the optimizer — see train/compression.py.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.model import Model
+from repro.sharding.ctx import shard_hint
+from repro.train import optimizer as opt_mod
+from repro.train.optimizer import OptConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainConfig:
+    opt: OptConfig = OptConfig()
+    loss_chunk: int = 512  # sequence chunk for the xent scan
+    grad_accum: int = 1  # microbatches per step (activation-memory control)
+    accum_dtype: str = "float32"  # grad accumulator ("bfloat16" for >300B)
+    moe_aux_weight: float = 0.0  # load-balance loss (off by default)
+    compress_grads: bool = False  # int8 stochastic-rounding grad compression
+
+
+def chunked_xent(
+    h: jax.Array,  # (B, S, d) final hidden states
+    w_unembed: jax.Array,  # (d, V)
+    labels: jax.Array,  # (B, S) int32
+    mask: jax.Array,  # (B, S) {0,1}
+    chunk: int = 512,
+) -> tuple[jax.Array, jax.Array]:
+    """Mean masked NLL + token count. Logits exist only chunk-at-a-time."""
+    b, s, d = h.shape
+    chunk = min(chunk, s)
+    if s % chunk:
+        chunk = s  # fall back to a single chunk for ragged tails
+    n = s // chunk
+
+    w_use = shard_hint(w_unembed, "embed_use", "vocab")
+
+    def body(carry, xs):
+        tot, cnt = carry
+        hc, lc, mc = xs  # (B, chunk, d), (B, chunk), (B, chunk)
+        logits = (hc @ w_use).astype(jnp.float32)  # (B, chunk, V)
+        logits = shard_hint(logits, "batch", None, "vocab")
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        lab = jnp.take_along_axis(logits, lc[..., None], axis=-1)[..., 0]
+        nll = (lse - lab) * mc
+        return (tot + nll.sum(), cnt + mc.sum()), None
+
+    hs = h.reshape(b, n, chunk, d).swapaxes(0, 1)
+    ls = labels.reshape(b, n, chunk).swapaxes(0, 1)
+    ms = mask.reshape(b, n, chunk).swapaxes(0, 1)
+    (tot, cnt), _ = jax.lax.scan(
+        jax.checkpoint(body), (jnp.float32(0.0), jnp.float32(0.0)), (hs, ls, ms)
+    )
+    return tot / jnp.maximum(cnt, 1.0), cnt
+
+
+def make_loss_fn(model: Model, tcfg: TrainConfig) -> Callable:
+    cfg = model.cfg
+
+    def loss_fn(params, batch):
+        h = model.hidden(params, batch)  # (B, S_total, d)
+        tokens = batch["tokens"]
+        if cfg.n_prefix_embeds:  # vlm: loss only over the text tail
+            h = h[:, cfg.n_prefix_embeds :, :]
+        # next-token prediction: h[:, t] predicts tokens[:, t+1]. Keep the full
+        # S so the chunking stays divisible; mask out the final position.
+        labels = jnp.concatenate([tokens[:, 1:], tokens[:, :1]], axis=1)
+        mask = batch.get("loss_mask")
+        mask = jnp.ones_like(labels, jnp.float32) if mask is None else mask
+        mask = mask.at[:, -1].set(0.0)
+        loss, cnt = chunked_xent(h, model.unembed(params), labels, mask, tcfg.loss_chunk)
+        return loss, {"loss": loss, "tokens": cnt}
+
+    return loss_fn
+
+
+def make_train_step(model: Model, tcfg: TrainConfig) -> Callable:
+    """Returns train_step(params, opt_state, batch) -> (params, opt_state, metrics)."""
+    loss_fn = make_loss_fn(model, tcfg)
+
+    def grads_of(params, batch):
+        if tcfg.grad_accum <= 1:
+            return jax.value_and_grad(loss_fn, has_aux=True)(params, batch)
+        # gradient accumulation: scan over microbatches (leading batch split),
+        # accumulating f32 grads — bounds the live activation stash to one
+        # microbatch regardless of the global batch.
+        n = tcfg.grad_accum
+        micro = jax.tree_util.tree_map(
+            lambda a: a.reshape((n, a.shape[0] // n) + a.shape[1:]) if getattr(a, "ndim", 0) else a,
+            batch,
+        )
+
+        adt = jnp.dtype(tcfg.accum_dtype)
+
+        def body(acc, mb):
+            (loss, aux), g = jax.value_and_grad(loss_fn, has_aux=True)(params, mb)
+            acc_g, acc_loss, acc_tok = acc
+            acc_g = jax.tree_util.tree_map(
+                lambda a, b: a + b.astype(adt), acc_g, g
+            )
+            return (acc_g, acc_loss + loss, acc_tok + aux["tokens"]), None
+
+        zeros = jax.tree_util.tree_map(
+            lambda p: jnp.zeros(p.shape, adt), params
+        )
+        (g, loss, tok), _ = jax.lax.scan(
+            body, (zeros, jnp.float32(0.0), jnp.float32(0.0)), micro
+        )
+        g = jax.tree_util.tree_map(lambda a: a / n, g)
+        return (loss / n, {"tokens": tok}), g
+
+    def train_step(params, opt_state, batch):
+        (loss, aux), grads = grads_of(params, batch)
+        if tcfg.compress_grads:
+            from repro.train.compression import compress_decompress_int8
+
+            key = jax.random.fold_in(jax.random.PRNGKey(17), opt_state["step"])
+            grads = compress_decompress_int8(grads, key)
+        grads, gnorm = opt_mod.clip_by_global_norm(grads, tcfg.opt.grad_clip)
+        params, opt_state, lr = opt_mod.adamw_update(grads, opt_state, params, tcfg.opt)
+        metrics = {"loss": loss, "grad_norm": gnorm, "lr": lr, "tokens": aux["tokens"]}
+        return params, opt_state, metrics
+
+    return train_step
+
+
+def init_train_state(model: Model, tcfg: TrainConfig, key):
+    params = model.init(key)
+    return params, opt_mod.adamw_init(params, tcfg.opt)

@@ -1,0 +1,131 @@
+"""Training orchestration: resume-from-latest, periodic async checkpoints,
+preemption-signal save, per-step timing stats (straggler detection) and a
+watchdog budget — the pieces a 1000-node fleet needs around train_step.
+
+On real multi-pod hardware each host runs this loop under
+``jax.distributed.initialize``; here the same code runs single-host (the
+distribution is inside train_step via pjit shardings).
+"""
+from __future__ import annotations
+
+import dataclasses
+import signal
+import time
+from pathlib import Path
+from typing import Callable
+
+import jax
+import numpy as np
+
+from repro.models.model import Model
+from repro.train import checkpoint as ckpt_mod
+from repro.train.data import ZipfBigramStream
+from repro.train.train_step import TrainConfig, init_train_state, make_train_step
+
+
+@dataclasses.dataclass
+class TrainerConfig:
+    total_steps: int = 200
+    ckpt_every: int = 50
+    ckpt_dir: str = "checkpoints"
+    keep: int = 3
+    log_every: int = 10
+    straggler_factor: float = 3.0  # step time > factor*median -> flagged
+    watchdog_budget_s: float = 600.0  # no progress for this long -> abort
+
+
+@dataclasses.dataclass
+class StepStats:
+    times: list = dataclasses.field(default_factory=list)
+    stragglers: int = 0
+
+    def record(self, dt: float, factor: float) -> bool:
+        med = float(np.median(self.times)) if self.times else dt
+        self.times.append(dt)
+        if len(self.times) > 200:
+            self.times.pop(0)
+        slow = len(self.times) > 10 and dt > factor * med
+        self.stragglers += int(slow)
+        return slow
+
+
+class Trainer:
+    def __init__(
+        self,
+        model: Model,
+        tcfg: TrainConfig,
+        run_cfg: TrainerConfig,
+        stream: ZipfBigramStream,
+        jit_train_step: Callable | None = None,
+    ):
+        self.model = model
+        self.tcfg = tcfg
+        self.cfg = run_cfg
+        self.stream = stream
+        self.step_fn = jit_train_step or jax.jit(make_train_step(model, tcfg))
+        self.saver = ckpt_mod.AsyncSaver()
+        self.stats = StepStats()
+        self._preempted = False
+        self.history: list[dict] = []
+
+    # -- fault tolerance -----------------------------------------------------
+    def install_preemption_handler(self):
+        def handler(signum, frame):  # pragma: no cover - signal timing
+            self._preempted = True
+
+        signal.signal(signal.SIGTERM, handler)
+
+    def _init_or_resume(self, seed: int = 0):
+        params, opt_state = init_train_state(self.model, self.tcfg, jax.random.PRNGKey(seed))
+        state = {"params": params, "opt": opt_state}
+        try:
+            step, state = ckpt_mod.restore(self.cfg.ckpt_dir, state)
+            state = jax.tree_util.tree_map(jax.numpy.asarray, state)
+            print(f"[trainer] resumed from step {step}")
+            return step, state["params"], state["opt"]
+        except FileNotFoundError:
+            return 0, params, opt_state
+
+    # -- main loop -------------------------------------------------------------
+    def run(self, seed: int = 0) -> dict:
+        start_step, params, opt_state = self._init_or_resume(seed)
+        last_progress = time.time()
+        step = start_step
+        while step < self.cfg.total_steps:
+            batch = self.stream.batch(step)
+            t0 = time.time()
+            params, opt_state, metrics = self.step_fn(params, opt_state, batch)
+            loss = float(metrics["loss"])  # blocks; acts as the step barrier
+            dt = time.time() - t0
+            slow = self.stats.record(dt, self.cfg.straggler_factor)
+            step += 1
+            last_progress = time.time()
+            self.history.append({"step": step, "loss": loss, "dt": dt})
+            if step % self.cfg.log_every == 0 or step == 1:
+                print(
+                    f"[trainer] step {step} loss {loss:.4f} "
+                    f"({dt*1e3:.0f} ms{' STRAGGLER' if slow else ''})"
+                )
+            if step % self.cfg.ckpt_every == 0 or step == self.cfg.total_steps:
+                self.saver.save(
+                    self.cfg.ckpt_dir, step,
+                    {"params": params, "opt": opt_state},
+                    meta={"loss": loss}, keep=self.cfg.keep,
+                )
+            if self._preempted:
+                self.saver.wait()
+                ckpt_mod.save(
+                    self.cfg.ckpt_dir, step, {"params": params, "opt": opt_state},
+                    meta={"preempted": True}, keep=self.cfg.keep,
+                )
+                print(f"[trainer] preempted at step {step}; state saved")
+                break
+            if time.time() - last_progress > self.cfg.watchdog_budget_s:  # pragma: no cover
+                raise RuntimeError("watchdog: no progress within budget")
+        self.saver.wait()
+        return {
+            "final_step": step,
+            "final_loss": self.history[-1]["loss"] if self.history else None,
+            "stragglers": self.stats.stragglers,
+            "history": self.history,
+        }

@@ -1,0 +1,87 @@
+"""JAX simulator must match the Python reference decision-for-decision."""
+import numpy as np
+import pytest
+
+from repro.core import jax_cache, policies, zipf
+
+
+def _py_policy(kind, n, cap, window):
+    if kind == "plfua":
+        return policies.PLFUACache(cap, hot=range(min(n, 2 * cap)))
+    if kind == "wlfu":
+        return policies.WLFUCache(cap, window=window)
+    return policies.make_policy(kind, cap)
+
+
+def _compare(kind, n, cap, trace, window=16):
+    spec = jax_cache.PolicySpec(
+        kind=kind, n_objects=n, capacity=cap,
+        window=window if kind == "wlfu" else 0,
+    )
+    hits_jax, state = jax_cache.simulate(spec, np.asarray(trace, np.int32))
+    hits_jax = np.asarray(hits_jax)
+
+    pol = _py_policy(kind, n, cap, window)
+    hits_py = np.array([pol.request(int(x)) for x in trace])
+
+    np.testing.assert_array_equal(
+        hits_jax, hits_py,
+        err_msg=f"hit sequence diverges for {kind} n={n} cap={cap}",
+    )
+    cached_jax = np.asarray(state["in_cache"])
+    cached_py = np.array([pol.contains(i) for i in range(n)])
+    np.testing.assert_array_equal(cached_jax, cached_py)
+    assert int(state["count"]) == int(cached_py.sum())
+
+
+# A fixed set of static shapes keeps jit recompiles bounded.
+CASES = [
+    (8, 1), (8, 3), (16, 5), (16, 16), (30, 7),
+]
+
+
+@pytest.mark.parametrize("kind", jax_cache.JAX_POLICY_KINDS)
+@pytest.mark.parametrize("n,cap", CASES)
+def test_jax_matches_reference_random(kind, n, cap):
+    rng = np.random.default_rng(hash((kind, n, cap)) % 2**32)
+    trace = rng.integers(0, n, size=256)
+    _compare(kind, n, cap, trace)
+
+
+@pytest.mark.parametrize("kind", jax_cache.JAX_POLICY_KINDS)
+def test_jax_matches_reference_zipf(kind):
+    trace = zipf.sample_trace(64, 2000, seed=5)
+    _compare(kind, 64, 9, trace)
+
+
+def test_simulate_batch_matches_loop():
+    spec = jax_cache.PolicySpec(kind="plfu", n_objects=32, capacity=5)
+    traces = zipf.sample_traces(32, n_samples=4, trace_len=500, seed=1)
+    batched = np.asarray(jax_cache.simulate_batch(spec, traces))
+    for s in range(4):
+        single, _ = jax_cache.simulate(spec, traces[s])
+        np.testing.assert_array_equal(batched[s], np.asarray(single))
+
+
+def test_metadata_entries_matches_reference():
+    n, cap = 64, 9
+    trace = zipf.sample_trace(n, 3000, seed=7)
+    for kind in ("lfu", "plfu", "plfua"):
+        spec = jax_cache.PolicySpec(kind=kind, n_objects=n, capacity=cap)
+        _, state = jax_cache.simulate(spec, trace)
+        pol = _py_policy(kind, n, cap, 0)
+        pol.run(trace)
+        assert int(jax_cache.metadata_entries(spec, state)) == pol.metadata_entries
+
+
+def test_chr_improves_lfu_to_plfu_to_plfua_smallN():
+    """Paper headline ordering on a small-N Zipf case."""
+    n, cap = 200, 10
+    traces = zipf.sample_traces(n, n_samples=6, trace_len=20_000, seed=9)
+    out = {}
+    for kind in ("lfu", "plfu", "plfua"):
+        spec = jax_cache.PolicySpec(kind=kind, n_objects=n, capacity=cap)
+        hits = np.asarray(jax_cache.simulate_batch(spec, traces))
+        out[kind] = hits.mean()
+    assert out["plfu"] > out["lfu"]
+    assert out["plfua"] >= out["plfu"] - 0.005

@@ -1,0 +1,84 @@
+"""Shape/dtype sweep: flash-attention Pallas kernel (interpret) vs naive oracle."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.flash_attention.ops import flash_attention
+from repro.kernels.flash_attention.ref import naive_attention
+
+
+def _rand(key, shape, dtype):
+    return jax.random.normal(key, shape, jnp.float32).astype(dtype)
+
+
+SWEEP = [
+    # (B, H, KH, Sq, Skv, D, causal, dtype)
+    (1, 2, 2, 128, 128, 64, True, jnp.float32),
+    (2, 4, 2, 128, 128, 64, True, jnp.float32),     # GQA group 2
+    (1, 8, 2, 256, 256, 128, True, jnp.bfloat16),   # GQA group 4, bf16
+    (1, 2, 1, 96, 160, 64, True, jnp.float32),      # ragged: pad both dims
+    (1, 2, 2, 128, 384, 64, False, jnp.float32),    # cross-attention-like
+    (2, 3, 3, 64, 64, 32, True, jnp.bfloat16),      # non-128 head count/dim
+    (1, 2, 2, 1, 512, 64, False, jnp.float32),      # decode: q_len = 1
+    (1, 16, 8, 1, 300, 128, False, jnp.bfloat16),   # GQA decode, ragged kv
+]
+
+
+@pytest.mark.parametrize("b,h,kh,sq,skv,d,causal,dtype", SWEEP)
+def test_flash_matches_naive(b, h, kh, sq, skv, d, causal, dtype):
+    ks = jax.random.split(jax.random.PRNGKey(hash((b, h, sq, skv)) % 2**31), 3)
+    q = _rand(ks[0], (b, h, sq, d), dtype)
+    k = _rand(ks[1], (b, kh, skv, d), dtype)
+    v = _rand(ks[2], (b, kh, skv, d), dtype)
+    out = flash_attention(q, k, v, causal=causal, interpret=True)
+    ref = naive_attention(q, k, v, causal=causal)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 2e-5
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(ref, np.float32), atol=tol, rtol=tol
+    )
+
+
+def test_flash_kv_len_masking():
+    """Padded KV cache: only the first kv_len entries participate."""
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    q = _rand(ks[0], (1, 4, 1, 64), jnp.float32)
+    k = _rand(ks[1], (1, 4, 256, 64), jnp.float32)
+    v = _rand(ks[2], (1, 4, 256, 64), jnp.float32)
+    out = flash_attention(q, k, v, causal=False, kv_len=100, interpret=True)
+    ref = naive_attention(q[:, :, :, :], k[:, :, :100], v[:, :, :100], causal=False)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=2e-5, rtol=2e-5)
+    # garbage beyond kv_len must not leak
+    k2 = k.at[:, :, 100:].set(1e6)
+    out2 = flash_attention(q, k2, v, causal=False, kv_len=100, interpret=True)
+    np.testing.assert_allclose(np.asarray(out2), np.asarray(out), atol=1e-6)
+
+
+def test_flash_block_shape_invariance():
+    """Output must not depend on the BlockSpec tiling."""
+    ks = jax.random.split(jax.random.PRNGKey(1), 3)
+    q = _rand(ks[0], (1, 2, 256, 64), jnp.float32)
+    k = _rand(ks[1], (1, 2, 256, 64), jnp.float32)
+    v = _rand(ks[2], (1, 2, 256, 64), jnp.float32)
+    outs = [
+        np.asarray(
+            flash_attention(q, k, v, causal=True, block_q=bq, block_k=bk, interpret=True)
+        )
+        for bq, bk in [(64, 64), (128, 128), (256, 128), (64, 256)]
+    ]
+    for o in outs[1:]:
+        np.testing.assert_allclose(o, outs[0], atol=2e-5, rtol=2e-5)
+
+
+def test_flash_causality_property():
+    """Perturbing future keys/values must not change past outputs."""
+    ks = jax.random.split(jax.random.PRNGKey(2), 3)
+    q = _rand(ks[0], (1, 2, 128, 64), jnp.float32)
+    k = _rand(ks[1], (1, 2, 128, 64), jnp.float32)
+    v = _rand(ks[2], (1, 2, 128, 64), jnp.float32)
+    base = np.asarray(flash_attention(q, k, v, causal=True, interpret=True))
+    k2 = k.at[:, :, 64:].add(3.0)
+    v2 = v.at[:, :, 64:].add(-2.0)
+    pert = np.asarray(flash_attention(q, k2, v2, causal=True, interpret=True))
+    np.testing.assert_allclose(pert[:, :, :64], base[:, :, :64], atol=1e-6)
+    assert np.abs(pert[:, :, 64:] - base[:, :, 64:]).max() > 1e-3

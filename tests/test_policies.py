@@ -1,0 +1,183 @@
+"""Unit + property tests for the paper-faithful reference policies."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import policies, simulate, zipf
+
+
+# ---------------------------------------------------------------- hand cases
+def test_lfu_hand_case():
+    c = policies.LFUCache(2)
+    assert not c.request(0)  # miss, cache {0:1}
+    assert not c.request(1)  # miss, cache {0:1, 1:1}
+    assert c.request(0)      # hit,  {0:2, 1:1}
+    assert not c.request(2)  # miss, evict 1 (min freq, ties lowest id) -> {0:2, 2:1}
+    assert not c.request(1)  # miss again: LFU forgot 1's history
+    assert c.contains(1) and c.contains(0) and not c.contains(2)
+    assert c.hits == 1 and c.misses == 4 and c.evictions == 2
+
+
+def test_lfu_tie_breaks_lowest_id():
+    c = policies.LFUCache(2)
+    c.request(5)
+    c.request(3)  # both freq 1
+    c.request(9)  # evicts id 3 (lowest id among freq-1 ties)
+    assert c.contains(5) is False or True  # placeholder to document below
+    # ties on (freq=1): candidates are {5, 3}; lowest id = 3 evicted
+    assert not c.contains(3)
+    assert c.contains(5) and c.contains(9)
+
+
+def test_plfu_parked_list_resumes_frequency():
+    """The paper's §2.2 mechanism: eviction parks the frequency; re-admission
+    resumes from it instead of restarting at 1."""
+    c = policies.PLFUCache(2)
+    for _ in range(5):
+        c.request(0)  # freq[0] = 5
+    c.request(1)      # freq[1] = 1
+    c.request(2)      # evicts 1 (min), parks freq[1]=1; freq[2]=1
+    c.request(1)      # evicts 2 (freq 1, id 2 > ... ties: {2:1} vs ...) resume freq[1]=2
+    assert c.contains(1)
+    assert c._freq[1] == 2  # resumed 1 + 1, not restarted at 1
+    # now 1 outranks a fresh object
+    c.request(3)      # evicts ... cache is {0:5, 1:2}; 3 enters with freq 1 evicting min(1:2? no)
+    # eviction happens before insert: victim = min(freq) among cached = id 1 (freq 2)
+    assert not c.contains(1) and c.contains(3)
+    assert c._parked[1] == 2  # parked at its earned frequency
+
+
+def test_lfu_red_column_pathology_and_plfu_fix():
+    """Fig. 2: under LFU a mid-popularity object thrash-misses (red column);
+    PLFU converts most of those misses to hits."""
+    rng = np.random.default_rng(0)
+    trace = zipf.sample_trace(60, 30_000, seed=11)
+    cap = 10
+    lfu, plfu = policies.LFUCache(cap), policies.PLFUCache(cap)
+    h_lfu, m_lfu = simulate.hit_miss_scatter(lfu, trace, 60)
+    h_plfu, m_plfu = simulate.hit_miss_scatter(plfu, trace, 60)
+    # paper claim 1: PLFU strictly improves CHR on skewed data
+    assert plfu.chr > lfu.chr
+    # paper claim 2 (red columns): some object near the cache boundary has a
+    # materially worse miss ratio under LFU than under PLFU
+    ratio_lfu = m_lfu[:25] / np.maximum(1, h_lfu[:25] + m_lfu[:25])
+    ratio_plfu = m_plfu[:25] / np.maximum(1, h_plfu[:25] + m_plfu[:25])
+    assert (ratio_lfu - ratio_plfu).max() > 0.1
+
+
+def test_plfua_admission_blocks_cold_objects():
+    c = policies.PLFUACache(4, hot=range(8))
+    assert not c.request(20)      # cold: miss, never admitted
+    assert not c.contains(20)
+    assert not c.request(3)       # hot: admitted
+    assert c.contains(3)
+    assert c.metadata_entries <= 8
+
+
+def test_plfua_metadata_bound_matches_paper():
+    """§4: PLFUA metadata is 4-50% of PLFU's (= 2*rate of all objects)."""
+    n, rate = 1000, 0.1
+    case = zipf.GridCase(n, rate)
+    trace = zipf.sample_trace(n, 50_000, seed=3)
+    plfu = policies.PLFUCache(case.cache_size)
+    plfua = policies.PLFUACache(case.cache_size, hot=range(case.hot_size))
+    plfu.run(trace)
+    plfua.run(trace)
+    assert plfua.metadata_entries <= case.hot_size
+    assert plfua.metadata_entries < plfu.metadata_entries
+
+
+def test_plfua_beats_plfu_on_small_n():
+    """Fig. 5/6: with few objects PLFUA's CHR >= PLFU's, CPU strictly less
+    work (fewer metadata ops) — we check CHR here, CPU in benchmarks."""
+    case = zipf.GridCase(200, 0.05)
+    chrs = {}
+    for name in ("plfu", "plfua"):
+        vals = []
+        for s in range(6):
+            trace = zipf.sample_trace(case.n_objects, 30_000, seed=s)
+            p = policies.make_policy(name, case.cache_size, n_objects=case.n_objects)
+            p.run(trace)
+            vals.append(p.chr)
+        chrs[name] = np.mean(vals)
+    assert chrs["plfua"] >= chrs["plfu"] - 0.005
+
+
+def test_lru_semantics():
+    c = policies.LRUCache(2)
+    c.request(0); c.request(1); c.request(0)  # LRU order: 1, 0
+    c.request(2)                              # evicts 1
+    assert c.contains(0) and c.contains(2) and not c.contains(1)
+
+
+def test_wlfu_window_forgets():
+    c = policies.WLFUCache(2, window=4)
+    for _ in range(4):
+        c.request(0)          # 0 saturates the window
+    c.request(1)              # window now [0,0,0,1]
+    c.request(2)              # cache full -> victim by window freq
+    # window [0,0,1,2]: freqs 0:2, 1:1; victim among cached {0,1} is 1
+    assert c.contains(0) and c.contains(2) and not c.contains(1)
+
+
+def test_tinylfu_rejects_one_hit_wonders():
+    c = policies.TinyLFUCache(4, window=10_000)
+    popular = [0, 1, 2, 3]
+    for _ in range(20):
+        for x in popular:
+            c.request(x)
+    before = set(x for x in range(10) if c.contains(x))
+    c.request(99)  # one-hit wonder: sketch freq 1 <= victim's -> not admitted
+    assert not c.contains(99)
+    assert before == set(x for x in range(10) if c.contains(x))
+
+
+# ------------------------------------------------------------ property tests
+policy_factories = {
+    "lru": lambda cap, n: policies.LRUCache(cap),
+    "lfu": lambda cap, n: policies.LFUCache(cap),
+    "plfu": lambda cap, n: policies.PLFUCache(cap),
+    "plfua": lambda cap, n: policies.PLFUACache(cap, hot=range(min(n, 2 * cap))),
+    "wlfu": lambda cap, n: policies.WLFUCache(cap, window=16),
+    "tinylfu": lambda cap, n: policies.TinyLFUCache(cap, window=64),
+}
+
+
+@settings(max_examples=40, deadline=None)
+@given(
+    name=st.sampled_from(sorted(policy_factories)),
+    cap=st.integers(1, 12),
+    n=st.integers(2, 40),
+    data=st.data(),
+)
+def test_invariants(name, cap, n, data):
+    """System invariants: occupancy never exceeds capacity; accounting adds up;
+    a just-requested admissible object is cached; CHR in [0, 1]."""
+    trace = data.draw(st.lists(st.integers(0, n - 1), min_size=1, max_size=300))
+    pol = policy_factories[name](cap, n)
+    occupancy_ok = True
+    for x in trace:
+        hit = pol.request(x)
+        if hit:
+            assert pol.contains(x)
+        live = sum(pol.contains(i) for i in range(n))
+        occupancy_ok &= live <= cap
+    assert occupancy_ok
+    assert pol.hits + pol.misses == len(trace)
+    assert 0.0 <= pol.chr <= 1.0
+    # non-admission policies always hold the last request
+    if name in ("lru", "lfu", "plfu", "wlfu"):
+        assert pol.contains(trace[-1])
+    if name == "plfua":
+        assert pol.contains(trace[-1]) == (trace[-1] < min(n, 2 * cap))
+
+
+@settings(max_examples=20, deadline=None)
+@given(cap=st.integers(1, 8), data=st.data())
+def test_plfu_chr_dominates_lfu_in_expectation(cap, data):
+    """Not a per-trace theorem, but on skewed traces PLFU ~never loses badly."""
+    trace = zipf.sample_trace(30, 3000, seed=data.draw(st.integers(0, 10_000)))
+    lfu, plfu = policies.LFUCache(cap), policies.PLFUCache(cap)
+    lfu.run(trace)
+    plfu.run(trace)
+    assert plfu.chr >= lfu.chr - 0.02

@@ -1,0 +1,118 @@
+"""Calibration tests for the structural HLO cost model: known matmuls and
+scans, compiled for real, must yield the analytic FLOP counts (and expose the
+XLA:CPU quirk of counting while bodies once, which the model corrects)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.roofline import hlo_model
+from repro.roofline.analysis import analyze, parse_collectives
+
+
+def _compile(fn, *args):
+    return jax.jit(fn).lower(*args).compile()
+
+
+def test_dot_flops_exact():
+    m, k, n = 128, 256, 64
+    c = _compile(lambda a, b: a @ b, jax.ShapeDtypeStruct((m, k), jnp.float32),
+                 jax.ShapeDtypeStruct((k, n), jnp.float32))
+    cost = hlo_model.module_cost(c.as_text())
+    assert cost.flops == pytest.approx(2 * m * k * n, rel=1e-6)
+
+
+def test_batched_dot_flops():
+    b, m, k, n = 4, 32, 64, 16
+    c = _compile(
+        lambda a, w: jnp.einsum("bmk,bkn->bmn", a, w),
+        jax.ShapeDtypeStruct((b, m, k), jnp.float32),
+        jax.ShapeDtypeStruct((b, k, n), jnp.float32),
+    )
+    cost = hlo_model.module_cost(c.as_text())
+    assert cost.flops == pytest.approx(2 * b * m * k * n, rel=1e-6)
+
+
+def test_scan_trip_count_multiplied():
+    """The whole point: a 10-step scan must cost 10x its body."""
+    m, k = 64, 64
+    trips = 10
+
+    def f(x, w):
+        def body(h, _):
+            return jnp.tanh(h @ w), None
+        h, _ = jax.lax.scan(body, x, None, length=trips)
+        return h
+
+    c = _compile(f, jax.ShapeDtypeStruct((m, k), jnp.float32),
+                 jax.ShapeDtypeStruct((k, k), jnp.float32))
+    cost = hlo_model.module_cost(c.as_text())
+    one = 2 * m * k * k
+    assert cost.flops == pytest.approx(trips * one, rel=0.05)
+    # document the XLA:CPU quirk the model corrects:
+    xla = float(c.cost_analysis().get("flops", 0.0))
+    assert xla < cost.flops  # body counted once by cost_analysis
+
+
+def test_nested_scan():
+    m = 32
+    def f(x, w):
+        def outer(h, _):
+            def inner(g, _):
+                return g @ w, None
+            g, _ = jax.lax.scan(inner, h, None, length=3)
+            return g, None
+        h, _ = jax.lax.scan(outer, x, None, length=5)
+        return h
+    c = _compile(f, jax.ShapeDtypeStruct((m, m), jnp.float32),
+                 jax.ShapeDtypeStruct((m, m), jnp.float32))
+    cost = hlo_model.module_cost(c.as_text())
+    assert cost.flops == pytest.approx(15 * 2 * m**3, rel=0.05)
+
+
+def test_remat_counts_recompute():
+    """jax.checkpoint doubles the forward matmul work in the bwd pass."""
+    m = 64
+
+    def loss(x, w):
+        def body(h, _):
+            return jnp.tanh(h @ w), None
+        h, _ = jax.lax.scan(jax.checkpoint(body), x, None, length=4)
+        return h.sum()
+
+    c = _compile(jax.grad(loss, argnums=1),
+                 jax.ShapeDtypeStruct((m, m), jnp.float32),
+                 jax.ShapeDtypeStruct((m, m), jnp.float32))
+    cost = hlo_model.module_cost(c.as_text())
+    # fwd (4) + recompute (4) + two bwd matmuls per step (8) = ~16 body-matmuls
+    one = 2 * m**3
+    assert cost.flops >= 12 * one
+
+
+def test_collective_ring_bytes():
+    import os
+    if jax.device_count() < 2:
+        pytest.skip("needs >1 device (run under dryrun env)")
+
+
+def test_parse_collectives_formats():
+    txt = """
+  %ag = f32[64,128]{1,0} all-gather(%x), replica_groups=[16,16]<=[256], dimensions={0}
+  %ar = bf16[32]{0} all-reduce(%y), replica_groups={{0,1,2,3}}, to_apply=%add
+"""
+    st = parse_collectives(txt)
+    assert st.counts == {"all-gather": 1, "all-reduce": 1}
+    ag = 64 * 128 * 4 * 15 / 16
+    ar = 2 * 32 * 2 * 3 / 4
+    assert st.ring_bytes == pytest.approx(ag + ar, rel=1e-6)
+
+
+def test_analyze_dominant_term():
+    m = 4096
+    c = _compile(lambda a, b: a @ b, jax.ShapeDtypeStruct((m, m), jnp.bfloat16),
+                 jax.ShapeDtypeStruct((m, m), jnp.bfloat16))
+    roof = analyze(c.as_text(), c.cost_analysis(), n_devices=1,
+                   model_flops_global=2 * m**3)
+    assert roof.dominant in ("compute", "memory")
+    assert roof.flops_per_dev >= 2 * m**3 * 0.99
+    assert 0 < roof.useful_ratio <= 1.05
