@@ -1,0 +1,129 @@
+"""CDN fleet benchmarks: policy x workload-scenario x tier-topology sweeps.
+
+Rows follow the repo convention ``name,us_per_call,derived``; us_per_call is
+device wall-time per simulated request (the whole batched hierarchy runs in
+one jitted launch), and derived carries per-tier CHR + the management-cost
+roll-up (cdn.report's operation model priced at core.energy's Xeon core TDP).
+
+Groups:
+  * ``cdn``        — the acceptance sweep: 4-edge + parent two-tier hierarchy,
+                     all of lru/lfu/plfu/plfua/wlfu, over stationary / churn /
+                     flash-crowd (plus diurnal & multi-tenant at --full).
+  * ``cdn_router`` — hash vs sticky vs round-robin partitioning for one policy.
+  * ``cdn_topo``   — fleet width and parent-size scaling at fixed total bytes.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro import cdn, workloads
+
+CDN_POLICIES = ("lru", "lfu", "plfu", "plfua", "wlfu")
+WLFU_WINDOW = 2_048  # the one window convention for every fleet benchmark
+
+
+def policy_window(kind: str) -> int:
+    return WLFU_WINDOW if kind == "wlfu" else 0
+
+
+def _mk(kind: str, n: int, *, n_edges=4, edge_cap: int, parent_cap: int, router="hash"):
+    return cdn.two_tier(
+        kind,
+        n,
+        n_edges=n_edges,
+        edge_capacity=edge_cap,
+        parent_capacity=parent_cap,
+        router=router,
+        window=policy_window(kind),
+    )
+
+
+def _run(hspec, traces):
+    assign = hspec.assignment(traces)
+    out = cdn.simulate_hierarchy_batch(hspec, traces, assign)  # compile
+    out["edge_hit"].block_until_ready()
+    t0 = time.perf_counter()
+    out = cdn.simulate_hierarchy_batch(hspec, traces, assign)
+    out["edge_hit"].block_until_ready()
+    dt = time.perf_counter() - t0
+    return out, dt / traces.size * 1e6
+
+
+def cdn_hierarchy(full: bool = False):
+    """Two-tier fleet, every policy x scenario; per-tier CHR + mgmt energy."""
+    n, edge_cap, parent_cap = (10_000, 300, 1_200) if full else (2_000, 60, 240)
+    samples, tlen = (8, 100_000) if full else (2, 10_000)
+    scenarios = ("stationary", "churn", "flash_crowd")
+    if full:
+        scenarios += ("diurnal", "multi_tenant")
+    rows = []
+    for scenario in scenarios:
+        traces = workloads.make_traces(scenario, n, n_samples=samples, trace_len=tlen, seed=0)
+        for kind in CDN_POLICIES:
+            hspec = _mk(kind, n, edge_cap=edge_cap, parent_cap=parent_cap)
+            out, us = _run(hspec, traces)
+            rep = cdn.hierarchy_report(hspec, out)
+            rows.append(
+                (
+                    f"cdn/{scenario}/{kind}",
+                    us,
+                    f"edge_chr={rep.edge_chr:.4f} parent_chr={rep.parent_chr:.4f} "
+                    f"total_chr={rep.total_chr:.4f} origin={rep.origin_requests} "
+                    f"mgmt_cpu_s={rep.mgmt_cpu_s:.4f} mgmt_J={rep.mgmt_energy_j:.4f}",
+                )
+            )
+    return rows
+
+
+def cdn_router_sweep(full: bool = False):
+    """Routing scheme face-off: content-hash vs session-sticky vs round-robin."""
+    n, edge_cap, parent_cap = (10_000, 300, 1_200) if full else (2_000, 60, 240)
+    samples, tlen = (8, 100_000) if full else (2, 10_000)
+    traces = workloads.make_traces("stationary", n, n_samples=samples, trace_len=tlen, seed=1)
+    rows = []
+    for router in cdn.ROUTER_MODES:
+        hspec = _mk("plfu", n, edge_cap=edge_cap, parent_cap=parent_cap, router=router)
+        out, us = _run(hspec, traces)
+        rep = cdn.hierarchy_report(hspec, out)
+        rows.append(
+            (
+                f"cdn_router/{router}/plfu",
+                us,
+                f"edge_chr={rep.edge_chr:.4f} parent_chr={rep.parent_chr:.4f} "
+                f"total_chr={rep.total_chr:.4f}",
+            )
+        )
+    return rows
+
+
+def cdn_topology_sweep(full: bool = False):
+    """Same total edge capacity, different fleet widths (1/2/4/8 edges)."""
+    n = 10_000 if full else 2_000
+    total_edge, parent_cap = (1_200, 1_200) if full else (240, 240)
+    samples, tlen = (8, 100_000) if full else (2, 10_000)
+    traces = workloads.make_traces("stationary", n, n_samples=samples, trace_len=tlen, seed=2)
+    rows = []
+    for n_edges in (1, 2, 4, 8):
+        hspec = _mk(
+            "plfu", n, n_edges=n_edges, edge_cap=total_edge // n_edges, parent_cap=parent_cap
+        )
+        out, us = _run(hspec, traces)
+        rep = cdn.hierarchy_report(hspec, out)
+        rows.append(
+            (
+                f"cdn_topo/E{n_edges}/plfu",
+                us,
+                f"edge_cap={total_edge // n_edges} edge_chr={rep.edge_chr:.4f} "
+                f"total_chr={rep.total_chr:.4f} mgmt_J={rep.mgmt_energy_j:.4f}",
+            )
+        )
+    return rows
+
+
+ALL = {
+    "cdn": cdn_hierarchy,
+    "cdn_router": cdn_router_sweep,
+    "cdn_topo": cdn_topology_sweep,
+}

@@ -189,6 +189,56 @@ def metadata_table(full: bool = False):
     return rows
 
 
+def fig8_hierarchy(full: bool = False):
+    """Beyond-paper figure: the paper's single-cache CHR/energy trade-off
+    re-examined in a two-tier fleet. For each policy, how much of the
+    single-cache CHR gap survives when a shared parent backs 4 edges, and
+    what the fleet pays in management energy (all tiers summed)."""
+    from benchmarks.cdn_bench import CDN_POLICIES, _mk, policy_window
+    from repro import cdn, workloads
+    from repro.core import jax_cache
+
+    n = 10_000 if full else 2_000
+    edge_cap, parent_cap = (n * 3 // 100, n * 12 // 100)
+    samples, tlen = (8, 100_000) if full else (2, 15_000)
+    traces = workloads.make_traces("stationary", n, n_samples=samples, trace_len=tlen, seed=8)
+    rows = []
+    flat_chr = {}
+    fleet_chr = {}
+    for kind in CDN_POLICIES:
+        hspec = _mk(kind, n, edge_cap=edge_cap, parent_cap=parent_cap)
+        assign = hspec.assignment(traces)
+        out = cdn.simulate_hierarchy_batch(hspec, traces, assign)
+        rep = cdn.hierarchy_report(hspec, out)
+        fleet_chr[kind] = rep.total_chr
+        # single flat cache of the same total capacity, same traces
+        spec = jax_cache.PolicySpec(
+            kind=kind, n_objects=n, capacity=4 * edge_cap + parent_cap,
+            window=policy_window(kind),
+        )
+        hits = jax_cache.simulate_batch(spec, traces)
+        flat_chr[kind] = float(np.asarray(hits).mean())
+        rows.append(
+            (
+                f"fig8/{kind}",
+                0.0,
+                f"fleet_chr={rep.total_chr:.4f} flat_chr={flat_chr[kind]:.4f} "
+                f"edge_chr={rep.edge_chr:.4f} mgmt_J={rep.mgmt_energy_j:.4f}",
+            )
+        )
+    gap = {k: flat_chr[k] - fleet_chr[k] for k in fleet_chr}
+    worst = max(gap, key=gap.get)
+    rows.append(
+        (
+            "fig8/partitioning_cost",
+            0.0,
+            f"max fleet-vs-flat CHR gap: {gap[worst]:+.4f} ({worst}) — "
+            "the price of hash-partitioning the same bytes across tiers",
+        )
+    )
+    return rows
+
+
 ALL = {
     "fig2": fig2_red_columns,
     "fig3": fig3_chr_grid,
@@ -196,5 +246,6 @@ ALL = {
     "fig5": fig5_plfua,
     "fig6": fig6_chr_increment,
     "fig7": fig7_cpu_vs_plfua,
+    "fig8": fig8_hierarchy,
     "metadata": metadata_table,
 }

@@ -15,17 +15,20 @@ import time
 def main() -> None:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--full", action="store_true", help="paper-scale grids (slow)")
-    ap.add_argument("--only", default=None, help="run one group (fig2..fig7, metadata, cache_py, cache_jax, cache_pallas, serving_energy, roofline)")
+    ap.add_argument("--only", default=None, help="run one group (fig2..fig8, metadata, cache_py, cache_jax, cache_pallas, cdn, cdn_router, cdn_topo, serving_energy, roofline)")
     args = ap.parse_args()
 
-    from benchmarks import cache_bench, paper_figs, roofline_bench, serving_energy
+    from benchmarks import cache_bench, cdn_bench, paper_figs, roofline_bench, serving_energy
 
     groups: dict = {}
     groups.update(paper_figs.ALL)
     groups.update(cache_bench.ALL)
+    groups.update(cdn_bench.ALL)
     groups.update(serving_energy.ALL)
     groups.update(roofline_bench.ALL)
 
+    if args.only is not None and args.only not in groups:
+        sys.exit(f"unknown group {args.only!r}; choose from: {', '.join(groups)}")
     selected = {args.only: groups[args.only]} if args.only else groups
     print("name,us_per_call,derived")
     for gname, fn in selected.items():

@@ -1,0 +1,35 @@
+"""CDN fleet subsystem: request routing, a jitted multi-tier cache-hierarchy
+simulator built on ``core.jax_cache``, a pure-Python reference oracle, and
+per-tier CHR / eviction / management-energy roll-ups.
+
+    from repro import cdn, workloads
+    hspec = cdn.two_tier("plfu", n_objects=2000, n_edges=4,
+                         edge_capacity=60, parent_capacity=240)
+    traces = workloads.make_traces("churn", 2000, n_samples=4, trace_len=20_000)
+    assign = hspec.assignment(traces)
+    out = cdn.simulate_hierarchy_batch(hspec, traces, assign)
+    print(cdn.hierarchy_report(hspec, out).rows())
+"""
+from repro.cdn.hierarchy import (
+    HierarchySpec,
+    simulate_hierarchy,
+    simulate_hierarchy_batch,
+    two_tier,
+)
+from repro.cdn.reference import simulate_hierarchy_reference
+from repro.cdn.report import HierarchyReport, TierReport, hierarchy_report, mgmt_ops
+from repro.cdn.router import ROUTER_MODES, route
+
+__all__ = [
+    "HierarchySpec",
+    "two_tier",
+    "simulate_hierarchy",
+    "simulate_hierarchy_batch",
+    "simulate_hierarchy_reference",
+    "HierarchyReport",
+    "TierReport",
+    "hierarchy_report",
+    "mgmt_ops",
+    "ROUTER_MODES",
+    "route",
+]

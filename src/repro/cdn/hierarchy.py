@@ -1,0 +1,203 @@
+"""Batched multi-tier cache-hierarchy simulator (edge fleet + shared parent).
+
+Architecture: E edge caches run the existing branch-free ``jax_cache.step``
+*in parallel* via ``vmap`` — every edge scans the full trace but a per-edge
+``active`` mask (from :mod:`repro.cdn.router`) freezes its state on requests
+routed elsewhere, so state update cost is one masked ``where`` instead of a
+serialised gather/scatter over the fleet. The parent tier then scans the same
+trace with ``active = edge missed``, which reproduces exactly the request
+order a real miss stream would carry. Everything is fixed-shape and jittable;
+``simulate_hierarchy_batch`` vmaps the whole hierarchy over trace samples.
+
+Edges may differ in capacity / hot size (traced per-edge ``cap`` override in
+``jax_cache.step``; per-edge ``hot`` masks live in the stacked state) but must
+share ``kind``, ``n_objects`` and ``window`` so their states stack.
+
+Decision parity: ``repro.cdn.reference.simulate_hierarchy_reference`` runs the
+same topology with the paper's pure-Python policy objects; the tests assert
+identical hit sequences and final cache contents per tier.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import jax_cache
+from repro.core.jax_cache import PolicySpec
+from repro.cdn import router as router_mod
+
+__all__ = [
+    "HierarchySpec",
+    "two_tier",
+    "simulate_hierarchy",
+    "simulate_hierarchy_batch",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class HierarchySpec:
+    """Static topology: E edge nodes (tier 0) in front of one parent (tier 1).
+
+    Hashable, so it can be a jit static argument. Edge specs may vary in
+    ``capacity``/``hot_size`` but must agree on ``kind``, ``n_objects`` and
+    ``window`` (stacked-state requirement).
+    """
+
+    edges: tuple[PolicySpec, ...]
+    parent: PolicySpec
+    router: str = "hash"
+    session_len: int = 64
+
+    def __post_init__(self):
+        if not self.edges:
+            raise ValueError("need at least one edge node")
+        e0 = self.edges[0]
+        for e in self.edges[1:]:
+            if (e.kind, e.n_objects, e.window) != (e0.kind, e0.n_objects, e0.window):
+                raise ValueError(
+                    "edge specs must share kind/n_objects/window to stack; "
+                    f"got {e} vs {e0}"
+                )
+        if self.parent.n_objects != e0.n_objects:
+            raise ValueError("parent and edges must share n_objects")
+        if self.router not in router_mod.ROUTER_MODES:
+            raise ValueError(
+                f"unknown router {self.router!r}; expected one of {router_mod.ROUTER_MODES}"
+            )
+
+    @property
+    def n_edges(self) -> int:
+        return len(self.edges)
+
+    @property
+    def n_objects(self) -> int:
+        return self.edges[0].n_objects
+
+    def assignment(self, trace: np.ndarray, seed: int = 0) -> np.ndarray:
+        """Route a (…, T) trace to edges (host-side, shared with the reference)."""
+        return router_mod.route(
+            trace, self.n_edges, self.router, session_len=self.session_len, seed=seed
+        )
+
+
+def two_tier(
+    kind: str,
+    n_objects: int,
+    *,
+    n_edges: int = 4,
+    edge_capacity: int,
+    parent_capacity: int,
+    router: str = "hash",
+    session_len: int = 64,
+    window: int = 0,
+    parent_kind: str | None = None,
+) -> HierarchySpec:
+    """Convenience: homogeneous E-edge fleet + one (usually bigger) parent."""
+    edge = PolicySpec(
+        kind=kind, n_objects=n_objects, capacity=edge_capacity, window=window
+    )
+    parent = PolicySpec(
+        kind=parent_kind or kind,
+        n_objects=n_objects,
+        capacity=parent_capacity,
+        window=window,
+    )
+    return HierarchySpec(
+        edges=(edge,) * n_edges, parent=parent, router=router, session_len=session_len
+    )
+
+
+def _masked_scan(spec: PolicySpec, state, trace, active, cap=None):
+    """Scan ``step`` over the trace, freezing state where ``active`` is False."""
+
+    def f(s, inp):
+        x, a = inp
+        ns, hit = jax_cache.step(spec, s, x, cap)
+        ns = jax.tree_util.tree_map(lambda o, n: jnp.where(a, n, o), s, ns)
+        return ns, hit & a
+
+    return jax.lax.scan(f, state, (trace, active))
+
+
+def _tier_counters(spec: PolicySpec, hits, active, trace, hot_rows, count):
+    """Derived per-tier accounting, all from the hit/active series + final state.
+
+    Inserts are implied by the policy semantics (every admitted miss inserts),
+    so evictions = inserts - final occupancy — no extra scan outputs needed.
+    """
+    miss = active & ~hits
+    if spec.kind == "plfua":
+        admitted = jnp.take(hot_rows, trace, axis=-1)  # hot mask gathered at x_t
+    else:
+        admitted = jnp.ones_like(active)
+    inserts = (miss & admitted).sum(-1)
+    return {
+        "requests": active.sum(-1),
+        "hits": hits.sum(-1),
+        "admitted_requests": (active & admitted).sum(-1),
+        "inserts": inserts,
+        "evictions": inserts - count,
+        "count": count,
+    }
+
+
+@functools.partial(jax.jit, static_argnums=0)
+def simulate_hierarchy(hspec: HierarchySpec, trace: jax.Array, assignment: jax.Array):
+    """Run one trace through the two-tier hierarchy.
+
+    Returns a dict of arrays:
+      ``edge_hit``  (T,) bool — hit at the assigned edge
+      ``parent_hit`` (T,) bool — edge miss served by the parent
+      ``edge``  — per-edge counters (requests/hits/inserts/evictions/count), (E,)
+      ``parent`` — same counters for the parent tier, scalars
+      ``edge_states`` / ``parent_state`` — final policy states
+    """
+    trace = trace.astype(jnp.int32)
+    assignment = assignment.astype(jnp.int32)
+    e0 = hspec.edges[0]
+    E = hspec.n_edges
+
+    edge_states = jax.tree_util.tree_map(
+        lambda *xs: jnp.stack(xs), *[jax_cache.init_state(e) for e in hspec.edges]
+    )
+    caps = jnp.array([e.capacity for e in hspec.edges], jnp.int32)
+    active = assignment[None, :] == jnp.arange(E, dtype=jnp.int32)[:, None]  # (E, T)
+
+    edge_states, edge_hits = jax.vmap(
+        lambda st, act, cap: _masked_scan(e0, st, trace, act, cap)
+    )(edge_states, active, caps)  # hits: (E, T), zero where inactive
+    edge_hit = edge_hits.any(axis=0)  # (T,) — exactly one edge active per t
+
+    miss = ~edge_hit
+    parent_state, parent_hits = _masked_scan(
+        hspec.parent, jax_cache.init_state(hspec.parent), trace, miss
+    )
+
+    edge_hot = edge_states.get("hot") if e0.kind == "plfua" else None
+    parent_hot = parent_state.get("hot") if hspec.parent.kind == "plfua" else None
+    return {
+        "edge_hit": edge_hit,
+        "parent_hit": parent_hits,
+        "edge": _tier_counters(
+            e0, edge_hits, active, trace, edge_hot, edge_states["count"]
+        ),
+        "parent": _tier_counters(
+            hspec.parent, parent_hits, miss, trace, parent_hot, parent_state["count"]
+        ),
+        "edge_states": edge_states,
+        "parent_state": parent_state,
+    }
+
+
+@functools.partial(jax.jit, static_argnums=0)
+def simulate_hierarchy_batch(
+    hspec: HierarchySpec, traces: jax.Array, assignments: jax.Array
+):
+    """vmap the hierarchy over (S, T) trace samples in one device launch."""
+    return jax.vmap(lambda tr, a: simulate_hierarchy(hspec, tr, a))(
+        traces, assignments
+    )

@@ -1,0 +1,67 @@
+"""Pure-Python reference hierarchy: the oracle for the jitted simulator.
+
+Builds each tier from the paper-faithful policy objects in
+``repro.core.policies`` and processes requests strictly in trace order:
+request -> assigned edge; on edge miss the same request goes to the shared
+parent. Decision-for-decision equality with ``repro.cdn.simulate_hierarchy``
+(same hit sequences, same final cache contents, same eviction counts) is
+asserted in tests/test_cdn.py.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.core import policies
+from repro.core.jax_cache import PolicySpec
+from repro.cdn.hierarchy import HierarchySpec
+
+__all__ = ["build_policy", "simulate_hierarchy_reference", "ReferenceResult"]
+
+
+def build_policy(spec: PolicySpec) -> policies.CachePolicy:
+    """PolicySpec -> the equivalent reference policy object."""
+    if spec.kind == "lru":
+        return policies.LRUCache(spec.capacity)
+    if spec.kind == "lfu":
+        return policies.LFUCache(spec.capacity)
+    if spec.kind == "plfu":
+        return policies.PLFUCache(spec.capacity)
+    if spec.kind == "plfua":
+        return policies.PLFUACache(spec.capacity, hot=range(spec.effective_hot))
+    if spec.kind == "wlfu":
+        return policies.WLFUCache(spec.capacity, window=spec.window)
+    raise ValueError(f"no reference policy for kind {spec.kind!r}")
+
+
+@dataclasses.dataclass
+class ReferenceResult:
+    edge_hit: np.ndarray  # (T,) bool
+    parent_hit: np.ndarray  # (T,) bool
+    edges: list  # per-edge policy objects (hits/misses/evictions populated)
+    parent: policies.CachePolicy
+
+    def in_cache(self, n_objects: int) -> tuple[np.ndarray, np.ndarray]:
+        """Final contents: (edge (E, n) bool, parent (n,) bool)."""
+        edge = np.array(
+            [[p.contains(i) for i in range(n_objects)] for p in self.edges]
+        )
+        parent = np.array([self.parent.contains(i) for i in range(n_objects)])
+        return edge, parent
+
+
+def simulate_hierarchy_reference(
+    hspec: HierarchySpec, trace: np.ndarray, assignment: np.ndarray
+) -> ReferenceResult:
+    edges = [build_policy(s) for s in hspec.edges]
+    parent = build_policy(hspec.parent)
+    T = len(trace)
+    edge_hit = np.zeros(T, bool)
+    parent_hit = np.zeros(T, bool)
+    for t, (x, e) in enumerate(zip(trace.tolist(), assignment.tolist())):
+        hit = edges[e].request(x)
+        edge_hit[t] = hit
+        if not hit:
+            parent_hit[t] = parent.request(x)
+    return ReferenceResult(edge_hit, parent_hit, edges, parent)

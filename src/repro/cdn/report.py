@@ -1,0 +1,200 @@
+"""Per-tier roll-ups: CHR, evictions, management cost and energy.
+
+The paper prices a cache by the CPU time its *management loop* burns
+(core.energy converts that to Joules at one Xeon-core TDP share). The
+hierarchy simulator counts decisions, not seconds, so this module carries a
+coarse operation-count model per policy kind — dict/heap touches per request
+plus the eviction inner loop, with the paper's two cost profiles:
+
+  * ``heap`` — lazy min-heap eviction, O(log C) per eviction (the optimised
+    implementation benchmarked in cache_py);
+  * ``scan`` — O(C) linear-scan eviction (the paper's §3 profile, the one that
+    produces Fig. 4's CPU ridge at intermediate cache sizes).
+
+``per_op_s`` calibrates an "operation" to seconds; the default 1e-7 s (~100 ns
+per dict/heap touch on the paper's Xeon Gold 6130) reproduces the right order
+of magnitude against core.simulate timings. It is a parameter, not a claim.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any
+
+import numpy as np
+
+from repro.core import energy
+from repro.core.jax_cache import PolicySpec
+from repro.cdn.hierarchy import HierarchySpec
+
+__all__ = ["TierReport", "HierarchyReport", "mgmt_ops", "hierarchy_report"]
+
+#: dict/heap touches charged per processed request, by policy kind.
+_REQ_OPS = {"lru": 3.0, "lfu": 3.0, "plfu": 3.0, "plfua": 1.0, "wlfu": 5.0}
+#: extra touches per *admitted* request (plfua meters metadata work only for
+#: the hot set — that asymmetry is the paper's §4 energy argument).
+_ADMITTED_OPS = {"plfua": 3.0}
+
+
+def mgmt_ops(
+    spec: PolicySpec,
+    requests: float,
+    admitted_requests: float,
+    evictions: float,
+    cost_model: str = "heap",
+) -> float:
+    """Abstract management-operation count for one tier."""
+    if cost_model not in ("heap", "scan"):
+        raise ValueError(f"cost_model must be 'heap' or 'scan', got {cost_model!r}")
+    per_evict = (
+        float(spec.capacity)
+        if (cost_model == "scan" or spec.kind == "wlfu")  # wlfu heap is invalid
+        else math.log2(max(2.0, spec.capacity))
+    )
+    ops = _REQ_OPS[spec.kind] * requests
+    ops += _ADMITTED_OPS.get(spec.kind, 0.0) * admitted_requests
+    ops += per_evict * evictions
+    return float(ops)
+
+
+@dataclasses.dataclass
+class TierReport:
+    tier: str  # "edge[i]" | "edge" (aggregate) | "parent"
+    policy: str
+    capacity: int
+    requests: int
+    hits: int
+    evictions: int
+    mgmt_ops: float
+    mgmt_cpu_s: float
+    mgmt_energy_j: float
+
+    @property
+    def chr(self) -> float:
+        return self.hits / self.requests if self.requests else 0.0
+
+    def row(self) -> dict:
+        return {
+            "tier": self.tier,
+            "policy": self.policy,
+            "capacity": self.capacity,
+            "requests": self.requests,
+            "hits": self.hits,
+            "chr": self.chr,
+            "evictions": self.evictions,
+            "mgmt_ops": self.mgmt_ops,
+            "mgmt_cpu_s": self.mgmt_cpu_s,
+            "mgmt_energy_j": self.mgmt_energy_j,
+        }
+
+
+@dataclasses.dataclass
+class HierarchyReport:
+    """Fleet-level view of one simulated trace (or the mean over a batch)."""
+
+    per_edge: list[TierReport]
+    edge: TierReport  # aggregate over the fleet
+    parent: TierReport
+    n_requests: int
+    origin_requests: int  # missed both tiers -> fetched from origin
+
+    @property
+    def edge_chr(self) -> float:
+        return self.edge.chr
+
+    @property
+    def parent_chr(self) -> float:
+        return self.parent.chr
+
+    @property
+    def total_chr(self) -> float:
+        """Served from *some* cache tier (edge or parent)."""
+        if not self.n_requests:
+            return 0.0
+        return (self.edge.hits + self.parent.hits) / self.n_requests
+
+    @property
+    def mgmt_cpu_s(self) -> float:
+        return self.edge.mgmt_cpu_s + self.parent.mgmt_cpu_s
+
+    @property
+    def mgmt_energy_j(self) -> float:
+        return self.edge.mgmt_energy_j + self.parent.mgmt_energy_j
+
+    def rows(self) -> list[dict]:
+        return [t.row() for t in (*self.per_edge, self.edge, self.parent)]
+
+
+def _tier(
+    name: str, spec: PolicySpec, c: dict[str, Any], cost_model: str, per_op_s: float
+) -> TierReport:
+    ops = mgmt_ops(
+        spec,
+        float(c["requests"]),
+        float(c["admitted_requests"]),
+        float(c["evictions"]),
+        cost_model,
+    )
+    cpu_s = ops * per_op_s
+    return TierReport(
+        tier=name,
+        policy=spec.kind,
+        capacity=spec.capacity,
+        requests=int(c["requests"]),
+        hits=int(c["hits"]),
+        evictions=int(c["evictions"]),
+        mgmt_ops=ops,
+        mgmt_cpu_s=cpu_s,
+        mgmt_energy_j=energy.mgmt_energy_j(cpu_s),
+    )
+
+
+def hierarchy_report(
+    hspec: HierarchySpec,
+    result: dict[str, Any],
+    *,
+    cost_model: str = "heap",
+    per_op_s: float = 1e-7,
+) -> HierarchyReport:
+    """Roll up one ``simulate_hierarchy`` result (host-side numpy).
+
+    For batched results (leading sample axis from ``simulate_hierarchy_batch``)
+    counters are summed over samples — i.e. the report covers the whole batch.
+    """
+    edge_c = {k: np.asarray(v) for k, v in result["edge"].items()}
+    parent_c = {k: int(np.asarray(v).sum()) for k, v in result["parent"].items()}
+
+    # collapse an optional sample axis, keeping the edge axis (always last)
+    per_edge_c = {k: v.reshape(-1, v.shape[-1]).sum(0) for k, v in edge_c.items()}
+    E = hspec.n_edges
+    per_edge = [
+        _tier(
+            f"edge[{i}]",
+            hspec.edges[i],
+            {k: per_edge_c[k][i] for k in per_edge_c},
+            cost_model,
+            per_op_s,
+        )
+        for i in range(E)
+    ]
+    agg = TierReport(
+        tier="edge",
+        policy=hspec.edges[0].kind,
+        capacity=sum(e.capacity for e in hspec.edges),
+        requests=sum(t.requests for t in per_edge),
+        hits=sum(t.hits for t in per_edge),
+        evictions=sum(t.evictions for t in per_edge),
+        mgmt_ops=sum(t.mgmt_ops for t in per_edge),
+        mgmt_cpu_s=sum(t.mgmt_cpu_s for t in per_edge),
+        mgmt_energy_j=sum(t.mgmt_energy_j for t in per_edge),
+    )
+    parent = _tier("parent", hspec.parent, parent_c, cost_model, per_op_s)
+    n_requests = agg.requests
+    origin = n_requests - agg.hits - parent.hits
+    return HierarchyReport(
+        per_edge=per_edge,
+        edge=agg,
+        parent=parent,
+        n_requests=n_requests,
+        origin_requests=origin,
+    )

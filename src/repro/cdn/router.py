@@ -1,0 +1,67 @@
+"""Request routing: which edge node serves each request of a trace.
+
+A CDN front-end maps clients (or content) onto edge caches. Three standard
+partitioning schemes are provided, all deterministic functions of the trace so
+the jitted hierarchy simulator and the pure-Python reference see the *same*
+assignment array:
+
+  * ``hash``        — content-addressed: edge = mix(object_id) % E. Each object
+                      lives on exactly one edge (consistent-hash style), so the
+                      fleet behaves like one partitioned cache.
+  * ``sticky``      — client-session affinity: consecutive requests form
+                      sessions of ``session_len``; each session hashes to an
+                      edge. Objects replicate across edges (every edge sees the
+                      head of the Zipf), trading capacity for locality.
+  * ``round_robin`` — load-balanced spraying: request t -> edge t % E. The
+                      adversarial case for cache locality.
+
+ROUTER_MODES lists the valid names. ``route`` returns an int32 ``(T,)`` (or
+``(S, T)`` for batched traces) edge-assignment array.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+ROUTER_MODES = ("hash", "sticky", "round_robin")
+
+_MIX_MULT = np.uint64(0xFF51AFD7ED558CCD)
+_MIX_MULT2 = np.uint64(0xC4CEB9FE1A85EC53)
+
+
+def _mix64(x: np.ndarray) -> np.ndarray:
+    """SplitMix64-style avalanche; uniform over uint64 for sequential inputs."""
+    h = x.astype(np.uint64) + np.uint64(0x9E3779B97F4A7C15)
+    h ^= h >> np.uint64(33)
+    h *= _MIX_MULT
+    h ^= h >> np.uint64(33)
+    h *= _MIX_MULT2
+    h ^= h >> np.uint64(33)
+    return h
+
+
+def route(
+    trace: np.ndarray,
+    n_edges: int,
+    mode: str = "hash",
+    *,
+    session_len: int = 64,
+    seed: int = 0,
+) -> np.ndarray:
+    """Edge assignment for every request of ``trace`` (last axis = time)."""
+    if n_edges < 1:
+        raise ValueError(f"n_edges must be >= 1, got {n_edges}")
+    trace = np.asarray(trace)
+    T = trace.shape[-1]
+    if mode == "round_robin":
+        assign = np.broadcast_to(np.arange(T, dtype=np.int64) % n_edges, trace.shape)
+    elif mode == "hash":
+        assign = _mix64(trace.astype(np.int64) + np.int64(seed) * np.int64(1_000_003)) % np.uint64(n_edges)
+    elif mode == "sticky":
+        if session_len < 1:
+            raise ValueError(f"session_len must be >= 1, got {session_len}")
+        block = np.arange(T, dtype=np.int64) // session_len
+        assign = _mix64(block + np.int64(seed) * np.int64(1_000_003)) % np.uint64(n_edges)
+        assign = np.broadcast_to(assign, trace.shape)
+    else:
+        raise ValueError(f"unknown router mode {mode!r}; expected one of {ROUTER_MODES}")
+    return np.ascontiguousarray(assign.astype(np.int32))

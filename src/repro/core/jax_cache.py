@@ -76,13 +76,17 @@ def _masked_argmin(values: jax.Array, mask: jax.Array) -> jax.Array:
     return jnp.argmin(jnp.where(mask, values, _I32_MAX)).astype(jnp.int32)
 
 
-def step(spec: PolicySpec, state: dict[str, jax.Array], x: jax.Array):
+def step(spec: PolicySpec, state: dict[str, jax.Array], x: jax.Array, cap: jax.Array | None = None):
     """One request. Returns (new_state, hit: bool). Order of operations matches
-    the Python reference exactly (see tests/test_jax_cache.py)."""
+    the Python reference exactly (see tests/test_jax_cache.py).
+
+    ``cap`` optionally overrides ``spec.capacity`` with a *traced* value so a
+    fleet of edges sharing one compiled step can differ in cache size
+    (repro.cdn vmaps this step over edge nodes)."""
     x = x.astype(jnp.int32)
     in_cache = state["in_cache"]
     count = state["count"]
-    cap = jnp.int32(spec.capacity)
+    cap = jnp.int32(spec.capacity) if cap is None else jnp.asarray(cap, jnp.int32)
 
     if spec.kind == "wlfu":
         # Slide the window *before* the hit test, as the reference does.

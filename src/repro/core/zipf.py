@@ -37,7 +37,9 @@ def sample_trace(
     rng = np.random.default_rng(seed)
     cdf = np.cumsum(zipf_probs(n_objects, alpha))
     u = rng.random(trace_len)
-    return np.searchsorted(cdf, u, side="right").astype(np.int32)
+    idx = np.searchsorted(cdf, u, side="right")
+    # cumsum rounding can leave cdf[-1] a few ulps under 1.0; clamp the sliver
+    return np.minimum(idx, n_objects - 1).astype(np.int32)
 
 
 def sample_traces(

@@ -152,6 +152,14 @@ class Roofline:
         }
 
 
+def cost_dict(cost) -> dict:
+    """Normalise ``compiled.cost_analysis()`` across jax versions: older
+    releases return a one-element list of dicts, newer ones a flat dict."""
+    if isinstance(cost, (list, tuple)):
+        return cost[0] if cost else {}
+    return cost or {}
+
+
 def analyze(
     hlo_text: str,
     cost: dict,
@@ -169,6 +177,7 @@ def analyze(
     from repro.roofline import hlo_model
 
     mc = hlo_model.module_cost(hlo_text)
+    cost = cost_dict(cost)
     xla_flops = float(cost.get("flops", 0.0))
     xla_bytes = float(cost.get("bytes accessed", 0.0))
     flops = max(mc.flops, xla_flops)

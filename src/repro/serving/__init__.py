@@ -1,6 +1,16 @@
-"""Serving layer: the paper's cache policies drive the content/prefix cache."""
+"""Serving layer: the paper's cache policies drive the content/prefix cache —
+single-node (ContentCache) or as a routed edge fleet + parent (FleetContentCache)."""
 from repro.serving.content_cache import ContentCache
 from repro.serving.engine import Request, Result, ServeEngine
+from repro.serving.fleet_cache import FleetContentCache
 from repro.serving.scheduler import Scheduler, SchedulerConfig
 
-__all__ = ["ContentCache", "Request", "Result", "ServeEngine", "Scheduler", "SchedulerConfig"]
+__all__ = [
+    "ContentCache",
+    "FleetContentCache",
+    "Request",
+    "Result",
+    "ServeEngine",
+    "Scheduler",
+    "SchedulerConfig",
+]

@@ -78,6 +78,10 @@ class ContentCache:
         self.stats.mgmt_time_s += time.perf_counter() - t0
         if not admitted:
             return False
+        old = self._payloads.get(obj_id)
+        if old is not None:
+            # replacing a stored payload must not double-count its bytes
+            self.stats.bytes_stored -= self._size_of(old)
         self._payloads[obj_id] = payload
         self.stats.inserts += 1
         self.stats.bytes_stored += self._size_of(payload)

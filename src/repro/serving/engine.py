@@ -96,3 +96,26 @@ class ServeEngine:
 
     def run(self, requests: list[Request]) -> list[Result]:
         return [self.generate(r) for r in requests]
+
+    def report(self) -> dict:
+        """Engine-level accounting incl. the paper's management-time metric.
+
+        ``mgmt_time_s`` is the CPU time the content-cache policy brain(s)
+        burned on admission/eviction decisions — the quantity the paper prices
+        in Joules (core.energy.mgmt_energy_j)."""
+        out = {
+            "prefill_tokens_computed": self.stats.prefill_tokens_computed,
+            "prefill_tokens_saved": self.stats.prefill_tokens_saved,
+            "decode_tokens": self.stats.decode_tokens,
+        }
+        if self.content is not None:
+            s = self.content.stats
+            out.update(
+                cache_chr=s.chr,
+                cache_hits=s.hits,
+                cache_misses=s.misses,
+                cache_evictions=s.evictions,
+                bytes_stored=s.bytes_stored,
+                mgmt_time_s=s.mgmt_time_s,
+            )
+        return out

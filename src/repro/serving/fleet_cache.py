@@ -1,0 +1,142 @@
+"""Multi-node content-cache front for the serving engine.
+
+``FleetContentCache`` puts E edge ``ContentCache`` nodes (each with its own
+policy brain) in front of one shared parent node and routes every lookup with
+the same deterministic router the CDN simulator uses (:mod:`repro.cdn.router`).
+The lookup/offer surface is identical to a single ``ContentCache``, so
+``ServeEngine`` takes it unchanged:
+
+  * ``lookup`` — route to an edge; edge hit serves directly. On an edge miss
+    the parent is consulted; a parent hit fills the edge back (standard CDN
+    fill-on-read) and serves.
+  * ``offer``  — both tiers are offered the computed payload (each tier's own
+    admission policy decides).
+
+Per-node policies may differ (e.g. WLFU edges over a PLFU parent): the edges
+list takes one policy name or a list of E names.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable
+
+import numpy as np
+
+from repro.cdn import router as router_mod
+from repro.serving.content_cache import CacheStats, ContentCache
+
+__all__ = ["FleetContentCache"]
+
+
+class FleetContentCache:
+    def __init__(
+        self,
+        n_edges: int,
+        edge_capacity: int,
+        parent_capacity: int,
+        *,
+        policy: str | list[str] = "plfua",
+        parent_policy: str | None = None,
+        router: str = "hash",
+        session_len: int = 64,
+        n_objects: int | None = None,
+        window: int | None = None,
+        size_of: Callable[[Any], int] = lambda p: 1,
+    ):
+        if n_edges < 1:
+            raise ValueError(f"n_edges must be >= 1, got {n_edges}")
+        if router not in router_mod.ROUTER_MODES:
+            raise ValueError(
+                f"unknown router {router!r}; expected one of {router_mod.ROUTER_MODES}"
+            )
+        edge_policies = [policy] * n_edges if isinstance(policy, str) else list(policy)
+        if len(edge_policies) != n_edges:
+            raise ValueError("need one policy name per edge")
+        kw = dict(n_objects=n_objects, window=window, size_of=size_of)
+        self.edges = [
+            ContentCache(edge_capacity, p, **kw) for p in edge_policies
+        ]
+        self.parent = ContentCache(parent_capacity, parent_policy or edge_policies[0], **kw)
+        self.router = router
+        self.session_len = session_len
+        self._clock = 0  # request counter driving sticky / round-robin routing
+        self._pending: dict[int, int] = {}  # obj_id -> edge of its open miss
+        self.parent_fills = 0
+
+    # ------------------------------------------------------------- routing
+    def edge_for(self, obj_id: int) -> int:
+        """The edge the *next* request for ``obj_id`` routes to (advances the
+        request clock, mirroring cdn.router.route on the request stream)."""
+        t = self._clock
+        self._clock += 1
+        key = {"hash": obj_id, "sticky": t // self.session_len, "round_robin": t}[
+            self.router
+        ]
+        if self.router == "round_robin":
+            return int(key % len(self.edges))
+        return int(
+            router_mod._mix64(np.asarray([key], np.int64))[0]
+            % np.uint64(len(self.edges))
+        )
+
+    # ------------------------------------------------------- cache surface
+    def lookup(self, obj_id: int) -> Any | None:
+        e = self.edge_for(obj_id)
+        payload = self.edges[e].lookup(obj_id)
+        if payload is not None:
+            self._pending.pop(obj_id, None)
+            return payload
+        payload = self.parent.lookup(obj_id)
+        if payload is not None:
+            # fill the edge on the way back down (its admission already ran)
+            self.edges[e].offer(obj_id, payload)
+            self.parent_fills += 1
+            self._pending.pop(obj_id, None)
+            return payload
+        self._pending[obj_id] = e  # remember which edge owns the open miss
+        return None
+
+    def offer(self, obj_id: int, payload: Any) -> bool:
+        """Offer a freshly-computed payload to both tiers (post-double-miss).
+
+        The payload lands on the edge whose lookup missed (tracked per object,
+        so interleaved lookups of other objects don't misplace it)."""
+        e = self._pending.pop(obj_id, None)
+        if e is None:
+            # no open miss recorded: nothing admitted this object — same
+            # contract as ContentCache.offer without a prior lookup
+            return False
+        stored_parent = self.parent.offer(obj_id, payload)
+        stored_edge = self.edges[e].offer(obj_id, payload)
+        return stored_edge or stored_parent
+
+    # ------------------------------------------------------------- metrics
+    @property
+    def stats(self) -> CacheStats:
+        """Fleet-level aggregate. ``hits`` counts requests served from *any*
+        tier; ``misses`` only requests that reached origin (both tiers cold),
+        so ``stats.chr`` is the fleet CHR. Management time sums every node."""
+        agg = CacheStats()
+        tiers = [*self.edges, self.parent]
+        for c in tiers:
+            agg.inserts += c.stats.inserts
+            agg.evictions += c.stats.evictions
+            agg.mgmt_time_s += c.stats.mgmt_time_s
+            agg.bytes_stored += c.stats.bytes_stored
+        edge_hits = sum(c.stats.hits for c in self.edges)
+        # parent stats count edge-fill lookups too; hits there served a request
+        agg.hits = edge_hits + self.parent.stats.hits
+        total = sum(c.stats.hits + c.stats.misses for c in self.edges)
+        agg.misses = total - agg.hits
+        return agg
+
+    def tier_stats(self) -> dict[str, CacheStats]:
+        out = {f"edge[{i}]": c.stats for i, c in enumerate(self.edges)}
+        out["parent"] = self.parent.stats
+        return out
+
+    @property
+    def metadata_entries(self) -> int:
+        return sum(c.metadata_entries for c in self.edges) + self.parent.metadata_entries
+
+    def __len__(self) -> int:
+        return sum(len(c) for c in self.edges) + len(self.parent)

@@ -1,0 +1,119 @@
+"""Workload subsystem: named, reproducible request-trace scenarios.
+
+``SCENARIOS`` maps a string name to a generator; ``TraceSpec`` captures a
+fully-resolved scenario (name + shape + seed + overrides) as a frozen,
+hashable value that benchmarks and tests can pass around, and ``make_traces``
+is the one-call entry point:
+
+    from repro import workloads
+    traces = workloads.make_traces("flash_crowd", n_objects=2000,
+                                   n_samples=4, trace_len=20_000, seed=1)
+
+Every scenario returns ``(n_samples, trace_len)`` int32 with ids in
+``[0, n_objects)`` — drop-in for ``core.jax_cache.simulate_batch``, the
+cache_sim Pallas kernel, and ``repro.cdn.simulate_hierarchy_batch``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import numpy as np
+
+from repro.core import zipf
+from repro.workloads import generators
+from repro.workloads.generators import (
+    churn,
+    diurnal,
+    flash_crowd,
+    multi_tenant,
+    stationary,
+)
+
+__all__ = [
+    "SCENARIOS",
+    "SCENARIO_NAMES",
+    "TraceSpec",
+    "make_traces",
+    "register_scenario",
+    "stationary",
+    "churn",
+    "flash_crowd",
+    "diurnal",
+    "multi_tenant",
+]
+
+SCENARIOS: dict[str, Callable[..., np.ndarray]] = {
+    "stationary": stationary,
+    "churn": churn,
+    "flash_crowd": flash_crowd,
+    "diurnal": diurnal,
+    "multi_tenant": multi_tenant,
+}
+
+SCENARIO_NAMES = tuple(SCENARIOS)
+
+
+def register_scenario(name: str, fn: Callable[..., np.ndarray]) -> None:
+    """Register a custom generator under ``name`` (same signature contract)."""
+    if name in SCENARIOS:
+        raise ValueError(f"scenario {name!r} already registered")
+    SCENARIOS[name] = fn
+
+
+def make_traces(
+    scenario: str,
+    n_objects: int,
+    n_samples: int = zipf.PAPER_NUM_SAMPLES,
+    trace_len: int = zipf.PAPER_TRACE_LEN,
+    seed: int = 0,
+    **overrides: Any,
+) -> np.ndarray:
+    """Build ``(n_samples, trace_len)`` int32 traces for a named scenario."""
+    try:
+        fn = SCENARIOS[scenario]
+    except KeyError:
+        raise ValueError(
+            f"unknown scenario {scenario!r}; expected one of {SCENARIO_NAMES}"
+        ) from None
+    out = fn(n_objects, n_samples, trace_len, seed=seed, **overrides)
+    out = np.asarray(out, np.int32)
+    if out.shape != (n_samples, trace_len):
+        raise AssertionError(
+            f"{scenario}: generator emitted shape {out.shape}, "
+            f"expected {(n_samples, trace_len)}"
+        )
+    return out
+
+
+@dataclasses.dataclass(frozen=True)
+class TraceSpec:
+    """A fully-resolved workload scenario (hashable; usable as a jit static)."""
+
+    scenario: str
+    n_objects: int
+    n_samples: int = zipf.PAPER_NUM_SAMPLES
+    trace_len: int = zipf.PAPER_TRACE_LEN
+    seed: int = 0
+    overrides: tuple[tuple[str, Any], ...] = ()
+
+    def __post_init__(self):
+        if self.scenario not in SCENARIOS:
+            raise ValueError(
+                f"unknown scenario {self.scenario!r}; expected one of {SCENARIO_NAMES}"
+            )
+
+    def with_overrides(self, **kw: Any) -> "TraceSpec":
+        merged = dict(self.overrides)
+        merged.update(kw)
+        return dataclasses.replace(self, overrides=tuple(sorted(merged.items())))
+
+    def build(self) -> np.ndarray:
+        return make_traces(
+            self.scenario,
+            self.n_objects,
+            self.n_samples,
+            self.trace_len,
+            self.seed,
+            **dict(self.overrides),
+        )

@@ -1,0 +1,138 @@
+"""Minimal stand-in for ``hypothesis`` so the tier-1 suite runs without it.
+
+The real package is preferred (``requirements.txt`` lists it as optional);
+this shim keeps the property tests *running* — as seeded random-example
+tests — rather than skipping whole modules when hypothesis is absent.
+
+Only the surface the test-suite uses is implemented:
+``given``, ``settings(max_examples=, deadline=)``, and the strategies
+``integers``, ``sampled_from``, ``lists``, ``floats``, ``booleans``,
+``data`` (with ``.draw``). Shrinking, the database, and reproduction
+decorators are intentionally out of scope.
+"""
+from __future__ import annotations
+
+import functools
+import inspect
+import random
+
+_DEFAULT_MAX_EXAMPLES = 25
+
+
+class _Strategy:
+    def __init__(self, sample):
+        self._sample = sample
+
+    def sample(self, rng: random.Random):
+        return self._sample(rng)
+
+    def map(self, fn):
+        return _Strategy(lambda rng: fn(self._sample(rng)))
+
+    def filter(self, pred, _tries: int = 100):
+        def sample(rng):
+            for _ in range(_tries):
+                v = self._sample(rng)
+                if pred(v):
+                    return v
+            raise ValueError("filter predicate too restrictive for fallback strategy")
+
+        return _Strategy(sample)
+
+
+class _DataObject:
+    """Mirror of hypothesis' interactive ``data()`` draw object."""
+
+    def __init__(self, rng: random.Random):
+        self._rng = rng
+
+    def draw(self, strategy: _Strategy, label: str | None = None):
+        return strategy.sample(self._rng)
+
+
+class _DataMarker(_Strategy):
+    def __init__(self):
+        super().__init__(lambda rng: _DataObject(rng))
+
+
+class strategies:  # noqa: N801 - module-like namespace, imported as ``st``
+    @staticmethod
+    def integers(min_value: int = 0, max_value: int = 1 << 16) -> _Strategy:
+        return _Strategy(lambda rng: rng.randint(min_value, max_value))
+
+    @staticmethod
+    def floats(min_value: float = 0.0, max_value: float = 1.0, **_kw) -> _Strategy:
+        return _Strategy(lambda rng: rng.uniform(min_value, max_value))
+
+    @staticmethod
+    def booleans() -> _Strategy:
+        return _Strategy(lambda rng: rng.random() < 0.5)
+
+    @staticmethod
+    def sampled_from(elements) -> _Strategy:
+        elements = list(elements)
+        return _Strategy(lambda rng: elements[rng.randrange(len(elements))])
+
+    @staticmethod
+    def lists(elements: _Strategy, min_size: int = 0, max_size: int = 30) -> _Strategy:
+        def sample(rng):
+            k = rng.randint(min_size, max_size)
+            return [elements.sample(rng) for _ in range(k)]
+
+        return _Strategy(sample)
+
+    @staticmethod
+    def data() -> _Strategy:
+        return _DataMarker()
+
+
+st = strategies
+
+
+def settings(max_examples: int = _DEFAULT_MAX_EXAMPLES, deadline=None, **_kw):
+    def deco(fn):
+        fn._fallback_max_examples = max_examples
+        return fn
+
+    return deco
+
+
+def given(*arg_strategies: _Strategy, **kw_strategies: _Strategy):
+    """Run the test body over seeded random examples (deterministic per test)."""
+
+    def deco(fn):
+        if arg_strategies:
+            names = [
+                p
+                for p in inspect.signature(fn).parameters
+                if p not in kw_strategies and p != "self"
+            ]
+            kw_strategies.update(dict(zip(names, arg_strategies)))
+
+        @functools.wraps(fn)
+        def wrapper(*args, **kwargs):
+            n = getattr(fn, "_fallback_max_examples", None) or getattr(
+                wrapper, "_fallback_max_examples", _DEFAULT_MAX_EXAMPLES
+            )
+            rng = random.Random(f"{fn.__module__}.{fn.__qualname__}")
+            for example in range(n):
+                drawn = {k: s.sample(rng) for k, s in kw_strategies.items()}
+                try:
+                    fn(*args, **kwargs, **drawn)
+                except Exception as e:  # pragma: no cover - failure path
+                    raise AssertionError(
+                        f"falsifying example (#{example}): {drawn!r}"
+                    ) from e
+
+        # hide the drawn parameters from pytest's fixture resolution
+        del wrapper.__wrapped__
+        sig = inspect.signature(fn)
+        wrapper.__signature__ = sig.replace(
+            parameters=[p for p in sig.parameters.values() if p.name not in kw_strategies]
+        )
+        return wrapper
+
+    return deco
+
+
+HealthCheck = type("HealthCheck", (), {"all": staticmethod(lambda: [])})

@@ -1,7 +1,11 @@
 """Unit + property tests for the paper-faithful reference policies."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # pragma: no cover - CI installs hypothesis; shim elsewhere
+    from _hypothesis_fallback import given, settings, strategies as st
 
 from repro.core import policies, simulate, zipf
 

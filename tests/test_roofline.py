@@ -7,7 +7,7 @@ import numpy as np
 import pytest
 
 from repro.roofline import hlo_model
-from repro.roofline.analysis import analyze, parse_collectives
+from repro.roofline.analysis import analyze, cost_dict, parse_collectives
 
 
 def _compile(fn, *args):
@@ -50,7 +50,7 @@ def test_scan_trip_count_multiplied():
     one = 2 * m * k * k
     assert cost.flops == pytest.approx(trips * one, rel=0.05)
     # document the XLA:CPU quirk the model corrects:
-    xla = float(c.cost_analysis().get("flops", 0.0))
+    xla = float(cost_dict(c.cost_analysis()).get("flops", 0.0))
     assert xla < cost.flops  # body counted once by cost_analysis
 
 

@@ -111,3 +111,101 @@ def test_scheduler_batches_and_deadlines(tiny_engine):
         sched2.submit(r, now=0.0)
     assert sched2.drain() == []
     assert sched2.stats.dropped == 5
+
+# ----------------------------------------------------------- byte accounting
+def test_content_cache_byte_accounting_tracks_live_payloads():
+    """bytes_stored must equal the sum of live payload sizes through inserts,
+    replacements, and evictions (satellite: byte-accounting correctness)."""
+    c = ContentCache(capacity=3, policy="lfu", size_of=len)
+
+    def live_bytes():
+        return sum(len(c._payloads[k]) for k in c._payloads)
+
+    rng = np.random.default_rng(0)
+    for step in range(300):
+        obj = int(rng.integers(0, 10))
+        if c.lookup(obj) is None:
+            c.offer(obj, "x" * int(rng.integers(1, 50)))
+        assert c.stats.bytes_stored == live_bytes(), f"drift at step {step}"
+    assert c.stats.evictions > 0  # the loop actually exercised eviction
+
+
+def test_content_cache_reoffer_does_not_double_count():
+    c = ContentCache(capacity=2, policy="lfu", size_of=len)
+    c.lookup(1)
+    c.offer(1, "abc")
+    c.lookup(1)
+    c.offer(1, "defgh")  # replace: 3 bytes out, 5 in
+    assert c.stats.bytes_stored == 5
+
+
+# ---------------------------------------------------------------- fleet cache
+def test_fleet_cache_serves_from_edge_and_parent():
+    from repro.serving import FleetContentCache
+
+    fleet = FleetContentCache(4, 8, 32, policy="plfu", router="hash", n_objects=50)
+    trace = zipf.sample_trace(50, 3000, seed=2)
+    origin = 0
+    for x in trace.tolist():
+        if fleet.lookup(int(x)) is None:
+            origin += 1
+            fleet.offer(int(x), ("payload", int(x)))
+    s = fleet.stats
+    assert s.hits + s.misses == 3000
+    assert s.misses == origin
+    assert s.chr > 0.5  # Zipf head should be cacheable
+    assert fleet.parent_fills > 0  # parent actually backstopped edges
+    assert s.mgmt_time_s > 0
+    tiers = fleet.tier_stats()
+    assert set(tiers) == {f"edge[{i}]" for i in range(4)} | {"parent"}
+    edge_hits = sum(tiers[f"edge[{i}]"].hits for i in range(4))
+    assert s.hits == edge_hits + tiers["parent"].hits
+
+
+def test_fleet_cache_respects_capacity_per_node():
+    from repro.serving import FleetContentCache
+
+    fleet = FleetContentCache(2, 4, 8, policy="lru", router="round_robin")
+    for x in range(100):
+        if fleet.lookup(x) is None:
+            fleet.offer(x, x)
+    for i, edge in enumerate(fleet.edges):
+        assert len(edge) <= 4, f"edge[{i}] over capacity"
+    assert len(fleet.parent) <= 8
+
+
+def test_fleet_cache_in_engine(tiny_engine):
+    """The fleet front is a drop-in ContentCache for the engine: identical
+    generations, and the report exposes the fleet's management time."""
+    from repro.serving import FleetContentCache
+
+    model, params = tiny_engine
+    reqs = _requests(n_objects=20, n_requests=30)
+    cold = ServeEngine(model, params, cache_len=16)
+    fleet = ServeEngine(
+        model, params, cache_len=16,
+        content_cache=FleetContentCache(2, 4, 8, policy="plfu", n_objects=20),
+    )
+    out_cold = cold.run(reqs)
+    out_fleet = fleet.run(reqs)
+    for a, b in zip(out_cold, out_fleet):
+        assert a.new_tokens == b.new_tokens
+    assert fleet.stats.prefill_tokens_saved > 0
+
+
+# --------------------------------------------------------------- engine report
+def test_engine_report_exposes_mgmt_time(tiny_engine):
+    model, params = tiny_engine
+    eng = ServeEngine(
+        model, params, cache_len=16,
+        content_cache=ContentCache(capacity=8, policy="plfu"),
+    )
+    eng.run(_requests(n_requests=20))
+    rep = eng.report()
+    assert rep["mgmt_time_s"] > 0
+    assert rep["cache_hits"] + rep["cache_misses"] == 20
+    assert 0.0 <= rep["cache_chr"] <= 1.0
+    assert rep["prefill_tokens_computed"] > 0
+    # without a content cache the report stays engine-only
+    bare = ServeEngine(model, params, cache_len=16)
+    assert "mgmt_time_s" not in bare.report()

@@ -1,0 +1,132 @@
+"""Property tests for the workload subsystem: every registered scenario must
+emit traces with the declared shape/dtype/id-range contract, deterministically
+per seed; scenario-specific behaviours (churn remaps popularity, flash crowds
+spike cold objects, tenants keep to their blocks) are checked directly."""
+import numpy as np
+import pytest
+
+from repro import workloads
+from repro.workloads import generators
+
+N, S, T = 400, 3, 6_000
+
+
+@pytest.mark.parametrize("scenario", workloads.SCENARIO_NAMES)
+def test_contract_shape_dtype_range(scenario):
+    tr = workloads.make_traces(scenario, N, n_samples=S, trace_len=T, seed=11)
+    assert tr.shape == (S, T)
+    assert tr.dtype == np.int32
+    assert tr.min() >= 0
+    assert tr.max() < N
+
+
+@pytest.mark.parametrize("scenario", workloads.SCENARIO_NAMES)
+def test_deterministic_per_seed(scenario):
+    a = workloads.make_traces(scenario, N, n_samples=2, trace_len=2_000, seed=5)
+    b = workloads.make_traces(scenario, N, n_samples=2, trace_len=2_000, seed=5)
+    c = workloads.make_traces(scenario, N, n_samples=2, trace_len=2_000, seed=6)
+    np.testing.assert_array_equal(a, b)
+    assert (a != c).any(), "different seeds should differ"
+
+
+@pytest.mark.parametrize("scenario", workloads.SCENARIO_NAMES)
+def test_samples_are_independent(scenario):
+    tr = workloads.make_traces(scenario, N, n_samples=S, trace_len=T, seed=1)
+    assert (tr[0] != tr[1]).any()
+
+
+def test_zipf_head_dominates_everywhere():
+    """All scenarios stay Zipf-flavoured: the top decile of the id space gets
+    far more than its uniform share of requests."""
+    for scenario in workloads.SCENARIO_NAMES:
+        tr = workloads.make_traces(scenario, N, n_samples=2, trace_len=T, seed=3)
+        head = N // 10
+        if scenario == "churn":
+            # ids are permuted; measure mass on the 10% most-requested ids
+            counts = np.bincount(tr.ravel(), minlength=N)
+            share = np.sort(counts)[::-1][:head].sum() / tr.size
+        else:
+            share = (tr < head).mean()
+        assert share > 2.5 * 0.1, (scenario, share)
+
+
+def test_stationary_matches_core_zipf():
+    from repro.core import zipf
+
+    a = workloads.stationary(N, 2, 1_000, seed=4)
+    b = zipf.sample_traces(N, n_samples=2, trace_len=1_000, seed=4)
+    np.testing.assert_array_equal(a, b)
+
+
+def test_churn_remaps_popularity_between_phases():
+    tr = workloads.make_traces(
+        "churn", N, n_samples=1, trace_len=10_000, seed=2,
+        n_phases=2, churn_frac=0.5,
+    )[0]
+    first, last = tr[:5_000], tr[5_000:]
+    top_first = set(np.argsort(np.bincount(first, minlength=N))[::-1][:10].tolist())
+    top_last = set(np.argsort(np.bincount(last, minlength=N))[::-1][:10].tolist())
+    assert top_first != top_last, "rank reshuffle should move the head set"
+
+
+def test_churn_zero_frac_is_stationary():
+    a = workloads.make_traces("churn", N, 1, 2_000, seed=9, churn_frac=0.0)
+    b = workloads.make_traces("stationary", N, 1, 2_000, seed=9)
+    np.testing.assert_array_equal(a, b)
+
+
+def test_flash_crowd_spikes_cold_object():
+    base = workloads.make_traces("stationary", N, 1, T, seed=7)[0]
+    spiked = workloads.make_traces(
+        "flash_crowd", N, 1, T, seed=7, n_spikes=2, spike_intensity=0.8
+    )[0]
+    changed = spiked != base
+    assert changed.any()
+    # every overwritten request points into the cold quartile
+    assert (spiked[changed] >= (3 * N) // 4).all()
+    # and the spiked ids dominate their windows far beyond their Zipf share
+    hot_ids = np.unique(spiked[changed])
+    assert np.isin(spiked, hot_ids).mean() > 0.01
+
+
+def test_diurnal_skew_actually_swings():
+    tr = workloads.make_traces(
+        "diurnal", N, 1, 12_000, seed=8, n_cycles=1, alpha_swing=0.8, n_chunks=4
+    )[0]
+    # head concentration differs materially across quarters of the day
+    shares = [(tr[i * 3_000:(i + 1) * 3_000] < N // 20).mean() for i in range(4)]
+    assert max(shares) - min(shares) > 0.1, shares
+
+
+def test_multi_tenant_blocks_and_weights():
+    tr = workloads.make_traces(
+        "multi_tenant", N, 1, T, seed=10, n_tenants=4,
+        weights=(0.7, 0.1, 0.1, 0.1),
+    )[0]
+    block = N // 4
+    tenant = tr // block
+    counts = np.bincount(np.minimum(tenant, 3), minlength=4) / tr.size
+    assert counts[0] > 0.55  # dominant tenant gets its weight
+    # each tenant's block has its own Zipf head
+    for t in range(4):
+        in_block = tr[(tr >= t * block) & (tr < (t + 1) * block)] - t * block
+        if in_block.size > 100:
+            assert (in_block < block // 10).mean() > 0.25
+
+
+def test_registry_and_tracespec():
+    with pytest.raises(ValueError, match="unknown scenario"):
+        workloads.make_traces("nope", N)
+    with pytest.raises(ValueError, match="unknown scenario"):
+        workloads.TraceSpec("nope", N)
+    spec = workloads.TraceSpec("flash_crowd", N, 2, 1_500, seed=1).with_overrides(
+        n_spikes=1
+    )
+    tr = spec.build()
+    assert tr.shape == (2, 1_500) and tr.dtype == np.int32
+    assert hash(spec) == hash(workloads.TraceSpec("flash_crowd", N, 2, 1_500, 1, (("n_spikes", 1),)))
+
+
+def test_register_scenario_rejects_duplicates():
+    with pytest.raises(ValueError, match="already registered"):
+        workloads.register_scenario("stationary", generators.stationary)
