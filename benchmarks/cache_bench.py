@@ -8,7 +8,7 @@ import time
 
 import numpy as np
 
-from repro.core import jax_cache, policies, simulate, zipf
+from repro.core import jax_cache, policies, registry, simulate, zipf
 
 
 def python_reference(full: bool = False):
@@ -31,8 +31,12 @@ def jax_batched(full: bool = False):
     samples = 4
     traces = zipf.sample_traces(n, n_samples=samples, trace_len=tlen, seed=1)
     rows = []
-    for kind in ("lru", "lfu", "plfu", "plfua"):
-        spec = jax_cache.PolicySpec(kind=kind, n_objects=n, capacity=cap)
+    from benchmarks.cdn_bench import policy_window
+
+    for kind in registry.names(jax=True):
+        spec = jax_cache.PolicySpec(
+            kind=kind, n_objects=n, capacity=cap, window=policy_window(kind)
+        )
         hits = jax_cache.simulate_batch(spec, traces)  # compile
         hits.block_until_ready()
         t0 = time.perf_counter()

@@ -7,8 +7,9 @@ roll-up (cdn.report's operation model priced at core.energy's Xeon core TDP).
 
 Groups:
   * ``cdn``        — the acceptance sweep: 4-edge + parent two-tier hierarchy,
-                     all of lru/lfu/plfu/plfua/wlfu, over stationary / churn /
-                     flash-crowd (plus diurnal & multi-tenant at --full).
+                     every registry policy (incl. tinylfu / plfua_dyn sketch
+                     admission), over stationary / churn / flash-crowd (plus
+                     diurnal & multi-tenant at --full).
   * ``cdn_router`` — hash vs sticky vs round-robin partitioning for one policy.
   * ``cdn_topo``   — fleet width and parent-size scaling at fixed total bytes.
 """
@@ -19,8 +20,11 @@ import time
 import numpy as np
 
 from repro import cdn, workloads
+from repro.core import registry
 
-CDN_POLICIES = ("lru", "lfu", "plfu", "plfua", "wlfu")
+#: every policy the jitted tier supports — the registry, not a hand list, so
+#: a new kind lands in the fleet benchmarks automatically
+CDN_POLICIES = registry.names(jax=True)
 WLFU_WINDOW = 2_048  # the one window convention for every fleet benchmark
 
 

@@ -239,6 +239,51 @@ def fig8_hierarchy(full: bool = False):
     return rows
 
 
+def fig9_dynamic_admission(full: bool = False):
+    """Beyond-paper figure: what the paper's PLFUA loses to a *frozen* hot set
+    on non-stationary traffic, and how much a sketch-refreshed hot set
+    (plfua_dyn) and TinyLFU admission recover. One row per policy x workload:
+    CHR under stationary (the paper's regime), churn and flash_crowd, plus the
+    dynamic-vs-static CHR delta the churn regression test pins."""
+    from benchmarks.cdn_bench import policy_window
+    from repro import workloads
+    from repro.core import jax_cache
+
+    n = 10_000 if full else 2_000
+    cap = n * 3 // 100
+    samples, tlen = (8, 100_000) if full else (3, 20_000)
+    kinds = ("plfu", "plfua", "plfua_dyn", "tinylfu", "wlfu")
+    rows = []
+    chr_by = {}
+    for scenario in ("stationary", "churn", "flash_crowd"):
+        traces = workloads.make_traces(
+            scenario, n, n_samples=samples, trace_len=tlen, seed=17
+        )
+        for kind in kinds:
+            spec = jax_cache.PolicySpec(
+                kind=kind, n_objects=n, capacity=cap, window=policy_window(kind)
+            )
+            hits = np.asarray(jax_cache.simulate_batch(spec, traces))
+            chr_by[(scenario, kind)] = float(hits.mean())
+            rows.append(
+                (
+                    f"fig9/{scenario}/{kind}",
+                    0.0,
+                    f"CHR={chr_by[(scenario, kind)]:.4f}",
+                )
+            )
+    for scenario in ("churn", "flash_crowd"):
+        delta = chr_by[(scenario, "plfua_dyn")] - chr_by[(scenario, "plfua")]
+        rows.append(
+            (
+                f"fig9/{scenario}/dyn_minus_static",
+                0.0,
+                f"dCHR={delta:+.4f} (sketch-refreshed hot set vs the paper's frozen prefix)",
+            )
+        )
+    return rows
+
+
 ALL = {
     "fig2": fig2_red_columns,
     "fig3": fig3_chr_grid,
@@ -247,5 +292,6 @@ ALL = {
     "fig6": fig6_chr_increment,
     "fig7": fig7_cpu_vs_plfua,
     "fig8": fig8_hierarchy,
+    "fig9": fig9_dynamic_admission,
     "metadata": metadata_table,
 }

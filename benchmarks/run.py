@@ -15,7 +15,7 @@ import time
 def main() -> None:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--full", action="store_true", help="paper-scale grids (slow)")
-    ap.add_argument("--only", default=None, help="run one group (fig2..fig8, metadata, cache_py, cache_jax, cache_pallas, cdn, cdn_router, cdn_topo, serving_energy, roofline)")
+    ap.add_argument("--only", default=None, help="run one group (fig2..fig9, metadata, cache_py, cache_jax, cache_pallas, cdn, cdn_router, cdn_topo, serving_energy, roofline)")
     args = ap.parse_args()
 
     from benchmarks import cache_bench, cdn_bench, paper_figs, roofline_bench, serving_energy

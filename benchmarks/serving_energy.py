@@ -10,7 +10,7 @@ E_prefill/E_decode use the arch's active-parameter count (mistral-7b-class
 backbone by default, --full uses deepseek-v2's 21B active)."""
 from __future__ import annotations
 
-from repro.core import energy, policies, simulate, zipf
+from repro.core import energy, registry, simulate, zipf
 from repro.configs import get_config
 from repro.models import build
 
@@ -24,7 +24,9 @@ def serving_energy_table(full: bool = False):
     tlen = 100_000 if full else 30_000
     prompt_len, new_tokens = 2_048, 128
     rows = []
-    for name in ("lru", "lfu", "plfu", "plfua", "tinylfu"):
+    # the shared registry, not a hand-maintained list: every reference policy
+    # (the jax-tier cdn benchmarks draw from the same registry)
+    for name in registry.names(reference=True):
         r = simulate.run_case(
             name, case, n_samples=3, trace_len=tlen, seed=11
         )

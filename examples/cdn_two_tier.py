@@ -7,7 +7,8 @@ elsewhere decision-for-decision against the paper's pure-Python policies
 (tests/test_cdn.py). Watch two things in the output:
 
   * PLFUA's static hot set is great under stationary traffic and collapses
-    under churn — admission policies need refreshing when popularity drifts.
+    under churn — while plfua_dyn (the same eviction with a sketch-refreshed
+    hot set) and tinylfu admission follow the drift and keep most of the CHR.
   * The parent tier catches a large share of edge misses, so origin traffic
     (the expensive fetch) is a fraction of what a single cache would emit.
 
@@ -18,6 +19,7 @@ import sys
 sys.path.insert(0, "src")
 
 from repro import cdn, workloads
+from repro.core import registry
 
 N_OBJECTS, N_EDGES = 2_000, 4
 EDGE_CAP, PARENT_CAP = 60, 240  # 3% per edge, 12% parent
@@ -33,9 +35,9 @@ for scenario in ("stationary", "churn", "flash_crowd"):
         scenario, N_OBJECTS, n_samples=SAMPLES, trace_len=TRACE, seed=0
     )
     print(f"--- workload: {scenario}")
-    print(f"{'policy':<7} {'edge CHR':>9} {'parent CHR':>11} {'total CHR':>10} "
+    print(f"{'policy':<10} {'edge CHR':>9} {'parent CHR':>11} {'total CHR':>10} "
           f"{'origin':>7} {'mgmt J':>8}")
-    for kind in ("lru", "lfu", "plfu", "plfua", "wlfu"):
+    for kind in registry.names(jax=True):
         hspec = cdn.two_tier(
             kind, N_OBJECTS, n_edges=N_EDGES,
             edge_capacity=EDGE_CAP, parent_capacity=PARENT_CAP,
@@ -44,7 +46,7 @@ for scenario in ("stationary", "churn", "flash_crowd"):
         out = cdn.simulate_hierarchy_batch(hspec, traces, hspec.assignment(traces))
         rep = cdn.hierarchy_report(hspec, out)
         print(
-            f"{kind:<7} {rep.edge_chr:>9.4f} {rep.parent_chr:>11.4f} "
+            f"{kind:<10} {rep.edge_chr:>9.4f} {rep.parent_chr:>11.4f} "
             f"{rep.total_chr:>10.4f} {rep.origin_requests:>7d} "
             f"{rep.mgmt_energy_j:>8.4f}"
         )

@@ -1,0 +1,56 @@
+"""Sketch-based admission in one minute: fixing PLFUA's churn collapse.
+
+The paper's PLFUA admits only a hot set fixed *ahead of time* — unbeatable
+when ids are true popularity ranks, useless once popularity drifts. Two
+sketch policies make admission adaptive at O(1) per request:
+
+  * ``tinylfu``   — admit on a miss only if the count-min-sketch estimate of
+                    the incoming object beats the eviction victim's.
+  * ``plfua_dyn`` — keep PLFUA's eviction, but recompute the hot set every
+                    ``refresh`` requests from sketch top-k (then halve the
+                    sketch, so estimates track recent traffic).
+
+Everything below runs in the jitted JAX tier (one device launch per policy x
+scenario) and is validated decision-for-decision against the pure-Python
+references in tests/test_differential.py.
+
+    PYTHONPATH=src python examples/dynamic_admission.py
+"""
+import sys
+
+sys.path.insert(0, "src")
+
+import numpy as np
+
+from repro import workloads
+from repro.core import jax_cache
+
+N_OBJECTS, CAP = 2_000, 60
+SAMPLES, TRACE = 3, 20_000
+KINDS = ("plfu", "plfua", "plfua_dyn", "tinylfu")
+
+print(
+    f"single cache, {N_OBJECTS} objects, capacity {CAP} (3%), "
+    f"{SAMPLES}x{TRACE} requests; plfua_dyn refresh={jax_cache.PolicySpec(kind='plfua_dyn', n_objects=N_OBJECTS, capacity=CAP).effective_refresh}\n"
+)
+print(f"{'scenario':<13}" + "".join(f"{k:>11}" for k in KINDS))
+chr_by = {}
+for scenario in ("stationary", "churn", "flash_crowd"):
+    traces = workloads.make_traces(
+        scenario, N_OBJECTS, n_samples=SAMPLES, trace_len=TRACE, seed=7
+    )
+    row = []
+    for kind in KINDS:
+        spec = jax_cache.PolicySpec(kind=kind, n_objects=N_OBJECTS, capacity=CAP)
+        hits = np.asarray(jax_cache.simulate_batch(spec, traces))
+        chr_by[(scenario, kind)] = hits.mean()
+        row.append(f"{hits.mean():>11.4f}")
+    print(f"{scenario:<13}" + "".join(row))
+
+gain = chr_by[("churn", "plfua_dyn")] - chr_by[("churn", "plfua")]
+cost = chr_by[("stationary", "plfua")] - chr_by[("stationary", "plfua_dyn")]
+print(
+    f"\ntakeaway: on churn the sketch-refreshed hot set recovers "
+    f"{gain:+.4f} CHR over the paper's frozen prefix, while giving up only "
+    f"{cost:+.4f} when the prior was already right — adaptivity is ~free."
+)

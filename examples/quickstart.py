@@ -11,17 +11,17 @@ import sys
 
 sys.path.insert(0, "src")
 
-from repro.core import simulate, zipf
+from repro.core import registry, simulate, zipf
 
 N_OBJECTS, RATE, TRACE = 5_000, 0.05, 50_000
 case = zipf.GridCase(N_OBJECTS, RATE)
 
 print(f"workload: Zipf(1.1), {N_OBJECTS} objects, cache {case.cache_size} "
       f"({RATE:.0%}), {TRACE} requests x3 samples\n")
-print(f"{'policy':<8} {'CHR':>8} {'cpu_total_s':>12} {'metadata':>9} {'evictions':>10}")
-for policy in ("lru", "lfu", "plfu", "plfua", "tinylfu"):
+print(f"{'policy':<10} {'CHR':>8} {'cpu_total_s':>12} {'metadata':>9} {'evictions':>10}")
+for policy in registry.names(reference=True):
     r = simulate.run_case(policy, case, n_samples=3, trace_len=TRACE)
-    print(f"{policy:<8} {r.mean_chr:>8.4f} {r.mean_cpu_s:>12.4f} "
+    print(f"{policy:<10} {r.mean_chr:>8.4f} {r.mean_cpu_s:>12.4f} "
           f"{r.mean_metadata:>9.0f} {r.mean_evictions:>10.0f}")
 
 print("\npaper claims reproduced: PLFU > LFU (CHR), PLFUA >= PLFU with lower "

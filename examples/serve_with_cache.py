@@ -17,6 +17,7 @@ import numpy as np
 
 from repro.configs import get_config
 from repro.core import energy, zipf
+from repro.core.policies import POLICY_NAMES
 from repro.models import build
 from repro.serving import ContentCache, Request, Scheduler, SchedulerConfig, ServeEngine
 
@@ -25,7 +26,7 @@ def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--requests", type=int, default=60)
     ap.add_argument("--objects", type=int, default=25)
-    ap.add_argument("--policy", default="plfua", choices=["lru", "lfu", "plfu", "plfua", "wlfu", "tinylfu"])
+    ap.add_argument("--policy", default="plfua", choices=list(POLICY_NAMES))
     ap.add_argument("--cache-objects", type=int, default=6)
     args = ap.parse_args()
 

@@ -62,6 +62,23 @@ class HierarchySpec:
                     "edge specs must share kind/n_objects/window to stack; "
                     f"got {e} vs {e0}"
                 )
+            if e0.kind in jax_cache.SKETCH_POLICY_KINDS and (
+                e.effective_sketch_width,
+                e.effective_window,
+                e.effective_refresh,
+                e.effective_hot,
+            ) != (
+                e0.effective_sketch_width,
+                e0.effective_window,
+                e0.effective_refresh,
+                e0.effective_hot,
+            ):
+                # the vmapped step closes over e0's static sketch parameters,
+                # so heterogeneous edges may vary only in traced capacity
+                raise ValueError(
+                    "sketch-policy edges must share sketch_width/window/refresh/"
+                    f"hot_size (effective values differ: {e} vs {e0})"
+                )
         if self.parent.n_objects != e0.n_objects:
             raise ValueError("parent and edges must share n_objects")
         if self.router not in router_mod.ROUTER_MODES:
@@ -94,17 +111,25 @@ def two_tier(
     router: str = "hash",
     session_len: int = 64,
     window: int = 0,
+    refresh: int = 0,
+    sketch_width: int = 0,
     parent_kind: str | None = None,
 ) -> HierarchySpec:
-    """Convenience: homogeneous E-edge fleet + one (usually bigger) parent."""
+    """Convenience: homogeneous E-edge fleet + one (usually bigger) parent.
+
+    ``refresh``/``sketch_width``/``window`` of 0 use the per-tier conventions
+    from :mod:`repro.core.sketch` (derived from each tier's own capacity)."""
     edge = PolicySpec(
-        kind=kind, n_objects=n_objects, capacity=edge_capacity, window=window
+        kind=kind, n_objects=n_objects, capacity=edge_capacity, window=window,
+        refresh=refresh, sketch_width=sketch_width,
     )
     parent = PolicySpec(
         kind=parent_kind or kind,
         n_objects=n_objects,
         capacity=parent_capacity,
         window=window,
+        refresh=refresh,
+        sketch_width=sketch_width,
     )
     return HierarchySpec(
         edges=(edge,) * n_edges, parent=parent, router=router, session_len=session_len
@@ -112,7 +137,13 @@ def two_tier(
 
 
 def _masked_scan(spec: PolicySpec, state, trace, active, cap=None):
-    """Scan ``step`` over the trace, freezing state where ``active`` is False."""
+    """Scan ``step`` over the trace, freezing state where ``active`` is False.
+
+    plfua_dyn routes through the chunked scan so its global-time hot-set
+    refresh fires at trace-position boundaries for every instance, active or
+    not (the reference hierarchy drives ``refresh_now`` on the same timer)."""
+    if spec.kind == "plfua_dyn":
+        return jax_cache._chunked_scan(spec, state, trace, active, cap)
 
     def f(s, inp):
         x, a = inp
@@ -123,22 +154,31 @@ def _masked_scan(spec: PolicySpec, state, trace, active, cap=None):
     return jax.lax.scan(f, state, (trace, active))
 
 
-def _tier_counters(spec: PolicySpec, hits, active, trace, hot_rows, count):
+def _tier_counters(spec: PolicySpec, hits, active, trace, state):
     """Derived per-tier accounting, all from the hit/active series + final state.
 
     Inserts are implied by the policy semantics (every admitted miss inserts),
-    so evictions = inserts - final occupancy — no extra scan outputs needed.
+    so evictions = inserts - final occupancy. Sketch kinds carry the insert
+    count in state (admission there is data-dependent, and plfua_dyn's hot
+    mask changes over time, so neither can be derived from the final state).
     """
     miss = active & ~hits
+    count = state["count"]
     if spec.kind == "plfua":
-        admitted = jnp.take(hot_rows, trace, axis=-1)  # hot mask gathered at x_t
+        admitted = jnp.take(state["hot"], trace, axis=-1)  # hot mask gathered at x_t
+        inserts = (miss & admitted).sum(-1)
+        admitted_requests = (active & admitted).sum(-1)
+    elif spec.kind in jax_cache.SKETCH_POLICY_KINDS:
+        inserts = state["inserts"]
+        # every hit touches policy metadata; every insert is an admitted miss
+        admitted_requests = hits.sum(-1) + inserts
     else:
-        admitted = jnp.ones_like(active)
-    inserts = (miss & admitted).sum(-1)
+        inserts = miss.sum(-1)
+        admitted_requests = active.sum(-1)
     return {
         "requests": active.sum(-1),
         "hits": hits.sum(-1),
-        "admitted_requests": (active & admitted).sum(-1),
+        "admitted_requests": admitted_requests,
         "inserts": inserts,
         "evictions": inserts - count,
         "count": count,
@@ -177,16 +217,12 @@ def simulate_hierarchy(hspec: HierarchySpec, trace: jax.Array, assignment: jax.A
         hspec.parent, jax_cache.init_state(hspec.parent), trace, miss
     )
 
-    edge_hot = edge_states.get("hot") if e0.kind == "plfua" else None
-    parent_hot = parent_state.get("hot") if hspec.parent.kind == "plfua" else None
     return {
         "edge_hit": edge_hit,
         "parent_hit": parent_hits,
-        "edge": _tier_counters(
-            e0, edge_hits, active, trace, edge_hot, edge_states["count"]
-        ),
+        "edge": _tier_counters(e0, edge_hits, active, trace, edge_states),
         "parent": _tier_counters(
-            hspec.parent, parent_hits, miss, trace, parent_hot, parent_state["count"]
+            hspec.parent, parent_hits, miss, trace, parent_state
         ),
         "edge_states": edge_states,
         "parent_state": parent_state,

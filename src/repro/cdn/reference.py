@@ -32,6 +32,20 @@ def build_policy(spec: PolicySpec) -> policies.CachePolicy:
         return policies.PLFUACache(spec.capacity, hot=range(spec.effective_hot))
     if spec.kind == "wlfu":
         return policies.WLFUCache(spec.capacity, window=spec.window)
+    if spec.kind == "tinylfu":
+        return policies.TinyLFUCache(
+            spec.capacity,
+            window=spec.effective_window,
+            sketch_width=spec.effective_sketch_width,
+        )
+    if spec.kind == "plfua_dyn":
+        return policies.DynamicPLFUACache(
+            spec.capacity,
+            spec.n_objects,
+            hot_size=spec.effective_hot,
+            refresh=spec.effective_refresh,
+            sketch_width=spec.effective_sketch_width,
+        )
     raise ValueError(f"no reference policy for kind {spec.kind!r}")
 
 
@@ -56,6 +70,14 @@ def simulate_hierarchy_reference(
 ) -> ReferenceResult:
     edges = [build_policy(s) for s in hspec.edges]
     parent = build_policy(hspec.parent)
+    # dynamic-PLFUA refreshes run on *global* time in a fleet (one timer per
+    # tier), matching the jitted simulator's chunked scan — switch the policy
+    # objects to externally-driven refresh and fire them on the tier cadence.
+    timers: list[tuple[policies.DynamicPLFUACache, int]] = []
+    for pol, spec in (*zip(edges, hspec.edges), (parent, hspec.parent)):
+        if isinstance(pol, policies.DynamicPLFUACache):
+            pol.external_refresh = True
+            timers.append((pol, spec.effective_refresh))
     T = len(trace)
     edge_hit = np.zeros(T, bool)
     parent_hit = np.zeros(T, bool)
@@ -64,4 +86,7 @@ def simulate_hierarchy_reference(
         edge_hit[t] = hit
         if not hit:
             parent_hit[t] = parent.request(x)
+        for pol, period in timers:
+            if (t + 1) % period == 0:
+                pol.refresh_now()
     return ReferenceResult(edge_hit, parent_hit, edges, parent)

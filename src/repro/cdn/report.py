@@ -23,17 +23,27 @@ from typing import Any
 
 import numpy as np
 
-from repro.core import energy
+from repro.core import energy, sketch
 from repro.core.jax_cache import PolicySpec
 from repro.cdn.hierarchy import HierarchySpec
 
 __all__ = ["TierReport", "HierarchyReport", "mgmt_ops", "hierarchy_report"]
 
-#: dict/heap touches charged per processed request, by policy kind.
-_REQ_OPS = {"lru": 3.0, "lfu": 3.0, "plfu": 3.0, "plfua": 1.0, "wlfu": 5.0}
-#: extra touches per *admitted* request (plfua meters metadata work only for
-#: the hot set — that asymmetry is the paper's §4 energy argument).
-_ADMITTED_OPS = {"plfua": 3.0}
+#: dict/heap touches charged per processed request, by policy kind. Sketch
+#: kinds additionally pay core.sketch.DEPTH counter updates on every request
+#: (the TinyLFU "O(1) admission" price), charged separately below.
+_REQ_OPS = {
+    "lru": 3.0,
+    "lfu": 3.0,
+    "plfu": 3.0,
+    "plfua": 1.0,
+    "wlfu": 5.0,
+    "tinylfu": 3.0,
+    "plfua_dyn": 1.0,
+}
+#: extra touches per *admitted* request (the PLFUA family meters metadata work
+#: only for the hot set — that asymmetry is the paper's §4 energy argument).
+_ADMITTED_OPS = {"plfua": 3.0, "plfua_dyn": 3.0}
 
 
 def mgmt_ops(
@@ -42,8 +52,18 @@ def mgmt_ops(
     admitted_requests: float,
     evictions: float,
     cost_model: str = "heap",
+    global_requests: float | None = None,
 ) -> float:
-    """Abstract management-operation count for one tier."""
+    """Abstract management-operation count for one tier.
+
+    ``global_requests`` is the total request count across the whole fleet
+    (trace steps x samples). plfua_dyn's hot-set refresh runs on *global*
+    time — every instance refreshes once per ``refresh`` trace positions no
+    matter how few requests were routed to it — so its amortised refresh cost
+    scales with global, not tier-local, requests. Defaults to ``requests``
+    (correct for a flat single cache). TinyLFU aging really is driven by the
+    per-instance request counter, so it stays on ``requests``.
+    """
     if cost_model not in ("heap", "scan"):
         raise ValueError(f"cost_model must be 'heap' or 'scan', got {cost_model!r}")
     per_evict = (
@@ -54,6 +74,22 @@ def mgmt_ops(
     ops = _REQ_OPS[spec.kind] * requests
     ops += _ADMITTED_OPS.get(spec.kind, 0.0) * admitted_requests
     ops += per_evict * evictions
+    if spec.kind == "tinylfu":
+        # per-request sketch counter updates (one per row), plus amortised
+        # aging: halving DEPTH x width counters once per window
+        ops += float(sketch.DEPTH) * requests
+        ops += requests / spec.effective_window * float(
+            sketch.DEPTH * spec.effective_sketch_width
+        )
+    if spec.kind == "plfua_dyn":
+        ops += float(sketch.DEPTH) * requests
+        # amortised global-time refresh, at the model's DEPTH-touches-per-
+        # sketch-access convention: estimate-all reads DEPTH counters per
+        # object, plus the halving over the whole DEPTH x width table
+        g = requests if global_requests is None else global_requests
+        ops += g / spec.effective_refresh * float(
+            sketch.DEPTH * (spec.n_objects + spec.effective_sketch_width)
+        )
     return float(ops)
 
 
@@ -126,7 +162,12 @@ class HierarchyReport:
 
 
 def _tier(
-    name: str, spec: PolicySpec, c: dict[str, Any], cost_model: str, per_op_s: float
+    name: str,
+    spec: PolicySpec,
+    c: dict[str, Any],
+    cost_model: str,
+    per_op_s: float,
+    global_requests: float | None = None,
 ) -> TierReport:
     ops = mgmt_ops(
         spec,
@@ -134,6 +175,7 @@ def _tier(
         float(c["admitted_requests"]),
         float(c["evictions"]),
         cost_model,
+        global_requests=global_requests,
     )
     cpu_s = ops * per_op_s
     return TierReport(
@@ -167,6 +209,8 @@ def hierarchy_report(
     # collapse an optional sample axis, keeping the edge axis (always last)
     per_edge_c = {k: v.reshape(-1, v.shape[-1]).sum(0) for k, v in edge_c.items()}
     E = hspec.n_edges
+    # total trace steps across the batch: every request hits exactly one edge
+    total_steps = float(per_edge_c["requests"].sum())
     per_edge = [
         _tier(
             f"edge[{i}]",
@@ -174,6 +218,7 @@ def hierarchy_report(
             {k: per_edge_c[k][i] for k in per_edge_c},
             cost_model,
             per_op_s,
+            global_requests=total_steps,
         )
         for i in range(E)
     ]
@@ -188,7 +233,10 @@ def hierarchy_report(
         mgmt_cpu_s=sum(t.mgmt_cpu_s for t in per_edge),
         mgmt_energy_j=sum(t.mgmt_energy_j for t in per_edge),
     )
-    parent = _tier("parent", hspec.parent, parent_c, cost_model, per_op_s)
+    parent = _tier(
+        "parent", hspec.parent, parent_c, cost_model, per_op_s,
+        global_requests=total_steps,
+    )
     n_requests = agg.requests
     origin = n_requests - agg.hits - parent.hits
     return HierarchyReport(

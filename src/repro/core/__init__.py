@@ -5,9 +5,10 @@ CHR + total-CPU-time (energy) metrics, in three tiers:
   * :mod:`repro.core.jax_cache` — vectorised fixed-shape JAX simulator (TPU adaptation)
   * :mod:`repro.kernels.cache_sim` — Pallas VMEM-resident kernel (grid over the paper's 60x12 sweep)
 """
-from repro.core import energy, jax_cache, policies, simulate, zipf
+from repro.core import energy, jax_cache, policies, registry, simulate, sketch, zipf
 from repro.core.jax_cache import PolicySpec, simulate as jax_simulate, simulate_batch
 from repro.core.policies import (
+    DynamicPLFUACache,
     LFUCache,
     LRUCache,
     PLFUACache,
@@ -24,11 +25,14 @@ __all__ = [
     "energy",
     "jax_cache",
     "policies",
+    "registry",
     "simulate",
+    "sketch",
     "zipf",
     "PolicySpec",
     "jax_simulate",
     "simulate_batch",
+    "DynamicPLFUACache",
     "LFUCache",
     "LRUCache",
     "PLFUACache",

@@ -22,9 +22,12 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import registry, sketch
+
 _I32_MAX = np.iinfo(np.int32).max
 
-JAX_POLICY_KINDS = ("lru", "lfu", "plfu", "plfua", "wlfu")
+JAX_POLICY_KINDS = registry.names(jax=True)
+SKETCH_POLICY_KINDS = registry.names(sketch=True)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -34,8 +37,10 @@ class PolicySpec:
     kind: str
     n_objects: int
     capacity: int
-    hot_size: int = 0  # plfua only; 0 means "2 * capacity" convention applied in init
-    window: int = 0  # wlfu only
+    hot_size: int = 0  # plfua/plfua_dyn; 0 means "2 * capacity" convention applied in init
+    window: int = 0  # wlfu (required) and tinylfu aging (0 -> sketch.default_window)
+    refresh: int = 0  # plfua_dyn hot-set period (0 -> sketch.default_refresh)
+    sketch_width: int = 0  # sketch kinds (0 -> sketch.default_width)
 
     def __post_init__(self):
         if self.kind not in JAX_POLICY_KINDS:
@@ -45,14 +50,36 @@ class PolicySpec:
 
     @property
     def effective_hot(self) -> int:
-        if self.kind != "plfua":
+        if self.kind not in ("plfua", "plfua_dyn"):
             return self.n_objects
         h = self.hot_size or 2 * self.capacity
         return min(self.n_objects, h)
 
+    @property
+    def effective_window(self) -> int:
+        """TinyLFU sketch-aging window (wlfu keeps its mandatory window)."""
+        if self.kind == "tinylfu":
+            return self.window or sketch.default_window(self.capacity)
+        return self.window
+
+    @property
+    def effective_refresh(self) -> int:
+        return self.refresh or sketch.default_refresh(self.capacity)
+
+    @property
+    def effective_sketch_width(self) -> int:
+        return self.sketch_width or sketch.default_width(self.capacity)
+
+    def _bucket_table(self) -> np.ndarray:
+        """Host-side (n_objects, DEPTH) bucket constant, folded into the jit."""
+        return sketch.bucket_table(
+            np.arange(self.n_objects), self.effective_sketch_width
+        )
+
 
 def init_state(spec: PolicySpec) -> dict[str, jax.Array]:
-    """Zero state. ``hot`` is the PLFUA admission mask (rank-prefix hot set)."""
+    """Zero state. ``hot`` is the PLFUA admission mask (rank-prefix hot set,
+    which for plfua_dyn is only the prior until the first sketch refresh)."""
     n = spec.n_objects
     state: dict[str, Any] = {
         "in_cache": jnp.zeros((n,), jnp.bool_),
@@ -63,11 +90,18 @@ def init_state(spec: PolicySpec) -> dict[str, jax.Array]:
         state["t"] = jnp.zeros((), jnp.int32)
     else:
         state["freq"] = jnp.zeros((n,), jnp.int32)
-    if spec.kind == "plfua":
+    if spec.kind in ("plfua", "plfua_dyn"):
         state["hot"] = jnp.arange(n, dtype=jnp.int32) < spec.effective_hot
     if spec.kind == "wlfu":
         state["ring"] = jnp.full((spec.window,), -1, jnp.int32)
         state["ptr"] = jnp.zeros((), jnp.int32)
+    if spec.kind in SKETCH_POLICY_KINDS:
+        state["sketch"] = jnp.zeros((sketch.DEPTH, spec.effective_sketch_width), jnp.int32)
+        # admissions are data-dependent for sketch kinds, so the insert count
+        # is carried in state (evictions = inserts - final occupancy)
+        state["inserts"] = jnp.zeros((), jnp.int32)
+    if spec.kind == "tinylfu":
+        state["seen"] = jnp.zeros((), jnp.int32)  # aging-window position
     return state
 
 
@@ -115,10 +149,53 @@ def step(spec: PolicySpec, state: dict[str, jax.Array], x: jax.Array, cap: jax.A
         count = count + jnp.where(hit, 0, 1) - need_evict.astype(jnp.int32)
         return dict(in_cache=in_cache, count=count, last=last, t=t + 1), hit
 
-    # frequency family: lfu / plfu / plfua
+    if spec.kind == "tinylfu":
+        # sketch first (add, then age), exactly as TinyLFUCache.request does
+        freq, rows, seen = state["freq"], state["sketch"], state["seen"]
+        table = jnp.asarray(spec._bucket_table())
+        idx = table[x]
+        rows = sketch.rows_add(rows, idx)
+        seen = seen + 1
+        age = seen >= spec.effective_window
+        rows = jnp.where(age, sketch.rows_halve(rows), rows)
+        seen = jnp.where(age, 0, seen)
+
+        hit = in_cache[x]
+        full = count >= cap
+        victim = _masked_argmin(freq, in_cache)
+        # admission duel: incoming vs victim, by (post-aging) sketch estimate
+        admit = sketch.rows_estimate(rows, idx) > sketch.rows_estimate(rows, table[victim])
+        insert = (~hit) & ((~full) | admit)
+        need_evict = (~hit) & full & admit
+        in_cache = in_cache.at[victim].set(in_cache[victim] & ~need_evict)
+        # LFU eviction semantics: metadata dies with the victim, entry restarts at 1
+        freq = freq.at[victim].set(jnp.where(need_evict, 0, freq[victim]))
+        freq = freq.at[x].set(
+            jnp.where(hit, freq[x] + 1, jnp.where(insert, 1, freq[x]))
+        )
+        in_cache = in_cache.at[x].set(in_cache[x] | insert)
+        count = count + insert.astype(jnp.int32) - need_evict.astype(jnp.int32)
+        inserts = state["inserts"] + insert.astype(jnp.int32)
+        return dict(
+            in_cache=in_cache, count=count, freq=freq,
+            sketch=rows, seen=seen, inserts=inserts,
+        ), hit
+
+    # frequency family: lfu / plfu / plfua / plfua_dyn
     freq = state["freq"]
     hit = in_cache[x]
-    admitted = state["hot"][x] if spec.kind == "plfua" else jnp.bool_(True)
+    if spec.kind == "plfua_dyn":
+        # the step only feeds the sketch; hot-set recomputation is *global-time*
+        # and lives at the chunk boundaries of _chunked_scan / refresh_hot, so
+        # vmapped fleets never pay a per-step estimate-all + top-k
+        rows = sketch.rows_add(state["sketch"], jnp.asarray(spec._bucket_table())[x])
+        # dynamic hot gates admission only: a cached object keeps hitting (and
+        # bumping) after it leaves the hot set, until PLFU eviction removes it
+        admitted = state["hot"][x] | hit
+    elif spec.kind == "plfua":
+        admitted = state["hot"][x]
+    else:
+        admitted = jnp.bool_(True)
     touch = hit | admitted
     need_evict = (~hit) & admitted & (count >= cap)
     victim = _masked_argmin(freq, in_cache)
@@ -135,14 +212,79 @@ def step(spec: PolicySpec, state: dict[str, jax.Array], x: jax.Array, cap: jax.A
     out = dict(in_cache=in_cache, count=count, freq=freq)
     if spec.kind == "plfua":
         out["hot"] = state["hot"]
+    if spec.kind == "plfua_dyn":
+        out.update(
+            hot=state["hot"], sketch=rows,
+            inserts=state["inserts"] + insert.astype(jnp.int32),
+        )
     return out, hit
+
+
+def refresh_hot(spec: PolicySpec, state: dict[str, jax.Array]) -> dict[str, jax.Array]:
+    """plfua_dyn hot-set refresh: new mask = sketch top-k (est desc, ties to
+    the lowest id — lax.top_k's order, matching the reference's lexsort), then
+    halve the sketch so estimates stay recency-weighted."""
+    table = jnp.asarray(spec._bucket_table())
+    est = sketch.rows_estimate_all(state["sketch"], table)
+    _, top = jax.lax.top_k(est, spec.effective_hot)
+    hot = jnp.zeros((spec.n_objects,), jnp.bool_).at[top].set(True)
+    return {**state, "hot": hot, "sketch": sketch.rows_halve(state["sketch"])}
+
+
+def _chunked_scan(spec: PolicySpec, state, trace, active=None, cap=None):
+    """plfua_dyn driver: scan refresh-length chunks of ``step`` with the hot
+    mask frozen, then :func:`refresh_hot` at every chunk boundary.
+
+    The refresh cadence is *global-time* (one refresh per ``effective_refresh``
+    trace positions, whether or not this instance processed them — exactly a
+    periodic wall-clock admission re-optimisation), which is what lets the
+    expensive estimate-all + top-k run once per chunk instead of hiding inside
+    a per-step ``cond`` that vmap would lower to always-on selects. ``active``
+    masks out requests routed elsewhere (cdn) and the tail padding.
+    """
+    L = spec.effective_refresh
+    (T,) = trace.shape
+    n_chunks = -(-T // L)
+    pad = n_chunks * L - T
+    trace_p = jnp.concatenate([trace.astype(jnp.int32), jnp.zeros((pad,), jnp.int32)])
+    if active is None:
+        active = jnp.ones((T,), jnp.bool_)
+    active_p = jnp.concatenate([active, jnp.zeros((pad,), jnp.bool_)])
+
+    # a refresh fires only when its whole period lies within the real trace —
+    # the padded tail chunk must not refresh, or the final hot/sketch state
+    # would diverge from the reference whenever T % L != 0
+    fire = (jnp.arange(n_chunks) + 1) * L <= T
+
+    def f(s, xa):
+        x, a = xa
+        ns, hit = step(spec, s, x, cap)
+        ns = jax.tree_util.tree_map(lambda o, n_: jnp.where(a, n_, o), s, ns)
+        return ns, hit & a
+
+    def chunk(s, inp):
+        xs, acts, fire_c = inp
+        s, hits = jax.lax.scan(f, s, (xs, acts))
+        refreshed = refresh_hot(spec, s)
+        s = jax.tree_util.tree_map(lambda o, r: jnp.where(fire_c, r, o), s, refreshed)
+        return s, hits
+
+    state, hits = jax.lax.scan(
+        chunk,
+        state,
+        (trace_p.reshape(n_chunks, L), active_p.reshape(n_chunks, L), fire),
+    )
+    return state, hits.reshape(-1)[:T]
 
 
 @functools.partial(jax.jit, static_argnums=0)
 def simulate(spec: PolicySpec, trace: jax.Array):
     """Run a full trace. Returns (hits: bool[T], final_state)."""
     state = init_state(spec)
-    state, hits = jax.lax.scan(lambda s, x: step(spec, s, x), state, trace)
+    if spec.kind == "plfua_dyn":
+        state, hits = _chunked_scan(spec, state, trace)
+    else:
+        state, hits = jax.lax.scan(lambda s, x: step(spec, s, x), state, trace)
     return hits, state
 
 
@@ -165,6 +307,30 @@ def metadata_entries(spec: PolicySpec, state: dict[str, jax.Array]) -> jax.Array
         return (state["freq"] > 0).sum() + state["count"]
     if spec.kind == "lfu":
         return state["count"]
-    # plfu / plfua: cached entries + parked entries
+    if spec.kind == "tinylfu":
+        return state["count"] + state["sketch"].size
+    # plfu / plfua / plfua_dyn: cached entries + parked entries (+ sketch)
     parked = ((state["freq"] > 0) & ~state["in_cache"]).sum()
-    return state["count"] + parked
+    meta = state["count"] + parked
+    if spec.kind == "plfua_dyn":
+        meta = meta + state["sketch"].size
+    return meta
+
+
+def eviction_count(spec: PolicySpec, hits, trace, state) -> int:
+    """Total evictions implied by one ``simulate`` run (host-side).
+
+    Every admitted miss inserts, so evictions = inserts - final occupancy.
+    Sketch kinds carry the insert count in state (admission is data-dependent);
+    for the others it is derivable from the hit sequence alone.
+    """
+    count = int(np.asarray(state["count"]))
+    if spec.kind in SKETCH_POLICY_KINDS:
+        return int(np.asarray(state["inserts"])) - count
+    hits = np.asarray(hits)
+    if spec.kind == "plfua":
+        hot = np.arange(spec.n_objects) < spec.effective_hot
+        inserts = int((~hits & hot[np.asarray(trace)]).sum())
+    else:
+        inserts = int((~hits).sum())
+    return inserts - count

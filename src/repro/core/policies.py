@@ -18,6 +18,9 @@ Implemented policies:
                W requests.
   * TinyLFU  — [Einziger et al. 2017]: count-min-sketch admission filter over
                LFU eviction (frequency comparison incoming vs victim).
+  * PLFUA-dyn — beyond-paper: PLFUA whose hot set is *recomputed* every
+               ``refresh`` requests from count-min-sketch top-k estimates,
+               fixing the static hot set's collapse under popularity churn.
 
 All frequency policies break eviction ties by lowest object id, and all are
 "implemented in the same manner" (paper §1.1): dict metadata + a lazy min-heap
@@ -33,6 +36,8 @@ from typing import Iterable
 
 import numpy as np
 
+from repro.core import registry, sketch
+
 __all__ = [
     "CachePolicy",
     "LRUCache",
@@ -41,6 +46,7 @@ __all__ = [
     "PLFUACache",
     "WLFUCache",
     "TinyLFUCache",
+    "DynamicPLFUACache",
     "make_policy",
     "POLICY_NAMES",
 ]
@@ -309,49 +315,21 @@ class WLFUCache(CachePolicy):
         return len(self._wfreq) + len(self._cache)
 
 
-class _CountMinSketch:
-    """4-row conservative count-min sketch with periodic halving (aging)."""
-
-    def __init__(self, width: int, seed: int = 0x9E3779B9):
-        self.width = int(width)
-        self.rows = np.zeros((4, self.width), dtype=np.int32)
-        self._salts = np.array(
-            [seed, 0x85EBCA6B, 0xC2B2AE35, 0x27D4EB2F], dtype=np.uint64
-        )
-
-    def _idx(self, x: int) -> np.ndarray:
-        h = (np.uint64(x) + np.uint64(1)) * self._salts
-        h ^= h >> np.uint64(33)
-        h *= np.uint64(0xFF51AFD7ED558CCD)
-        h ^= h >> np.uint64(33)
-        return (h % np.uint64(self.width)).astype(np.int64)
-
-    def add(self, x: int) -> None:
-        idx = self._idx(x)
-        self.rows[np.arange(4), idx] += 1
-
-    def estimate(self, x: int) -> int:
-        idx = self._idx(x)
-        return int(self.rows[np.arange(4), idx].min())
-
-    def halve(self) -> None:
-        self.rows >>= 1
-
-
 class TinyLFUCache(_HeapLFUBase):
     """TinyLFU admission over LFU eviction [Einziger et al. 2017].
 
     On a miss with a full cache, the incoming object is admitted only if its
     sketch-estimated frequency exceeds the eviction victim's; the sketch ages
-    by halving every ``window`` requests.
+    by halving every ``window`` requests. Sketch hashing/aging lives in
+    :mod:`repro.core.sketch`, shared bit-for-bit with the JAX tier.
     """
 
     name = "tinylfu"
 
     def __init__(self, capacity: int, window: int | None = None, sketch_width: int | None = None):
         super().__init__(capacity)
-        self.window = int(window or max(10 * capacity, 1000))
-        self._sketch = _CountMinSketch(sketch_width or max(4 * capacity, 256))
+        self.window = int(window or sketch.default_window(capacity))
+        self._sketch = sketch.CountMinSketch(sketch_width or sketch.default_width(capacity))
         self._seen = 0
 
     def request(self, x: int) -> bool:
@@ -392,7 +370,88 @@ class TinyLFUCache(_HeapLFUBase):
         return len(self._freq) + self._sketch.rows.size
 
 
-POLICY_NAMES = ("lru", "lfu", "plfu", "plfua", "wlfu", "tinylfu")
+class DynamicPLFUACache(CachePolicy):
+    """PLFUA with a *dynamic* hot set refreshed from a count-min sketch.
+
+    The paper's PLFUA fixes the hot set ahead of time, which collapses when
+    popularity drifts (the ``churn`` scenario). Here every request feeds the
+    sketch, and every ``refresh`` requests (a periodic wall-clock
+    re-optimisation: the refresh fires *after* the request that completes the
+    period) the hot set is recomputed as the top ``hot_size`` ids by sketch
+    estimate (ties to the lowest id), after which the sketch is halved so
+    estimates stay recency-weighted. The hot mask gates *admission only*: an
+    object cached while hot keeps hitting until normal PLFU eviction removes
+    it, even after it leaves the hot set.
+
+    The initial hot set is the rank prefix ``[0, hot_size)`` — the same prior
+    static PLFUA uses — so the two policies are identical until the first
+    refresh. In a CDN fleet the refresh cadence is *global* time rather than
+    per-instance request count: the hierarchy driver sets
+    ``external_refresh = True`` and calls :meth:`refresh_now` on the timer
+    (mirroring the jitted simulator's chunked scan).
+    """
+
+    name = "plfua_dyn"
+
+    def __init__(
+        self,
+        capacity: int,
+        n_objects: int,
+        hot_size: int = 0,
+        refresh: int = 0,
+        sketch_width: int = 0,
+    ):
+        super().__init__(capacity)
+        self.n_objects = int(n_objects)
+        self.hot_size = min(self.n_objects, int(hot_size) or 2 * capacity)
+        self.refresh = int(refresh) or sketch.default_refresh(capacity)
+        self.external_refresh = False
+        self._sketch = sketch.CountMinSketch(
+            int(sketch_width) or sketch.default_width(capacity)
+        )
+        self._seen = 0
+        self._hot = np.zeros(self.n_objects, dtype=bool)
+        self._hot[: self.hot_size] = True
+        self._plfu = PLFUCache(capacity)
+
+    def refresh_now(self) -> None:
+        """Recompute the hot set from the sketch, then age the sketch."""
+        est = self._sketch.estimate_all(self.n_objects)
+        top = np.lexsort((np.arange(self.n_objects), -est))[: self.hot_size]
+        self._hot = np.zeros(self.n_objects, dtype=bool)
+        self._hot[top] = True
+        self._sketch.halve()
+        self._seen = 0
+
+    def request(self, x: int) -> bool:
+        self._sketch.add(x)
+        if self._plfu.contains(x) or self._hot[x]:
+            hit = self._plfu.request(x)
+        else:
+            hit = False
+            self._plfu.misses += 1  # non-admitted request is still a miss
+        self.hits = self._plfu.hits
+        self.misses = self._plfu.misses
+        self.evictions = self._plfu.evictions
+        if not self.external_refresh:
+            self._seen += 1
+            if self._seen >= self.refresh:
+                self.refresh_now()
+        return hit
+
+    def contains(self, x: int) -> bool:
+        return self._plfu.contains(x)
+
+    @property
+    def hot(self) -> np.ndarray:
+        return self._hot
+
+    @property
+    def metadata_entries(self) -> int:
+        return self._plfu.metadata_entries + self._sketch.rows.size
+
+
+POLICY_NAMES = registry.names(reference=True)
 
 
 def make_policy(
@@ -402,10 +461,13 @@ def make_policy(
     n_objects: int | None = None,
     hot: Iterable[int] | None = None,
     window: int | None = None,
+    refresh: int = 0,
+    sketch_width: int = 0,
     evict: str = "heap",
 ) -> CachePolicy:
     """Factory. PLFUA needs a hot set: explicit ``hot`` ids, or the rank prefix
-    [0, 2*capacity) when ids are popularity ranks (our Zipf traces).
+    [0, 2*capacity) when ids are popularity ranks (our Zipf traces); plfua_dyn
+    needs ``n_objects`` (the id universe its sketch ranks over).
     ``evict``: "heap" (optimised) or "scan" (the paper's O(C) cost profile)."""
     name = name.lower()
     if name == "lru":
@@ -422,5 +484,11 @@ def make_policy(
     if name == "wlfu":
         return WLFUCache(capacity, window or 10_000)
     if name == "tinylfu":
-        return TinyLFUCache(capacity, window)
+        return TinyLFUCache(capacity, window, sketch_width or None)
+    if name == "plfua_dyn":
+        if n_objects is None:
+            raise ValueError("plfua_dyn requires n_objects (sketch id universe)")
+        return DynamicPLFUACache(
+            capacity, n_objects, refresh=refresh, sketch_width=sketch_width
+        )
     raise ValueError(f"unknown policy {name!r}; expected one of {POLICY_NAMES}")

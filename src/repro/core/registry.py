@@ -1,0 +1,73 @@
+"""Single source of truth for policy names across the three tiers.
+
+PR 1 left the name lists drifting: ``core.policies.POLICY_NAMES`` (reference),
+``core.jax_cache.JAX_POLICY_KINDS`` (jitted simulator) and
+``kernels.cache_sim.KERNEL_KINDS`` (Pallas) were maintained by hand, and the
+benchmarks each hardcoded their own subset. This registry owns the canonical
+list plus per-tier support flags; everything else derives its tuple from
+:func:`names` so adding a policy is a one-line change here.
+
+Deliberately dependency-free (no imports from policies/jax_cache) so any
+module can import it without cycles.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+__all__ = ["PolicyInfo", "POLICIES", "names", "info"]
+
+
+@dataclasses.dataclass(frozen=True)
+class PolicyInfo:
+    """One policy's identity and which tiers implement it."""
+
+    name: str
+    reference: bool  # pure-Python implementation in core.policies
+    jax: bool  # kind accepted by core.jax_cache (and the cdn hierarchy)
+    pallas: bool  # kind accepted by kernels.cache_sim
+    sketch: bool = False  # carries count-min-sketch state (core.sketch)
+    description: str = ""
+
+
+POLICIES: tuple[PolicyInfo, ...] = (
+    PolicyInfo("lru", True, True, True, description="recency eviction"),
+    PolicyInfo("lfu", True, True, True, description="in-memory LFU; eviction destroys metadata"),
+    PolicyInfo("plfu", True, True, True, description="Perfect LFU with parked-list"),
+    PolicyInfo("plfua", True, True, True, description="PLFU + static rank-prefix hot-set admission"),
+    PolicyInfo("wlfu", True, True, False, description="Window-LFU over the last W requests"),
+    PolicyInfo("tinylfu", True, True, False, sketch=True, description="sketch-vs-victim admission over LFU eviction"),
+    PolicyInfo("plfua_dyn", True, True, False, sketch=True, description="PLFUA with sketch-refreshed hot set"),
+)
+
+_BY_NAME = {p.name: p for p in POLICIES}
+
+
+def info(name: str) -> PolicyInfo:
+    try:
+        return _BY_NAME[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown policy {name!r}; expected one of {tuple(_BY_NAME)}"
+        ) from None
+
+
+def names(
+    *,
+    reference: bool | None = None,
+    jax: bool | None = None,
+    pallas: bool | None = None,
+    sketch: bool | None = None,
+) -> tuple[str, ...]:
+    """Canonical-order names, filtered by tier support (None = don't care)."""
+    out = []
+    for p in POLICIES:
+        if reference is not None and p.reference != reference:
+            continue
+        if jax is not None and p.jax != jax:
+            continue
+        if pallas is not None and p.pallas != pallas:
+            continue
+        if sketch is not None and p.sketch != sketch:
+            continue
+        out.append(p.name)
+    return tuple(out)

@@ -1,0 +1,140 @@
+"""Count-min sketch: the one hashing/aging implementation for every tier.
+
+TinyLFU admission and the dynamic-PLFUA hot set both need an O(1)-per-request
+frequency estimator whose state is *fixed-shape* (so it scans, vmaps and
+stacks across a CDN edge fleet). A count-min sketch with periodic halving
+("aging") is exactly that: ``DEPTH`` rows of ``width`` int32 counters, every
+request increments one counter per row, an estimate is the min over rows, and
+halving every window keeps the counts recency-weighted [Einziger et al. 2017].
+
+Decision parity between the pure-Python references (``core.policies``) and
+the jitted simulator (``core.jax_cache``) requires bit-identical bucket
+indices, so the hash is deliberately 32-bit (the lowbias32 finalizer from
+Wellons' hash-prospector search, applied to salted ids): uint32 arithmetic
+wraps identically in numpy and in jnp, whereas the usual 64-bit mixers would
+silently diverge under JAX's default x64-off config. ``bucket_table`` is a pure function of (n_objects, width) and is
+precomputed host-side once per spec, so the in-scan cost of a sketch touch is
+a ``DEPTH``-element gather/scatter, never a hash.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+__all__ = [
+    "DEPTH",
+    "CountMinSketch",
+    "bucket_table",
+    "default_refresh",
+    "default_width",
+    "default_window",
+    "rows_add",
+    "rows_estimate",
+    "rows_estimate_all",
+    "rows_halve",
+]
+
+#: number of sketch rows (independent hash functions); fixed, not a knob, so
+#: every tier agrees on the state shape without threading another parameter.
+DEPTH = 4
+
+#: per-row salts (arbitrary odd mixing constants, one per hash function).
+_SALTS = (0x9E3779B9, 0x85EBCA6B, 0xC2B2AE35, 0x27D4EB2F)
+
+
+# --------------------------------------------------------------- conventions
+def default_width(capacity: int) -> int:
+    """Sketch width convention: 4x cache size, floored at 256 counters."""
+    return max(4 * int(capacity), 256)
+
+
+def default_window(capacity: int) -> int:
+    """TinyLFU aging window convention: 10x cache size, floored at 1000."""
+    return max(10 * int(capacity), 1000)
+
+
+def default_refresh(capacity: int) -> int:
+    """Dynamic-PLFUA hot-set refresh convention (same shape as the window)."""
+    return max(10 * int(capacity), 1000)
+
+
+# ------------------------------------------------------------------- hashing
+def _mix32(h, xp):
+    """lowbias32 integer finalizer (hash-prospector constants); ``h`` is a
+    uint32 array in ``xp`` (np/jnp)."""
+    u = xp.uint32
+    h = h ^ (h >> u(16))
+    h = h * u(0x7FEB352D)
+    h = h ^ (h >> u(15))
+    h = h * u(0x846CA68B)
+    h = h ^ (h >> u(16))
+    return h
+
+
+def bucket_table(ids, width: int, xp=np):
+    """Bucket indices for ``ids``: shape ``ids.shape + (DEPTH,)`` int32.
+
+    Pure uint32 arithmetic — numpy and jnp produce identical tables, which is
+    what makes reference-vs-JAX decision parity possible at all.
+    """
+    u = xp.uint32
+    ids = xp.asarray(ids, xp.uint32)
+    salts = xp.asarray(_SALTS, xp.uint32)
+    h = _mix32((ids[..., None] + u(1)) * salts, xp)
+    return (h % u(width)).astype(xp.int32)
+
+
+# ---------------------------------------------------------- functional core
+# These work on numpy and jnp ``rows`` alike (the index arrays are host-side
+# constants, which is also what keeps them free inside a jitted scan).
+def rows_add(rows, idx):
+    """Increment one counter per row. ``idx``: (DEPTH,) bucket indices."""
+    if isinstance(rows, np.ndarray):
+        rows = rows.copy()
+        rows[np.arange(DEPTH), idx] += 1
+        return rows
+    return rows.at[np.arange(DEPTH), idx].add(1)
+
+
+def rows_estimate(rows, idx):
+    """Point estimate: min over the DEPTH counters addressed by ``idx``."""
+    return rows[np.arange(DEPTH), idx].min()
+
+
+def rows_estimate_all(rows, table):
+    """Estimates for every id at once. ``table``: (n, DEPTH) from bucket_table."""
+    return rows[np.arange(DEPTH), table].min(axis=-1)
+
+
+def rows_halve(rows):
+    """Aging: halve every counter (floor division by 2)."""
+    return rows >> 1
+
+
+# --------------------------------------------------------- numpy convenience
+class CountMinSketch:
+    """Stateful numpy wrapper used by the pure-Python reference policies."""
+
+    depth = DEPTH
+
+    def __init__(self, width: int):
+        if width < 1:
+            raise ValueError(f"width must be >= 1, got {width}")
+        self.width = int(width)
+        self.rows = np.zeros((DEPTH, self.width), dtype=np.int32)
+
+    def _idx(self, x: int) -> np.ndarray:
+        return bucket_table(np.asarray(x), self.width)
+
+    def add(self, x: int) -> None:
+        self.rows[np.arange(DEPTH), self._idx(x)] += 1
+
+    def estimate(self, x: int) -> int:
+        return int(self.rows[np.arange(DEPTH), self._idx(x)].min())
+
+    def estimate_all(self, n_objects: int) -> np.ndarray:
+        """(n_objects,) estimates — the dynamic-PLFUA refresh input."""
+        table = bucket_table(np.arange(n_objects), self.width)
+        return rows_estimate_all(self.rows, table)
+
+    def halve(self) -> None:
+        self.rows >>= 1

@@ -27,9 +27,12 @@ import numpy as np
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.core import registry
+
 _I32_MAX = np.iinfo(np.int32).max
 
-KERNEL_KINDS = ("lru", "lfu", "plfu", "plfua")
+KERNEL_KINDS = registry.names(pallas=True)
+_SKETCH_KINDS = registry.names(sketch=True)
 
 
 def _round_up(x: int, m: int) -> int:
@@ -118,6 +121,14 @@ def cache_sim_pallas(
       freq:     (S, N)    int32 — final frequency table (lru: last-access stamps).
       in_cache: (S, N)    bool  — final cache contents.
     """
+    if kind in _SKETCH_KINDS:
+        # loud and typed, so the benchmark/test layers can't fall through to a
+        # silently-wrong kernel result for sketch-admission policies
+        raise NotImplementedError(
+            f"cache_sim Pallas kernel does not implement sketch-admission "
+            f"kind {kind!r}; use repro.core.jax_cache.simulate (the count-min "
+            f"rows would need a VMEM-resident scatter per request)"
+        )
     if kind not in KERNEL_KINDS:
         raise ValueError(f"kind={kind!r} not in {KERNEL_KINDS}")
     s, t = traces.shape

@@ -1,7 +1,8 @@
 """The paper's technique as a serving feature: a content/prefix cache whose
-admission + eviction policy is pluggable (LRU / LFU / PLFU / PLFUA / WLFU /
-TinyLFU — the reference implementations from repro.core.policies drive the
-decisions; this layer adds payload storage and energy accounting).
+admission + eviction policy is pluggable (any name in core.registry: LRU /
+LFU / PLFU / PLFUA / WLFU / TinyLFU / dynamic-PLFUA — the reference
+implementations from repro.core.policies drive the decisions; this layer
+adds payload storage and energy accounting).
 
 A "content object" is whatever the engine wants to reuse per object id:
 a prefill KV/latent/SSM-state cache, an encoder output, or generated text.

@@ -42,6 +42,7 @@ def _assert_parity(hspec, trace, assignment):
     return out
 
 
+@pytest.mark.slow  # the fast lane gets flat-simulator parity from test_differential
 @pytest.mark.parametrize("kind", JAX_POLICY_KINDS)
 @pytest.mark.parametrize("scenario", SCENARIOS)
 def test_hierarchy_matches_reference(kind, scenario):

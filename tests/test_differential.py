@@ -1,0 +1,88 @@
+"""Differential oracle: EVERY JAX policy kind x EVERY workload scenario.
+
+The per-policy tests elsewhere check a few hand-picked traces; this harness is
+the exhaustive matrix — ``jax_cache.simulate`` must agree with the pure-Python
+reference policies hit-for-hit, eviction-for-eviction, and on final cache
+contents + metadata, for the full cross product of ``JAX_POLICY_KINDS`` and
+``workloads.SCENARIOS``. Trace parameters are drawn through the hypothesis
+shim (seeded random examples when the real package is absent), with shapes
+pinned to a small fixed set so jit recompiles stay bounded.
+"""
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # pragma: no cover - CI installs hypothesis; shim elsewhere
+    from _hypothesis_fallback import given, settings, strategies as st
+
+from repro import workloads
+from repro.cdn.reference import build_policy
+from repro.core import jax_cache
+
+N = 64
+TRACE_LEN = 600
+WINDOW = 48  # wlfu window / tinylfu aging: small enough to trigger mid-trace
+REFRESH = 97  # plfua_dyn: prime, so refreshes never align with scenario phases
+SKETCH_W = 64  # small sketch -> real collisions, stressing hashing parity
+CAPS = (3, 9)  # fixed set keeps the number of compiled specs bounded
+
+
+def _spec(kind: str, cap: int) -> jax_cache.PolicySpec:
+    return jax_cache.PolicySpec(
+        kind=kind,
+        n_objects=N,
+        capacity=cap,
+        window=WINDOW if kind in ("wlfu", "tinylfu") else 0,
+        refresh=REFRESH if kind == "plfua_dyn" else 0,
+        sketch_width=SKETCH_W if kind in jax_cache.SKETCH_POLICY_KINDS else 0,
+    )
+
+
+@pytest.mark.parametrize("kind", jax_cache.JAX_POLICY_KINDS)
+@pytest.mark.parametrize("scenario", workloads.SCENARIO_NAMES)
+@settings(max_examples=4, deadline=None)
+@given(cap=st.sampled_from(CAPS), seed=st.integers(0, 10_000))
+def test_jax_matches_reference(kind, scenario, cap, seed):
+    trace = workloads.make_traces(
+        scenario, N, n_samples=1, trace_len=TRACE_LEN, seed=seed
+    )[0]
+    spec = _spec(kind, cap)
+    hits_jax, state = jax_cache.simulate(spec, trace)
+    hits_jax = np.asarray(hits_jax)
+
+    pol = build_policy(spec)  # the same PolicySpec -> reference mapping the CDN uses
+    hits_py = np.array([pol.request(int(x)) for x in trace])
+
+    ctx = f"{kind} x {scenario} cap={cap} seed={seed}"
+    np.testing.assert_array_equal(
+        hits_jax, hits_py, err_msg=f"hit sequence diverges: {ctx}"
+    )
+    cached_py = np.array([pol.contains(i) for i in range(N)])
+    np.testing.assert_array_equal(
+        np.asarray(state["in_cache"]), cached_py, err_msg=f"final contents: {ctx}"
+    )
+    assert int(np.asarray(state["count"])) == int(cached_py.sum()), ctx
+    assert int(hits_jax.sum()) == pol.hits, ctx
+    assert (
+        jax_cache.eviction_count(spec, hits_jax, trace, state) == pol.evictions
+    ), f"eviction count: {ctx}"
+    assert int(jax_cache.metadata_entries(spec, state)) == pol.metadata_entries, ctx
+    if kind in jax_cache.SKETCH_POLICY_KINDS:
+        # full auxiliary-state parity: sketch counters (and, for plfua_dyn,
+        # the hot mask — incl. no spurious refresh on a partial tail period)
+        np.testing.assert_array_equal(
+            np.asarray(state["sketch"]), pol._sketch.rows, err_msg=f"sketch: {ctx}"
+        )
+        if kind == "plfua_dyn":
+            np.testing.assert_array_equal(
+                np.asarray(state["hot"]), pol.hot, err_msg=f"hot mask: {ctx}"
+            )
+
+
+def test_matrix_is_total():
+    """The harness really does cover every kind and every scenario."""
+    assert set(jax_cache.JAX_POLICY_KINDS) >= set(jax_cache.SKETCH_POLICY_KINDS)
+    assert len(workloads.SCENARIO_NAMES) >= 5
+    for kind in jax_cache.JAX_POLICY_KINDS:
+        build_policy(_spec(kind, CAPS[0]))  # every kind has a reference oracle

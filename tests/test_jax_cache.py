@@ -10,7 +10,7 @@ def _py_policy(kind, n, cap, window):
         return policies.PLFUACache(cap, hot=range(min(n, 2 * cap)))
     if kind == "wlfu":
         return policies.WLFUCache(cap, window=window)
-    return policies.make_policy(kind, cap)
+    return policies.make_policy(kind, cap, n_objects=n)
 
 
 def _compare(kind, n, cap, trace, window=16):

@@ -2,7 +2,7 @@
 import numpy as np
 import pytest
 
-from repro.core import zipf
+from repro.core import jax_cache, zipf
 from repro.kernels.cache_sim.ops import cache_sim
 from repro.kernels.cache_sim.ref import cache_sim_ref
 
@@ -55,6 +55,19 @@ def test_kernel_uniform_trace_dtype_robustness():
         )
         np.testing.assert_array_equal(np.asarray(hits_k), hits_r)
         np.testing.assert_array_equal(np.asarray(cache_k), cache_r)
+
+
+@pytest.mark.parametrize("kind", jax_cache.SKETCH_POLICY_KINDS)
+def test_kernel_sketch_kinds_raise_loudly(kind):
+    """The kernel doesn't implement sketch admission; it must say so with a
+    typed error, never fall through to a silently-wrong simulation."""
+    traces = np.zeros((1, 16), np.int32)
+    with pytest.raises(NotImplementedError, match="sketch-admission"):
+        cache_sim(traces, kind=kind, n_objects=32, capacity=4, interpret=True)
+    # ...while the jitted jnp tier does support them on identical inputs
+    spec = jax_cache.PolicySpec(kind=kind, n_objects=32, capacity=4)
+    hits, _ = jax_cache.simulate(spec, traces[0])
+    assert np.asarray(hits).shape == (16,)
 
 
 def test_kernel_plfua_custom_hot_size():

@@ -82,6 +82,7 @@ def test_decode_matches_forward(arch):
         )
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("arch", ARCH_IDS)
 def test_train_step_smoke(arch):
     """One SGD step on the reduced config: finite loss, finite grads, params move."""

@@ -97,6 +97,7 @@ def test_candidate_list_order():
     assert partition_spec((32, 256), ("y", "x"), rules, MESH) == P("data", "model")
 
 
+@pytest.mark.slow
 def test_small_mesh_compile_with_rules():
     """Real 8-device SPMD compile of a reduced train step under the rules +
     activation hints (the dry-run path at toy scale)."""

@@ -1,0 +1,143 @@
+"""Unit tests for the shared count-min sketch + the churn-fix regression.
+
+The regression test pins THE result this subsystem exists for: the ROADMAP
+documents static PLFUA collapsing on the ``churn`` workload because its
+admission mask never follows popularity drift; the sketch-refreshed hot set
+(``plfua_dyn``) must recover a fixed CHR margin over it, forever.
+"""
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro import workloads
+from repro.core import jax_cache, policies, registry, sketch
+
+
+# ------------------------------------------------------------------- hashing
+def test_bucket_table_numpy_jnp_bit_identical():
+    """The whole decision-parity story rests on this equality."""
+    for width in (7, 64, 256, 1000):
+        tn = sketch.bucket_table(np.arange(500), width)
+        tj = np.asarray(sketch.bucket_table(jnp.arange(500), width, xp=jnp))
+        np.testing.assert_array_equal(tn, tj)
+        assert tn.dtype == np.int32
+        assert tn.min() >= 0 and tn.max() < width
+
+
+def test_bucket_table_rows_are_distinct_hashes():
+    t = sketch.bucket_table(np.arange(2000), 256)
+    # different salts -> rows disagree for almost every id
+    same = (t[:, 0] == t[:, 1]).mean()
+    assert same < 0.05
+    # each row spreads over the width (no degenerate constant hash)
+    for d in range(sketch.DEPTH):
+        assert len(np.unique(t[:, d])) > 200
+
+
+def test_estimate_overcounts_never_undercounts():
+    s = sketch.CountMinSketch(64)
+    rng = np.random.default_rng(0)
+    truth = np.zeros(300, np.int64)
+    for x in rng.integers(0, 300, size=2000):
+        s.add(int(x))
+        truth[x] += 1
+    est = s.estimate_all(300)
+    assert (est >= truth).all()  # count-min never underestimates
+    assert est.sum() < truth.sum() * 4  # ...and collisions stay bounded
+
+
+def test_halving_ages_counts():
+    s = sketch.CountMinSketch(64)
+    for _ in range(8):
+        s.add(5)
+    assert s.estimate(5) == 8
+    s.halve()
+    assert s.estimate(5) == 4
+    s.halve()
+    s.halve()
+    assert s.estimate(5) == 1
+
+
+def test_functional_rows_match_class():
+    s = sketch.CountMinSketch(32)
+    rows = jnp.zeros((sketch.DEPTH, 32), jnp.int32)
+    table = sketch.bucket_table(np.arange(40), 32)
+    for x in [1, 1, 7, 31, 7, 1]:
+        s.add(x)
+        rows = sketch.rows_add(rows, table[x])
+    np.testing.assert_array_equal(s.rows, np.asarray(rows))
+    for x in (1, 7, 31, 2):
+        assert int(sketch.rows_estimate(rows, table[x])) == s.estimate(x)
+    np.testing.assert_array_equal(
+        np.asarray(sketch.rows_estimate_all(rows, table)), s.estimate_all(40)
+    )
+    halved = np.asarray(sketch.rows_halve(rows))
+    s.halve()
+    np.testing.assert_array_equal(halved, s.rows)
+
+
+def test_defaults_conventions():
+    assert sketch.default_width(60) == 256
+    assert sketch.default_width(100) == 400
+    assert sketch.default_window(60) == 1000
+    assert sketch.default_window(500) == 5000
+    assert sketch.default_refresh(25) == 1000
+
+
+# ------------------------------------------------------- registry consistency
+def test_registry_backs_every_name_tuple():
+    assert policies.POLICY_NAMES == registry.names(reference=True)
+    assert jax_cache.JAX_POLICY_KINDS == registry.names(jax=True)
+    assert jax_cache.SKETCH_POLICY_KINDS == ("tinylfu", "plfua_dyn")
+    from repro.kernels.cache_sim.cache_sim import KERNEL_KINDS
+
+    assert KERNEL_KINDS == registry.names(pallas=True)
+    # pallas support is a subset of jax support; sketch kinds are jax-only
+    assert set(KERNEL_KINDS) <= set(jax_cache.JAX_POLICY_KINDS)
+    assert not set(KERNEL_KINDS) & set(jax_cache.SKETCH_POLICY_KINDS)
+    with pytest.raises(ValueError, match="unknown policy"):
+        registry.info("nope")
+
+
+# ------------------------------------------------------- the churn regression
+CHURN_MARGIN = 0.08  # plfua_dyn must beat static plfua by at least this CHR
+
+
+def test_dynamic_hot_set_fixes_churn_collapse():
+    """Pin the fix: sketch-refreshed admission must recover the churn CHR that
+    the static rank-prefix hot set loses (ROADMAP: 'churn collapse')."""
+    n, cap = 400, 20
+    traces = workloads.make_traces("churn", n, n_samples=3, trace_len=12_000, seed=21)
+    chr_of = {}
+    for kind, kw in (
+        ("plfua", {}),
+        ("plfua_dyn", dict(refresh=400, sketch_width=256)),
+    ):
+        spec = jax_cache.PolicySpec(kind=kind, n_objects=n, capacity=cap, **kw)
+        vals = []
+        for s in range(traces.shape[0]):
+            hits, _ = jax_cache.simulate(spec, traces[s])
+            vals.append(float(np.asarray(hits).mean()))
+        chr_of[kind] = float(np.mean(vals))
+    assert chr_of["plfua_dyn"] > chr_of["plfua"] + CHURN_MARGIN, chr_of
+
+
+def test_dynamic_tracks_static_on_stationary():
+    """No-regression guard for the fix itself: when the prior is right
+    (stationary Zipf, ids = ranks), the dynamic hot set must not give up more
+    than a sliver of static PLFUA's CHR."""
+    n, cap = 400, 20
+    traces = workloads.make_traces("stationary", n, n_samples=3, trace_len=12_000, seed=4)
+    chrs = {}
+    for kind, kw in (
+        ("plfua", {}),
+        ("plfua_dyn", dict(refresh=400, sketch_width=256)),
+    ):
+        spec = jax_cache.PolicySpec(kind=kind, n_objects=n, capacity=cap, **kw)
+        hits = [
+            float(np.asarray(jax_cache.simulate(spec, traces[s])[0]).mean())
+            for s in range(traces.shape[0])
+        ]
+        chrs[kind] = float(np.mean(hits))
+    assert chrs["plfua_dyn"] >= chrs["plfua"] - 0.02, chrs

@@ -4,6 +4,8 @@ import jax
 import numpy as np
 import pytest
 
+pytestmark = pytest.mark.slow  # module-scoped training fixture dominates
+
 from repro.configs import get_config
 from repro.core import zipf
 from repro.models import build

@@ -37,6 +37,7 @@ def _stream(model, batch=8, seq=32):
     )
 
 
+@pytest.mark.slow
 def test_loss_decreases():
     model = _tiny_model()
     tcfg = TrainConfig(opt=OptConfig(lr=3e-3, warmup_steps=5, total_steps=60))
@@ -50,6 +51,7 @@ def test_loss_decreases():
     assert np.mean(losses[-10:]) < np.mean(losses[:10]) - 0.5, losses[::10]
 
 
+@pytest.mark.slow
 def test_grad_accum_equivalence():
     """grad_accum=4 must match a single full-batch step numerically."""
     model = _tiny_model()
@@ -148,6 +150,7 @@ def test_elastic_restore_different_mesh(tmp_path):
     assert "ELASTIC_OK" in out.stdout, out.stderr[-2000:]
 
 
+@pytest.mark.slow
 def test_trainer_resume_after_kill(tmp_path):
     """Train 30 steps with checkpoints, 'crash', resume — the resumed run
     continues from the checkpoint and reaches the same total step count."""
@@ -191,6 +194,7 @@ def test_int8_compression_unbiased():
     assert abs(mean - 0.3) < 2e-3  # stochastic rounding is unbiased
 
 
+@pytest.mark.slow
 def test_compressed_training_still_learns():
     model = _tiny_model()
     tcfg = TrainConfig(opt=OptConfig(lr=3e-3, warmup_steps=5), compress_grads=True)
