@@ -1,13 +1,19 @@
-"""Benchmark entry point: one function per paper table/figure + the roofline
-and serving-energy tables. Prints ``name,us_per_call,derived`` CSV.
+"""Benchmark entry point: one function per paper table/figure + the roofline,
+serving-energy and fleet tables. Prints ``name,us_per_call,derived`` CSV.
 
     PYTHONPATH=src python -m benchmarks.run              # reduced scale
     PYTHONPATH=src python -m benchmarks.run --full       # the paper's grid
     PYTHONPATH=src python -m benchmarks.run --only fig4
+    PYTHONPATH=src python -m benchmarks.run --only fleet_policies,fleet_scale \
+        --record BENCH_PR3.json                          # perf trajectory
+
+``--record`` additionally writes every produced row (plus the run
+configuration) to a JSON file — the regression trail benchmark PRs check in.
 """
 from __future__ import annotations
 
 import argparse
+import json
 import sys
 import time
 
@@ -15,32 +21,86 @@ import time
 def main() -> None:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--full", action="store_true", help="paper-scale grids (slow)")
-    ap.add_argument("--only", default=None, help="run one group (fig2..fig9, metadata, cache_py, cache_jax, cache_pallas, cdn, cdn_router, cdn_topo, serving_energy, roofline)")
+    ap.add_argument(
+        "--only",
+        default=None,
+        help="comma-separated group list (fig2..fig9, metadata, cache_py, "
+        "cache_jax, cache_pallas, cdn, cdn_router, cdn_topo, fleet_policies, "
+        "fleet_depth, fleet_scale, serving_energy, roofline)",
+    )
+    ap.add_argument(
+        "--record",
+        default=None,
+        metavar="PATH",
+        help="also write the rows as JSON (perf-regression trail)",
+    )
     args = ap.parse_args()
 
-    from benchmarks import cache_bench, cdn_bench, paper_figs, roofline_bench, serving_energy
+    from benchmarks import (
+        cache_bench,
+        cdn_bench,
+        fleet_bench,
+        paper_figs,
+        roofline_bench,
+        serving_energy,
+    )
 
     groups: dict = {}
     groups.update(paper_figs.ALL)
     groups.update(cache_bench.ALL)
     groups.update(cdn_bench.ALL)
+    groups.update(fleet_bench.ALL)
     groups.update(serving_energy.ALL)
     groups.update(roofline_bench.ALL)
 
-    if args.only is not None and args.only not in groups:
-        sys.exit(f"unknown group {args.only!r}; choose from: {', '.join(groups)}")
-    selected = {args.only: groups[args.only]} if args.only else groups
+    if args.only is None:
+        selected = groups
+    else:
+        names = [g.strip() for g in args.only.split(",") if g.strip()]
+        unknown = [g for g in names if g not in groups]
+        if unknown:
+            sys.exit(
+                f"unknown group(s) {unknown}; choose from: {', '.join(groups)}"
+            )
+        selected = {g: groups[g] for g in names}
+    recorded: list[dict] = []
+    failed: list[str] = []
     print("name,us_per_call,derived")
     for gname, fn in selected.items():
         t0 = time.time()
         try:
             rows = fn(full=args.full)
         except Exception as e:  # pragma: no cover
-            print(f"{gname}/ERROR,0,{type(e).__name__}: {e}")
+            # keep the failure visible everywhere the results go: CSV row,
+            # recorded JSON, and (below) a non-zero exit for CI
+            derived = f"{type(e).__name__}: {e}"
+            print(f"{gname}/ERROR,0,{derived}")
+            recorded.append(
+                {"group": gname, "name": f"{gname}/ERROR", "us_per_call": 0.0,
+                 "derived": derived}
+            )
+            failed.append(gname)
             continue
         for name, us, derived in rows:
             print(f'{name},{us:.3f},"{derived}"')
+            recorded.append(
+                {"group": gname, "name": name, "us_per_call": us, "derived": derived}
+            )
+            if name.endswith("/ERROR"):  # per-row failures (e.g. a scaling
+                failed.append(name)  # subprocess) must fail the run too
         print(f"# {gname}: {time.time() - t0:.1f}s", file=sys.stderr)
+
+    if args.record is not None:
+        payload = {
+            "config": {"full": args.full, "groups": sorted(selected)},
+            "rows": recorded,
+        }
+        with open(args.record, "w") as f:
+            json.dump(payload, f, indent=1)
+            f.write("\n")
+        print(f"# recorded {len(recorded)} rows -> {args.record}", file=sys.stderr)
+    if failed:
+        sys.exit(f"benchmark group(s) failed: {', '.join(failed)}")
 
 
 if __name__ == "__main__":

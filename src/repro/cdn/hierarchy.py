@@ -1,21 +1,19 @@
-"""Batched multi-tier cache-hierarchy simulator (edge fleet + shared parent).
+"""Two-tier cache-hierarchy simulator (edge fleet + shared parent).
 
-Architecture: E edge caches run the existing branch-free ``jax_cache.step``
-*in parallel* via ``vmap`` — every edge scans the full trace but a per-edge
-``active`` mask (from :mod:`repro.cdn.router`) freezes its state on requests
-routed elsewhere, so state update cost is one masked ``where`` instead of a
-serialised gather/scatter over the fleet. The parent tier then scans the same
-trace with ``active = edge missed``, which reproduces exactly the request
-order a real miss stream would carry. Everything is fixed-shape and jittable;
-``simulate_hierarchy_batch`` vmaps the whole hierarchy over trace samples.
+Since the fleet subsystem landed, this module is a *thin wrapper*: a
+:class:`HierarchySpec` is exactly a depth-2 :class:`repro.fleet.Topology`
+(see :func:`repro.fleet.topology.from_hierarchy`), and
+:func:`simulate_hierarchy` delegates to ``repro.fleet.sim.simulate_fleet``,
+re-shaping the general per-level result into the legacy
+``edge_hit / parent_hit / edge / parent`` dict. The underlying math is
+unchanged — E edges run the branch-free ``jax_cache.step`` in parallel via
+``vmap`` with per-edge ``active`` masks, and the parent scans the edge miss
+stream — so results are bit-identical to the pre-fleet implementation
+(asserted against the pure-Python oracle in tests/test_cdn.py).
 
 Edges may differ in capacity / hot size (traced per-edge ``cap`` override in
 ``jax_cache.step``; per-edge ``hot`` masks live in the stacked state) but must
 share ``kind``, ``n_objects`` and ``window`` so their states stack.
-
-Decision parity: ``repro.cdn.reference.simulate_hierarchy_reference`` runs the
-same topology with the paper's pure-Python policy objects; the tests assert
-identical hit sequences and final cache contents per tier.
 """
 from __future__ import annotations
 
@@ -23,12 +21,12 @@ import dataclasses
 import functools
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
-from repro.core import jax_cache
 from repro.core.jax_cache import PolicySpec
 from repro.cdn import router as router_mod
+from repro.fleet import topology as topo_mod
+from repro.fleet.sim import simulate_fleet
 
 __all__ = [
     "HierarchySpec",
@@ -55,36 +53,10 @@ class HierarchySpec:
     def __post_init__(self):
         if not self.edges:
             raise ValueError("need at least one edge node")
-        e0 = self.edges[0]
-        for e in self.edges[1:]:
-            if (e.kind, e.n_objects, e.window) != (e0.kind, e0.n_objects, e0.window):
-                raise ValueError(
-                    "edge specs must share kind/n_objects/window to stack; "
-                    f"got {e} vs {e0}"
-                )
-            if e0.kind in jax_cache.SKETCH_POLICY_KINDS and (
-                e.effective_sketch_width,
-                e.effective_window,
-                e.effective_refresh,
-                e.effective_hot,
-            ) != (
-                e0.effective_sketch_width,
-                e0.effective_window,
-                e0.effective_refresh,
-                e0.effective_hot,
-            ):
-                # the vmapped step closes over e0's static sketch parameters,
-                # so heterogeneous edges may vary only in traced capacity
-                raise ValueError(
-                    "sketch-policy edges must share sketch_width/window/refresh/"
-                    f"hot_size (effective values differ: {e} vs {e0})"
-                )
-        if self.parent.n_objects != e0.n_objects:
-            raise ValueError("parent and edges must share n_objects")
-        if self.router not in router_mod.ROUTER_MODES:
-            raise ValueError(
-                f"unknown router {self.router!r}; expected one of {router_mod.ROUTER_MODES}"
-            )
+        # one source of validation truth: build the depth-2 Topology, whose
+        # __post_init__ enforces the stacked-state / sketch-homogeneity /
+        # router rules this wrapper used to duplicate
+        topo_mod.from_hierarchy(self)
 
     @property
     def n_edges(self) -> int:
@@ -93,6 +65,10 @@ class HierarchySpec:
     @property
     def n_objects(self) -> int:
         return self.edges[0].n_objects
+
+    def topology(self) -> topo_mod.Topology:
+        """The equivalent depth-2 fleet Topology (the simulation substrate)."""
+        return topo_mod.from_hierarchy(self)
 
     def assignment(self, trace: np.ndarray, seed: int = 0) -> np.ndarray:
         """Route a (…, T) trace to edges (host-side, shared with the reference)."""
@@ -113,6 +89,7 @@ def two_tier(
     window: int = 0,
     refresh: int = 0,
     sketch_width: int = 0,
+    doorkeeper: int = 0,
     parent_kind: str | None = None,
 ) -> HierarchySpec:
     """Convenience: homogeneous E-edge fleet + one (usually bigger) parent.
@@ -122,6 +99,7 @@ def two_tier(
     edge = PolicySpec(
         kind=kind, n_objects=n_objects, capacity=edge_capacity, window=window,
         refresh=refresh, sketch_width=sketch_width,
+        doorkeeper=doorkeeper if kind == "tinylfu" else 0,
     )
     parent = PolicySpec(
         kind=parent_kind or kind,
@@ -130,64 +108,16 @@ def two_tier(
         window=window,
         refresh=refresh,
         sketch_width=sketch_width,
+        doorkeeper=doorkeeper if (parent_kind or kind) == "tinylfu" else 0,
     )
     return HierarchySpec(
         edges=(edge,) * n_edges, parent=parent, router=router, session_len=session_len
     )
 
 
-def _masked_scan(spec: PolicySpec, state, trace, active, cap=None):
-    """Scan ``step`` over the trace, freezing state where ``active`` is False.
-
-    plfua_dyn routes through the chunked scan so its global-time hot-set
-    refresh fires at trace-position boundaries for every instance, active or
-    not (the reference hierarchy drives ``refresh_now`` on the same timer)."""
-    if spec.kind == "plfua_dyn":
-        return jax_cache._chunked_scan(spec, state, trace, active, cap)
-
-    def f(s, inp):
-        x, a = inp
-        ns, hit = jax_cache.step(spec, s, x, cap)
-        ns = jax.tree_util.tree_map(lambda o, n: jnp.where(a, n, o), s, ns)
-        return ns, hit & a
-
-    return jax.lax.scan(f, state, (trace, active))
-
-
-def _tier_counters(spec: PolicySpec, hits, active, trace, state):
-    """Derived per-tier accounting, all from the hit/active series + final state.
-
-    Inserts are implied by the policy semantics (every admitted miss inserts),
-    so evictions = inserts - final occupancy. Sketch kinds carry the insert
-    count in state (admission there is data-dependent, and plfua_dyn's hot
-    mask changes over time, so neither can be derived from the final state).
-    """
-    miss = active & ~hits
-    count = state["count"]
-    if spec.kind == "plfua":
-        admitted = jnp.take(state["hot"], trace, axis=-1)  # hot mask gathered at x_t
-        inserts = (miss & admitted).sum(-1)
-        admitted_requests = (active & admitted).sum(-1)
-    elif spec.kind in jax_cache.SKETCH_POLICY_KINDS:
-        inserts = state["inserts"]
-        # every hit touches policy metadata; every insert is an admitted miss
-        admitted_requests = hits.sum(-1) + inserts
-    else:
-        inserts = miss.sum(-1)
-        admitted_requests = active.sum(-1)
-    return {
-        "requests": active.sum(-1),
-        "hits": hits.sum(-1),
-        "admitted_requests": admitted_requests,
-        "inserts": inserts,
-        "evictions": inserts - count,
-        "count": count,
-    }
-
-
 @functools.partial(jax.jit, static_argnums=0)
 def simulate_hierarchy(hspec: HierarchySpec, trace: jax.Array, assignment: jax.Array):
-    """Run one trace through the two-tier hierarchy.
+    """Run one trace through the two-tier hierarchy (via the fleet simulator).
 
     Returns a dict of arrays:
       ``edge_hit``  (T,) bool — hit at the assigned edge
@@ -196,36 +126,15 @@ def simulate_hierarchy(hspec: HierarchySpec, trace: jax.Array, assignment: jax.A
       ``parent`` — same counters for the parent tier, scalars
       ``edge_states`` / ``parent_state`` — final policy states
     """
-    trace = trace.astype(jnp.int32)
-    assignment = assignment.astype(jnp.int32)
-    e0 = hspec.edges[0]
-    E = hspec.n_edges
-
-    edge_states = jax.tree_util.tree_map(
-        lambda *xs: jnp.stack(xs), *[jax_cache.init_state(e) for e in hspec.edges]
-    )
-    caps = jnp.array([e.capacity for e in hspec.edges], jnp.int32)
-    active = assignment[None, :] == jnp.arange(E, dtype=jnp.int32)[:, None]  # (E, T)
-
-    edge_states, edge_hits = jax.vmap(
-        lambda st, act, cap: _masked_scan(e0, st, trace, act, cap)
-    )(edge_states, active, caps)  # hits: (E, T), zero where inactive
-    edge_hit = edge_hits.any(axis=0)  # (T,) — exactly one edge active per t
-
-    miss = ~edge_hit
-    parent_state, parent_hits = _masked_scan(
-        hspec.parent, jax_cache.init_state(hspec.parent), trace, miss
-    )
-
+    out = simulate_fleet(hspec.topology(), trace, assignment)
+    squeeze = functools.partial(jax.tree_util.tree_map, lambda x: x[0])
     return {
-        "edge_hit": edge_hit,
-        "parent_hit": parent_hits,
-        "edge": _tier_counters(e0, edge_hits, active, trace, edge_states),
-        "parent": _tier_counters(
-            hspec.parent, parent_hits, miss, trace, parent_state
-        ),
-        "edge_states": edge_states,
-        "parent_state": parent_state,
+        "edge_hit": out["hit"][0],
+        "parent_hit": out["hit"][1],
+        "edge": out["tiers"][0],
+        "parent": squeeze(out["tiers"][1]),  # K=1 parent tier -> scalars
+        "edge_states": out["states"][0],
+        "parent_state": squeeze(out["states"][1]),
     }
 
 

@@ -1,11 +1,14 @@
 """Pure-Python reference hierarchy: the oracle for the jitted simulator.
 
-Builds each tier from the paper-faithful policy objects in
-``repro.core.policies`` and processes requests strictly in trace order:
-request -> assigned edge; on edge miss the same request goes to the shared
-parent. Decision-for-decision equality with ``repro.cdn.simulate_hierarchy``
-(same hit sequences, same final cache contents, same eviction counts) is
-asserted in tests/test_cdn.py.
+Thin two-tier wrapper over the N-tier fleet oracle
+(:mod:`repro.fleet.reference`): the topology conversion is the same
+``from_hierarchy`` the jitted wrapper uses, so both sides of the
+differential test run the identical depth-2 tree. Decision-for-decision
+equality with ``repro.cdn.simulate_hierarchy`` (same hit sequences, same
+final cache contents, same eviction counts) is asserted in tests/test_cdn.py.
+
+``build_policy`` (PolicySpec -> reference policy object) lives in
+``repro.fleet.reference`` now and is re-exported here for compatibility.
 """
 from __future__ import annotations
 
@@ -14,39 +17,10 @@ import dataclasses
 import numpy as np
 
 from repro.core import policies
-from repro.core.jax_cache import PolicySpec
 from repro.cdn.hierarchy import HierarchySpec
+from repro.fleet.reference import build_policy, simulate_fleet_reference
 
 __all__ = ["build_policy", "simulate_hierarchy_reference", "ReferenceResult"]
-
-
-def build_policy(spec: PolicySpec) -> policies.CachePolicy:
-    """PolicySpec -> the equivalent reference policy object."""
-    if spec.kind == "lru":
-        return policies.LRUCache(spec.capacity)
-    if spec.kind == "lfu":
-        return policies.LFUCache(spec.capacity)
-    if spec.kind == "plfu":
-        return policies.PLFUCache(spec.capacity)
-    if spec.kind == "plfua":
-        return policies.PLFUACache(spec.capacity, hot=range(spec.effective_hot))
-    if spec.kind == "wlfu":
-        return policies.WLFUCache(spec.capacity, window=spec.window)
-    if spec.kind == "tinylfu":
-        return policies.TinyLFUCache(
-            spec.capacity,
-            window=spec.effective_window,
-            sketch_width=spec.effective_sketch_width,
-        )
-    if spec.kind == "plfua_dyn":
-        return policies.DynamicPLFUACache(
-            spec.capacity,
-            spec.n_objects,
-            hot_size=spec.effective_hot,
-            refresh=spec.effective_refresh,
-            sketch_width=spec.effective_sketch_width,
-        )
-    raise ValueError(f"no reference policy for kind {spec.kind!r}")
 
 
 @dataclasses.dataclass
@@ -68,25 +42,10 @@ class ReferenceResult:
 def simulate_hierarchy_reference(
     hspec: HierarchySpec, trace: np.ndarray, assignment: np.ndarray
 ) -> ReferenceResult:
-    edges = [build_policy(s) for s in hspec.edges]
-    parent = build_policy(hspec.parent)
-    # dynamic-PLFUA refreshes run on *global* time in a fleet (one timer per
-    # tier), matching the jitted simulator's chunked scan — switch the policy
-    # objects to externally-driven refresh and fire them on the tier cadence.
-    timers: list[tuple[policies.DynamicPLFUACache, int]] = []
-    for pol, spec in (*zip(edges, hspec.edges), (parent, hspec.parent)):
-        if isinstance(pol, policies.DynamicPLFUACache):
-            pol.external_refresh = True
-            timers.append((pol, spec.effective_refresh))
-    T = len(trace)
-    edge_hit = np.zeros(T, bool)
-    parent_hit = np.zeros(T, bool)
-    for t, (x, e) in enumerate(zip(trace.tolist(), assignment.tolist())):
-        hit = edges[e].request(x)
-        edge_hit[t] = hit
-        if not hit:
-            parent_hit[t] = parent.request(x)
-        for pol, period in timers:
-            if (t + 1) % period == 0:
-                pol.refresh_now()
-    return ReferenceResult(edge_hit, parent_hit, edges, parent)
+    res = simulate_fleet_reference(hspec.topology(), trace, assignment)
+    return ReferenceResult(
+        edge_hit=res.level_hit[0],
+        parent_hit=res.level_hit[1],
+        edges=res.levels[0],
+        parent=res.levels[1][0],
+    )

@@ -1,127 +1,28 @@
-"""Per-tier roll-ups: CHR, evictions, management cost and energy.
+"""Two-tier roll-ups: CHR, evictions, management cost and energy.
 
-The paper prices a cache by the CPU time its *management loop* burns
-(core.energy converts that to Joules at one Xeon-core TDP share). The
-hierarchy simulator counts decisions, not seconds, so this module carries a
-coarse operation-count model per policy kind — dict/heap touches per request
-plus the eviction inner loop, with the paper's two cost profiles:
-
-  * ``heap`` — lazy min-heap eviction, O(log C) per eviction (the optimised
-    implementation benchmarked in cache_py);
-  * ``scan`` — O(C) linear-scan eviction (the paper's §3 profile, the one that
-    produces Fig. 4's CPU ridge at intermediate cache sizes).
-
-``per_op_s`` calibrates an "operation" to seconds; the default 1e-7 s (~100 ns
-per dict/heap touch on the paper's Xeon Gold 6130) reproduces the right order
-of magnitude against core.simulate timings. It is a parameter, not a claim.
+The operation-count cost model (``mgmt_ops``, ``TierReport``, the heap/scan
+eviction profiles and the ``per_op_s`` calibration) moved to
+:mod:`repro.fleet.report` with the N-tier generalisation and is re-exported
+here unchanged. This module keeps the legacy two-tier view:
+:class:`HierarchyReport` with its ``per_edge`` / ``edge`` (aggregate) /
+``parent`` split, built from a ``simulate_hierarchy`` result dict.
 """
 from __future__ import annotations
 
 import dataclasses
-import math
 from typing import Any
 
 import numpy as np
 
-from repro.core import energy, sketch
-from repro.core.jax_cache import PolicySpec
 from repro.cdn.hierarchy import HierarchySpec
+from repro.fleet.report import (  # noqa: F401  (re-exported API)
+    TierReport,
+    aggregate_tiers,
+    mgmt_ops,
+    tier_report as _tier,
+)
 
 __all__ = ["TierReport", "HierarchyReport", "mgmt_ops", "hierarchy_report"]
-
-#: dict/heap touches charged per processed request, by policy kind. Sketch
-#: kinds additionally pay core.sketch.DEPTH counter updates on every request
-#: (the TinyLFU "O(1) admission" price), charged separately below.
-_REQ_OPS = {
-    "lru": 3.0,
-    "lfu": 3.0,
-    "plfu": 3.0,
-    "plfua": 1.0,
-    "wlfu": 5.0,
-    "tinylfu": 3.0,
-    "plfua_dyn": 1.0,
-}
-#: extra touches per *admitted* request (the PLFUA family meters metadata work
-#: only for the hot set — that asymmetry is the paper's §4 energy argument).
-_ADMITTED_OPS = {"plfua": 3.0, "plfua_dyn": 3.0}
-
-
-def mgmt_ops(
-    spec: PolicySpec,
-    requests: float,
-    admitted_requests: float,
-    evictions: float,
-    cost_model: str = "heap",
-    global_requests: float | None = None,
-) -> float:
-    """Abstract management-operation count for one tier.
-
-    ``global_requests`` is the total request count across the whole fleet
-    (trace steps x samples). plfua_dyn's hot-set refresh runs on *global*
-    time — every instance refreshes once per ``refresh`` trace positions no
-    matter how few requests were routed to it — so its amortised refresh cost
-    scales with global, not tier-local, requests. Defaults to ``requests``
-    (correct for a flat single cache). TinyLFU aging really is driven by the
-    per-instance request counter, so it stays on ``requests``.
-    """
-    if cost_model not in ("heap", "scan"):
-        raise ValueError(f"cost_model must be 'heap' or 'scan', got {cost_model!r}")
-    per_evict = (
-        float(spec.capacity)
-        if (cost_model == "scan" or spec.kind == "wlfu")  # wlfu heap is invalid
-        else math.log2(max(2.0, spec.capacity))
-    )
-    ops = _REQ_OPS[spec.kind] * requests
-    ops += _ADMITTED_OPS.get(spec.kind, 0.0) * admitted_requests
-    ops += per_evict * evictions
-    if spec.kind == "tinylfu":
-        # per-request sketch counter updates (one per row), plus amortised
-        # aging: halving DEPTH x width counters once per window
-        ops += float(sketch.DEPTH) * requests
-        ops += requests / spec.effective_window * float(
-            sketch.DEPTH * spec.effective_sketch_width
-        )
-    if spec.kind == "plfua_dyn":
-        ops += float(sketch.DEPTH) * requests
-        # amortised global-time refresh, at the model's DEPTH-touches-per-
-        # sketch-access convention: estimate-all reads DEPTH counters per
-        # object, plus the halving over the whole DEPTH x width table
-        g = requests if global_requests is None else global_requests
-        ops += g / spec.effective_refresh * float(
-            sketch.DEPTH * (spec.n_objects + spec.effective_sketch_width)
-        )
-    return float(ops)
-
-
-@dataclasses.dataclass
-class TierReport:
-    tier: str  # "edge[i]" | "edge" (aggregate) | "parent"
-    policy: str
-    capacity: int
-    requests: int
-    hits: int
-    evictions: int
-    mgmt_ops: float
-    mgmt_cpu_s: float
-    mgmt_energy_j: float
-
-    @property
-    def chr(self) -> float:
-        return self.hits / self.requests if self.requests else 0.0
-
-    def row(self) -> dict:
-        return {
-            "tier": self.tier,
-            "policy": self.policy,
-            "capacity": self.capacity,
-            "requests": self.requests,
-            "hits": self.hits,
-            "chr": self.chr,
-            "evictions": self.evictions,
-            "mgmt_ops": self.mgmt_ops,
-            "mgmt_cpu_s": self.mgmt_cpu_s,
-            "mgmt_energy_j": self.mgmt_energy_j,
-        }
 
 
 @dataclasses.dataclass
@@ -161,36 +62,6 @@ class HierarchyReport:
         return [t.row() for t in (*self.per_edge, self.edge, self.parent)]
 
 
-def _tier(
-    name: str,
-    spec: PolicySpec,
-    c: dict[str, Any],
-    cost_model: str,
-    per_op_s: float,
-    global_requests: float | None = None,
-) -> TierReport:
-    ops = mgmt_ops(
-        spec,
-        float(c["requests"]),
-        float(c["admitted_requests"]),
-        float(c["evictions"]),
-        cost_model,
-        global_requests=global_requests,
-    )
-    cpu_s = ops * per_op_s
-    return TierReport(
-        tier=name,
-        policy=spec.kind,
-        capacity=spec.capacity,
-        requests=int(c["requests"]),
-        hits=int(c["hits"]),
-        evictions=int(c["evictions"]),
-        mgmt_ops=ops,
-        mgmt_cpu_s=cpu_s,
-        mgmt_energy_j=energy.mgmt_energy_j(cpu_s),
-    )
-
-
 def hierarchy_report(
     hspec: HierarchySpec,
     result: dict[str, Any],
@@ -222,16 +93,8 @@ def hierarchy_report(
         )
         for i in range(E)
     ]
-    agg = TierReport(
-        tier="edge",
-        policy=hspec.edges[0].kind,
-        capacity=sum(e.capacity for e in hspec.edges),
-        requests=sum(t.requests for t in per_edge),
-        hits=sum(t.hits for t in per_edge),
-        evictions=sum(t.evictions for t in per_edge),
-        mgmt_ops=sum(t.mgmt_ops for t in per_edge),
-        mgmt_cpu_s=sum(t.mgmt_cpu_s for t in per_edge),
-        mgmt_energy_j=sum(t.mgmt_energy_j for t in per_edge),
+    agg = aggregate_tiers(
+        "edge", hspec.edges[0].kind, sum(e.capacity for e in hspec.edges), per_edge
     )
     parent = _tier(
         "parent", hspec.parent, parent_c, cost_model, per_op_s,

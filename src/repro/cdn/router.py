@@ -24,6 +24,8 @@ import numpy as np
 
 ROUTER_MODES = ("hash", "sticky", "round_robin")
 
+_SEED_STRIDE = 1_000_003
+
 _MIX_MULT = np.uint64(0xFF51AFD7ED558CCD)
 _MIX_MULT2 = np.uint64(0xC4CEB9FE1A85EC53)
 
@@ -55,13 +57,58 @@ def route(
     if mode == "round_robin":
         assign = np.broadcast_to(np.arange(T, dtype=np.int64) % n_edges, trace.shape)
     elif mode == "hash":
-        assign = _mix64(trace.astype(np.int64) + np.int64(seed) * np.int64(1_000_003)) % np.uint64(n_edges)
+        assign = _mix64(trace.astype(np.int64) + np.int64(seed) * np.int64(_SEED_STRIDE)) % np.uint64(n_edges)
     elif mode == "sticky":
         if session_len < 1:
             raise ValueError(f"session_len must be >= 1, got {session_len}")
         block = np.arange(T, dtype=np.int64) // session_len
-        assign = _mix64(block + np.int64(seed) * np.int64(1_000_003)) % np.uint64(n_edges)
+        assign = _mix64(block + np.int64(seed) * np.int64(_SEED_STRIDE)) % np.uint64(n_edges)
         assign = np.broadcast_to(assign, trace.shape)
     else:
         raise ValueError(f"unknown router mode {mode!r}; expected one of {ROUTER_MODES}")
     return np.ascontiguousarray(assign.astype(np.int32))
+
+
+def route_device(
+    trace,
+    n_edges: int,
+    mode: str = "hash",
+    *,
+    session_len: int = 64,
+    seed: int = 0,
+):
+    """jnp analogue of :func:`route`, usable *inside* jit (the fleet's
+    on-device trace-generation path routes freshly synthesized chunks without
+    a host round-trip).
+
+    Hash/sticky use the shared 32-bit lowbias mixer (JAX runs with x64 off,
+    so the host router's 64-bit avalanche is unavailable): partitions are
+    equally deterministic/uniform but *differ* from the host ``route``.
+    Parity tests always carry the assignment array with the results, so
+    oracle comparisons stay exact either way.
+    """
+    import jax.numpy as jnp
+
+    from repro.core.sketch import _mix32
+
+    if n_edges < 1:
+        raise ValueError(f"n_edges must be >= 1, got {n_edges}")
+    T = trace.shape[-1]
+    salt = jnp.uint32(np.uint32(np.int64(seed) * _SEED_STRIDE & 0xFFFFFFFF))
+    if mode == "round_robin":
+        assign = jnp.broadcast_to(
+            jnp.arange(T, dtype=jnp.int32) % n_edges, trace.shape
+        )
+    elif mode == "hash":
+        h = _mix32(trace.astype(jnp.uint32) + salt, jnp)
+        assign = h % jnp.uint32(n_edges)
+    elif mode == "sticky":
+        if session_len < 1:
+            raise ValueError(f"session_len must be >= 1, got {session_len}")
+        block = (jnp.arange(T, dtype=jnp.int32) // session_len).astype(jnp.uint32)
+        assign = jnp.broadcast_to(
+            _mix32(block + salt, jnp) % jnp.uint32(n_edges), trace.shape
+        )
+    else:
+        raise ValueError(f"unknown router mode {mode!r}; expected one of {ROUTER_MODES}")
+    return assign.astype(jnp.int32)

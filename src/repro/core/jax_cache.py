@@ -41,12 +41,17 @@ class PolicySpec:
     window: int = 0  # wlfu (required) and tinylfu aging (0 -> sketch.default_window)
     refresh: int = 0  # plfua_dyn hot-set period (0 -> sketch.default_refresh)
     sketch_width: int = 0  # sketch kinds (0 -> sketch.default_width)
+    doorkeeper: int = 0  # tinylfu bloom front, in bits (0 = off, the default)
 
     def __post_init__(self):
         if self.kind not in JAX_POLICY_KINDS:
             raise ValueError(f"kind={self.kind!r} not in {JAX_POLICY_KINDS}")
         if self.kind == "wlfu" and self.window < 1:
             raise ValueError("wlfu requires window >= 1")
+        if self.doorkeeper < 0:
+            raise ValueError(f"doorkeeper must be >= 0, got {self.doorkeeper}")
+        if self.doorkeeper and self.kind != "tinylfu":
+            raise ValueError("doorkeeper is a tinylfu-only option")
 
     @property
     def effective_hot(self) -> int:
@@ -76,6 +81,10 @@ class PolicySpec:
             np.arange(self.n_objects), self.effective_sketch_width
         )
 
+    def _bloom_table(self) -> np.ndarray:
+        """Host-side (n_objects, BLOOM_DEPTH) doorkeeper bit constant."""
+        return sketch.bloom_table(np.arange(self.n_objects), self.doorkeeper)
+
 
 def init_state(spec: PolicySpec) -> dict[str, jax.Array]:
     """Zero state. ``hot`` is the PLFUA admission mask (rank-prefix hot set,
@@ -102,6 +111,8 @@ def init_state(spec: PolicySpec) -> dict[str, jax.Array]:
         state["inserts"] = jnp.zeros((), jnp.int32)
     if spec.kind == "tinylfu":
         state["seen"] = jnp.zeros((), jnp.int32)  # aging-window position
+        if spec.doorkeeper:
+            state["bloom"] = jnp.zeros((spec.doorkeeper,), jnp.bool_)
     return state
 
 
@@ -154,17 +165,35 @@ def step(spec: PolicySpec, state: dict[str, jax.Array], x: jax.Array, cap: jax.A
         freq, rows, seen = state["freq"], state["sketch"], state["seen"]
         table = jnp.asarray(spec._bucket_table())
         idx = table[x]
-        rows = sketch.rows_add(rows, idx)
+        if spec.doorkeeper:
+            # doorkeeper gate: first touch per window marks the bloom only;
+            # the sketch increments from the second touch on. bloom_set is
+            # idempotent, so the update stays branch-free.
+            btab = jnp.asarray(spec._bloom_table())
+            bidx = btab[x]
+            in_dk = sketch.bloom_contains(state["bloom"], bidx)
+            rows = jnp.where(in_dk, sketch.rows_add(rows, idx), rows)
+            bloom = sketch.bloom_set(state["bloom"], bidx)
+        else:
+            rows = sketch.rows_add(rows, idx)
         seen = seen + 1
         age = seen >= spec.effective_window
         rows = jnp.where(age, sketch.rows_halve(rows), rows)
         seen = jnp.where(age, 0, seen)
+        if spec.doorkeeper:
+            bloom = jnp.where(age, jnp.zeros_like(bloom), bloom)
 
         hit = in_cache[x]
         full = count >= cap
         victim = _masked_argmin(freq, in_cache)
-        # admission duel: incoming vs victim, by (post-aging) sketch estimate
-        admit = sketch.rows_estimate(rows, idx) > sketch.rows_estimate(rows, table[victim])
+        # admission duel: incoming vs victim, by (post-aging) sketch estimate,
+        # with the doorkeeper'd occurrence added back when the front is on
+        est_x = sketch.rows_estimate(rows, idx)
+        est_v = sketch.rows_estimate(rows, table[victim])
+        if spec.doorkeeper:
+            est_x = est_x + sketch.bloom_contains(bloom, bidx).astype(jnp.int32)
+            est_v = est_v + sketch.bloom_contains(bloom, btab[victim]).astype(jnp.int32)
+        admit = est_x > est_v
         insert = (~hit) & ((~full) | admit)
         need_evict = (~hit) & full & admit
         in_cache = in_cache.at[victim].set(in_cache[victim] & ~need_evict)
@@ -176,10 +205,13 @@ def step(spec: PolicySpec, state: dict[str, jax.Array], x: jax.Array, cap: jax.A
         in_cache = in_cache.at[x].set(in_cache[x] | insert)
         count = count + insert.astype(jnp.int32) - need_evict.astype(jnp.int32)
         inserts = state["inserts"] + insert.astype(jnp.int32)
-        return dict(
+        out = dict(
             in_cache=in_cache, count=count, freq=freq,
             sketch=rows, seen=seen, inserts=inserts,
-        ), hit
+        )
+        if spec.doorkeeper:
+            out["bloom"] = bloom
+        return out, hit
 
     # frequency family: lfu / plfu / plfua / plfua_dyn
     freq = state["freq"]
@@ -308,7 +340,7 @@ def metadata_entries(spec: PolicySpec, state: dict[str, jax.Array]) -> jax.Array
     if spec.kind == "lfu":
         return state["count"]
     if spec.kind == "tinylfu":
-        return state["count"] + state["sketch"].size
+        return state["count"] + state["sketch"].size + spec.doorkeeper
     # plfu / plfua / plfua_dyn: cached entries + parked entries (+ sketch)
     parked = ((state["freq"] > 0) & ~state["in_cache"]).sum()
     meta = state["count"] + parked

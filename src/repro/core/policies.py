@@ -322,21 +322,47 @@ class TinyLFUCache(_HeapLFUBase):
     sketch-estimated frequency exceeds the eviction victim's; the sketch ages
     by halving every ``window`` requests. Sketch hashing/aging lives in
     :mod:`repro.core.sketch`, shared bit-for-bit with the JAX tier.
+
+    ``doorkeeper`` (bloom bits, 0 = off) puts a bloom filter in front of the
+    sketch [Einziger et al. §3.4]: an object's *first* touch per aging window
+    only marks the bloom — the sketch increments from the second touch on, so
+    one-hit wonders (the long Zipf tail) never spend sketch counters. An
+    estimate then adds back the bloom'd occurrence, and aging clears the
+    bloom together with the halving.
     """
 
     name = "tinylfu"
 
-    def __init__(self, capacity: int, window: int | None = None, sketch_width: int | None = None):
+    def __init__(
+        self,
+        capacity: int,
+        window: int | None = None,
+        sketch_width: int | None = None,
+        doorkeeper: int = 0,
+    ):
         super().__init__(capacity)
         self.window = int(window or sketch.default_window(capacity))
         self._sketch = sketch.CountMinSketch(sketch_width or sketch.default_width(capacity))
+        self.doorkeeper = int(doorkeeper)
+        self._bloom = sketch.BloomFilter(self.doorkeeper) if self.doorkeeper else None
         self._seen = 0
 
+    def _estimate(self, x: int) -> int:
+        est = self._sketch.estimate(x)
+        if self._bloom is not None and self._bloom.contains(x):
+            est += 1
+        return est
+
     def request(self, x: int) -> bool:
-        self._sketch.add(x)
+        if self._bloom is None or self._bloom.contains(x):
+            self._sketch.add(x)
+        else:
+            self._bloom.add(x)
         self._seen += 1
         if self._seen >= self.window:
             self._sketch.halve()
+            if self._bloom is not None:
+                self._bloom.clear()
             self._seen = 0
 
         freq = self._freq
@@ -349,9 +375,9 @@ class TinyLFUCache(_HeapLFUBase):
         if len(freq) < self.capacity:
             self._bump(x, 1)
             return False
-        # admission duel: incoming vs victim, by sketch estimate
+        # admission duel: incoming vs victim, by (bloom-augmented) estimate
         vf, victim = self._peek_min()
-        if self._sketch.estimate(x) > self._sketch.estimate(victim):
+        if self._estimate(x) > self._estimate(victim):
             self._evict_min()
             self._bump(x, 1)
         return False
@@ -367,7 +393,8 @@ class TinyLFUCache(_HeapLFUBase):
 
     @property
     def metadata_entries(self) -> int:
-        return len(self._freq) + self._sketch.rows.size
+        bloom = self._bloom.bits.size if self._bloom is not None else 0
+        return len(self._freq) + self._sketch.rows.size + bloom
 
 
 class DynamicPLFUACache(CachePolicy):
@@ -463,6 +490,7 @@ def make_policy(
     window: int | None = None,
     refresh: int = 0,
     sketch_width: int = 0,
+    doorkeeper: int = 0,
     evict: str = "heap",
 ) -> CachePolicy:
     """Factory. PLFUA needs a hot set: explicit ``hot`` ids, or the rank prefix
@@ -484,7 +512,7 @@ def make_policy(
     if name == "wlfu":
         return WLFUCache(capacity, window or 10_000)
     if name == "tinylfu":
-        return TinyLFUCache(capacity, window, sketch_width or None)
+        return TinyLFUCache(capacity, window, sketch_width or None, doorkeeper)
     if name == "plfua_dyn":
         if n_objects is None:
             raise ValueError("plfua_dyn requires n_objects (sketch id universe)")

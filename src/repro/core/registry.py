@@ -35,7 +35,7 @@ POLICIES: tuple[PolicyInfo, ...] = (
     PolicyInfo("plfu", True, True, True, description="Perfect LFU with parked-list"),
     PolicyInfo("plfua", True, True, True, description="PLFU + static rank-prefix hot-set admission"),
     PolicyInfo("wlfu", True, True, False, description="Window-LFU over the last W requests"),
-    PolicyInfo("tinylfu", True, True, False, sketch=True, description="sketch-vs-victim admission over LFU eviction"),
+    PolicyInfo("tinylfu", True, True, False, sketch=True, description="sketch-vs-victim admission over LFU eviction (optional doorkeeper bloom front)"),
     PolicyInfo("plfua_dyn", True, True, False, sketch=True, description="PLFUA with sketch-refreshed hot set"),
 )
 

@@ -21,9 +21,15 @@ from __future__ import annotations
 import numpy as np
 
 __all__ = [
+    "BLOOM_DEPTH",
+    "BloomFilter",
     "DEPTH",
     "CountMinSketch",
+    "bloom_contains",
+    "bloom_set",
+    "bloom_table",
     "bucket_table",
+    "default_doorkeeper",
     "default_refresh",
     "default_width",
     "default_window",
@@ -40,6 +46,11 @@ DEPTH = 4
 #: per-row salts (arbitrary odd mixing constants, one per hash function).
 _SALTS = (0x9E3779B9, 0x85EBCA6B, 0xC2B2AE35, 0x27D4EB2F)
 
+#: doorkeeper bloom filter: independent hash functions (and salts disjoint
+#: from the sketch rows', so bloom bits and sketch buckets decorrelate).
+BLOOM_DEPTH = 2
+_BLOOM_SALTS = (0xB5297A4D, 0x68E31DA4)
+
 
 # --------------------------------------------------------------- conventions
 def default_width(capacity: int) -> int:
@@ -55,6 +66,14 @@ def default_window(capacity: int) -> int:
 def default_refresh(capacity: int) -> int:
     """Dynamic-PLFUA hot-set refresh convention (same shape as the window)."""
     return max(10 * int(capacity), 1000)
+
+
+def default_doorkeeper(capacity: int) -> int:
+    """Doorkeeper bloom size convention: 8 bits per cached object, floored at
+    512 bits (Einziger et al. size the doorkeeper at a fraction of the sketch;
+    with BLOOM_DEPTH=2 hashes this keeps the false-positive rate low through a
+    whole aging window)."""
+    return max(8 * int(capacity), 512)
 
 
 # ------------------------------------------------------------------- hashing
@@ -83,6 +102,17 @@ def bucket_table(ids, width: int, xp=np):
     return (h % u(width)).astype(xp.int32)
 
 
+def bloom_table(ids, m_bits: int, xp=np):
+    """Doorkeeper bit indices for ``ids``: shape ``ids.shape + (BLOOM_DEPTH,)``
+    int32, same uint32-only arithmetic (and so the same numpy/jnp parity
+    guarantee) as :func:`bucket_table`, under the bloom salt set."""
+    u = xp.uint32
+    ids = xp.asarray(ids, xp.uint32)
+    salts = xp.asarray(_BLOOM_SALTS, xp.uint32)
+    h = _mix32((ids[..., None] + u(1)) * salts, xp)
+    return (h % u(m_bits)).astype(xp.int32)
+
+
 # ---------------------------------------------------------- functional core
 # These work on numpy and jnp ``rows`` alike (the index arrays are host-side
 # constants, which is also what keeps them free inside a jitted scan).
@@ -108,6 +138,24 @@ def rows_estimate_all(rows, table):
 def rows_halve(rows):
     """Aging: halve every counter (floor division by 2)."""
     return rows >> 1
+
+
+def bloom_set(bits, idx):
+    """Mark membership: set the BLOOM_DEPTH bits addressed by ``idx``.
+
+    Setting unconditionally is idempotent, so callers stay branch-free: the
+    doorkeeper semantics (only *gate the sketch increment* on prior
+    membership) fall out of pairing this with :func:`bloom_contains`."""
+    if isinstance(bits, np.ndarray):
+        bits = bits.copy()
+        bits[idx] = True
+        return bits
+    return bits.at[idx].set(True)
+
+
+def bloom_contains(bits, idx):
+    """Membership test: all BLOOM_DEPTH addressed bits set."""
+    return bits[idx].all()
 
 
 # --------------------------------------------------------- numpy convenience
@@ -138,3 +186,31 @@ class CountMinSketch:
 
     def halve(self) -> None:
         self.rows >>= 1
+
+
+class BloomFilter:
+    """Stateful numpy doorkeeper used by the pure-Python reference policies.
+
+    A plain bool bit-array (not packed words): the JAX tier carries the same
+    ``(m_bits,)`` bool layout in its scan state, so the two tiers agree bit
+    for bit on membership — the whole point of the shared hashing."""
+
+    depth = BLOOM_DEPTH
+
+    def __init__(self, m_bits: int):
+        if m_bits < 1:
+            raise ValueError(f"m_bits must be >= 1, got {m_bits}")
+        self.m_bits = int(m_bits)
+        self.bits = np.zeros((self.m_bits,), dtype=bool)
+
+    def _idx(self, x: int) -> np.ndarray:
+        return bloom_table(np.asarray(x), self.m_bits)
+
+    def add(self, x: int) -> None:
+        self.bits[self._idx(x)] = True
+
+    def contains(self, x: int) -> bool:
+        return bool(self.bits[self._idx(x)].all())
+
+    def clear(self) -> None:
+        self.bits[:] = False

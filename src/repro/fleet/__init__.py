@@ -1,0 +1,59 @@
+"""Fleet subsystem: declarative N-tier cache topologies, a jitted
+multi-device simulator, a pure-Python reference oracle, and per-tier
+report roll-ups.
+
+    from repro import fleet, workloads
+    topo = fleet.tree(n_objects=10_000, widths=(8, 2, 1),
+                      kinds=("lru", "plfu", "plfu"),
+                      capacities=(60, 240, 960))
+    traces = workloads.make_traces("churn", 10_000, n_samples=4,
+                                   trace_len=20_000)
+    assign = topo.assignment(traces)
+    out = fleet.simulate_fleet_batch(topo, traces, assign)
+    print(fleet.fleet_report(topo, out).rows())
+
+Multi-device: ``fleet.simulate_fleet_sharded`` splits the edge tier over a
+mesh (collective miss aggregation); ``fleet.simulate_fleet_device`` shards
+the sample axis with on-device trace generation (weak scaling). The legacy
+two-tier API in :mod:`repro.cdn` is a thin wrapper over depth-2 topologies.
+"""
+from repro.fleet.topology import Topology, from_hierarchy, tree
+from repro.fleet.sim import (
+    masked_scan,
+    simulate_fleet,
+    simulate_fleet_batch,
+    tier_counters,
+)
+from repro.fleet.reference import (
+    FleetReferenceResult,
+    build_policy,
+    simulate_fleet_reference,
+)
+from repro.fleet.report import FleetReport, TierReport, fleet_report, mgmt_ops
+from repro.fleet.shard import (
+    fleet_mesh,
+    mesh_size,
+    simulate_fleet_device,
+    simulate_fleet_sharded,
+)
+
+__all__ = [
+    "Topology",
+    "tree",
+    "from_hierarchy",
+    "simulate_fleet",
+    "simulate_fleet_batch",
+    "simulate_fleet_sharded",
+    "simulate_fleet_device",
+    "simulate_fleet_reference",
+    "FleetReferenceResult",
+    "build_policy",
+    "FleetReport",
+    "TierReport",
+    "fleet_report",
+    "mgmt_ops",
+    "masked_scan",
+    "tier_counters",
+    "fleet_mesh",
+    "mesh_size",
+]

@@ -1,0 +1,97 @@
+"""Pure-Python N-tier reference oracle: the ground truth for the jitted
+fleet simulator.
+
+Builds every topology node from the paper-faithful policy objects in
+``repro.core.policies`` and processes requests strictly in trace order:
+request -> assigned edge; on a miss the same request climbs the parent chain
+until some tier serves it (or it falls through to origin). Dynamic-PLFUA
+nodes refresh on *global* time (one timer per node, fired every
+``effective_refresh`` trace positions), matching the jitted simulator's
+chunked scan. Decision-for-decision equality (per-level hit sequences, final
+cache contents, eviction counts) is asserted in tests/test_fleet.py and, via
+the cdn wrapper, tests/test_cdn.py.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.core import policies
+from repro.core.jax_cache import PolicySpec
+from repro.fleet.topology import Topology
+
+__all__ = ["build_policy", "simulate_fleet_reference", "FleetReferenceResult"]
+
+
+def build_policy(spec: PolicySpec) -> policies.CachePolicy:
+    """PolicySpec -> the equivalent reference policy object."""
+    if spec.kind == "lru":
+        return policies.LRUCache(spec.capacity)
+    if spec.kind == "lfu":
+        return policies.LFUCache(spec.capacity)
+    if spec.kind == "plfu":
+        return policies.PLFUCache(spec.capacity)
+    if spec.kind == "plfua":
+        return policies.PLFUACache(spec.capacity, hot=range(spec.effective_hot))
+    if spec.kind == "wlfu":
+        return policies.WLFUCache(spec.capacity, window=spec.window)
+    if spec.kind == "tinylfu":
+        return policies.TinyLFUCache(
+            spec.capacity,
+            window=spec.effective_window,
+            sketch_width=spec.effective_sketch_width,
+            doorkeeper=spec.doorkeeper,
+        )
+    if spec.kind == "plfua_dyn":
+        return policies.DynamicPLFUACache(
+            spec.capacity,
+            spec.n_objects,
+            hot_size=spec.effective_hot,
+            refresh=spec.effective_refresh,
+            sketch_width=spec.effective_sketch_width,
+        )
+    raise ValueError(f"no reference policy for kind {spec.kind!r}")
+
+
+@dataclasses.dataclass
+class FleetReferenceResult:
+    level_hit: list[np.ndarray]  # per level: (T,) bool — served at this level
+    levels: list[list[policies.CachePolicy]]  # per-node policy objects
+
+    def in_cache(self, n_objects: int) -> list[np.ndarray]:
+        """Final contents per level: (K_l, n_objects) bool."""
+        return [
+            np.array([[p.contains(i) for i in range(n_objects)] for p in lvl])
+            for lvl in self.levels
+        ]
+
+
+def simulate_fleet_reference(
+    topo: Topology, trace: np.ndarray, assignment: np.ndarray
+) -> FleetReferenceResult:
+    pols = [[build_policy(s) for s in lvl] for lvl in topo.levels]
+    # dynamic-PLFUA refreshes run on *global* time in a fleet (one timer per
+    # node), matching the jitted simulator's chunked scan — switch the policy
+    # objects to externally-driven refresh and fire them on the tier cadence.
+    timers: list[tuple[policies.DynamicPLFUACache, int]] = []
+    for lvl, specs in zip(pols, topo.levels):
+        for pol, spec in zip(lvl, specs):
+            if isinstance(pol, policies.DynamicPLFUACache):
+                pol.external_refresh = True
+                timers.append((pol, spec.effective_refresh))
+    T = len(trace)
+    L = topo.n_levels
+    level_hit = [np.zeros(T, bool) for _ in range(L)]
+    for t, (x, e) in enumerate(zip(trace.tolist(), assignment.tolist())):
+        node = e
+        for l in range(L):
+            if pols[l][node].request(x):
+                level_hit[l][t] = True
+                break
+            if l < L - 1:
+                node = topo.parents[l][node]
+        for pol, period in timers:
+            if (t + 1) % period == 0:
+                pol.refresh_now()
+    return FleetReferenceResult(level_hit, pols)

@@ -1,0 +1,280 @@
+"""Per-tier roll-ups for fleet topologies: CHR, evictions, management cost
+and energy, rolled up the tier tree.
+
+The paper prices a cache by the CPU time its *management loop* burns
+(core.energy converts that to Joules at one Xeon-core TDP share). The fleet
+simulator counts decisions, not seconds, so this module carries a coarse
+operation-count model per policy kind — dict/heap touches per request plus
+the eviction inner loop, with the paper's two cost profiles:
+
+  * ``heap`` — lazy min-heap eviction, O(log C) per eviction (the optimised
+    implementation benchmarked in cache_py);
+  * ``scan`` — O(C) linear-scan eviction (the paper's §3 profile, the one that
+    produces Fig. 4's CPU ridge at intermediate cache sizes).
+
+``per_op_s`` calibrates an "operation" to seconds; the default 1e-7 s (~100 ns
+per dict/heap touch on the paper's Xeon Gold 6130) reproduces the right order
+of magnitude against core.simulate timings. It is a parameter, not a claim.
+
+This module owns the cost model; ``repro.cdn.report`` re-exports it and wraps
+:func:`fleet_report` for the legacy two-tier result shape.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any
+
+import numpy as np
+
+from repro.core import energy, sketch
+from repro.core.jax_cache import PolicySpec
+from repro.fleet.topology import Topology
+
+__all__ = [
+    "TierReport",
+    "FleetReport",
+    "aggregate_tiers",
+    "mgmt_ops",
+    "fleet_report",
+    "tier_report",
+]
+
+#: dict/heap touches charged per processed request, by policy kind. Sketch
+#: kinds additionally pay core.sketch.DEPTH counter updates on every request
+#: (the TinyLFU "O(1) admission" price), charged separately below.
+_REQ_OPS = {
+    "lru": 3.0,
+    "lfu": 3.0,
+    "plfu": 3.0,
+    "plfua": 1.0,
+    "wlfu": 5.0,
+    "tinylfu": 3.0,
+    "plfua_dyn": 1.0,
+}
+#: extra touches per *admitted* request (the PLFUA family meters metadata work
+#: only for the hot set — that asymmetry is the paper's §4 energy argument).
+_ADMITTED_OPS = {"plfua": 3.0, "plfua_dyn": 3.0}
+
+
+def mgmt_ops(
+    spec: PolicySpec,
+    requests: float,
+    admitted_requests: float,
+    evictions: float,
+    cost_model: str = "heap",
+    global_requests: float | None = None,
+) -> float:
+    """Abstract management-operation count for one tier node.
+
+    ``global_requests`` is the total request count across the whole fleet
+    (trace steps x samples). plfua_dyn's hot-set refresh runs on *global*
+    time — every instance refreshes once per ``refresh`` trace positions no
+    matter how few requests were routed to it — so its amortised refresh cost
+    scales with global, not tier-local, requests. Defaults to ``requests``
+    (correct for a flat single cache). TinyLFU aging really is driven by the
+    per-instance request counter, so it stays on ``requests``.
+    """
+    if cost_model not in ("heap", "scan"):
+        raise ValueError(f"cost_model must be 'heap' or 'scan', got {cost_model!r}")
+    per_evict = (
+        float(spec.capacity)
+        if (cost_model == "scan" or spec.kind == "wlfu")  # wlfu heap is invalid
+        else math.log2(max(2.0, spec.capacity))
+    )
+    ops = _REQ_OPS[spec.kind] * requests
+    ops += _ADMITTED_OPS.get(spec.kind, 0.0) * admitted_requests
+    ops += per_evict * evictions
+    if spec.kind == "tinylfu":
+        # per-request sketch counter updates (one per row), plus amortised
+        # aging: halving DEPTH x width counters once per window. A doorkeeper
+        # front swaps the sketch touch for BLOOM_DEPTH bit probes on the
+        # (gated) first touch — modelled as bloom probes on every request plus
+        # the amortised per-window bloom clear.
+        ops += float(sketch.DEPTH) * requests
+        ops += requests / spec.effective_window * float(
+            sketch.DEPTH * spec.effective_sketch_width
+        )
+        if spec.doorkeeper:
+            ops += float(sketch.BLOOM_DEPTH) * requests
+            ops += requests / spec.effective_window * float(spec.doorkeeper)
+    if spec.kind == "plfua_dyn":
+        ops += float(sketch.DEPTH) * requests
+        # amortised global-time refresh, at the model's DEPTH-touches-per-
+        # sketch-access convention: estimate-all reads DEPTH counters per
+        # object, plus the halving over the whole DEPTH x width table
+        g = requests if global_requests is None else global_requests
+        ops += g / spec.effective_refresh * float(
+            sketch.DEPTH * (spec.n_objects + spec.effective_sketch_width)
+        )
+    return float(ops)
+
+
+@dataclasses.dataclass
+class TierReport:
+    tier: str  # "edge[i]" | "edge" (aggregate) | "parent" | "mid1[j]" | ...
+    policy: str
+    capacity: int
+    requests: int
+    hits: int
+    evictions: int
+    mgmt_ops: float
+    mgmt_cpu_s: float
+    mgmt_energy_j: float
+
+    @property
+    def chr(self) -> float:
+        return self.hits / self.requests if self.requests else 0.0
+
+    def row(self) -> dict:
+        return {
+            "tier": self.tier,
+            "policy": self.policy,
+            "capacity": self.capacity,
+            "requests": self.requests,
+            "hits": self.hits,
+            "chr": self.chr,
+            "evictions": self.evictions,
+            "mgmt_ops": self.mgmt_ops,
+            "mgmt_cpu_s": self.mgmt_cpu_s,
+            "mgmt_energy_j": self.mgmt_energy_j,
+        }
+
+
+def tier_report(
+    name: str,
+    spec: PolicySpec,
+    c: dict[str, Any],
+    cost_model: str,
+    per_op_s: float,
+    global_requests: float | None = None,
+) -> TierReport:
+    """One node's counters -> a priced TierReport."""
+    ops = mgmt_ops(
+        spec,
+        float(c["requests"]),
+        float(c["admitted_requests"]),
+        float(c["evictions"]),
+        cost_model,
+        global_requests=global_requests,
+    )
+    cpu_s = ops * per_op_s
+    return TierReport(
+        tier=name,
+        policy=spec.kind,
+        capacity=spec.capacity,
+        requests=int(c["requests"]),
+        hits=int(c["hits"]),
+        evictions=int(c["evictions"]),
+        mgmt_ops=ops,
+        mgmt_cpu_s=cpu_s,
+        mgmt_energy_j=energy.mgmt_energy_j(cpu_s),
+    )
+
+
+def aggregate_tiers(name: str, policy: str, capacity: int, nodes: list[TierReport]) -> TierReport:
+    """Sum a list of node TierReports into one aggregate row."""
+    return TierReport(
+        tier=name,
+        policy=policy,
+        capacity=capacity,
+        requests=sum(t.requests for t in nodes),
+        hits=sum(t.hits for t in nodes),
+        evictions=sum(t.evictions for t in nodes),
+        mgmt_ops=sum(t.mgmt_ops for t in nodes),
+        mgmt_cpu_s=sum(t.mgmt_cpu_s for t in nodes),
+        mgmt_energy_j=sum(t.mgmt_energy_j for t in nodes),
+    )
+
+
+@dataclasses.dataclass
+class FleetReport:
+    """Tree-level view of one simulated trace (or the sum over a batch)."""
+
+    per_node: list[list[TierReport]]  # [level][node]
+    per_level: list[TierReport]  # aggregate per level
+    n_requests: int
+    origin_requests: int  # missed every tier -> fetched from origin
+
+    @property
+    def level_chr(self) -> list[float]:
+        return [t.chr for t in self.per_level]
+
+    @property
+    def edge_chr(self) -> float:
+        return self.per_level[0].chr
+
+    @property
+    def total_chr(self) -> float:
+        """Served from *some* cache tier."""
+        if not self.n_requests:
+            return 0.0
+        return sum(t.hits for t in self.per_level) / self.n_requests
+
+    @property
+    def mgmt_ops(self) -> float:
+        return sum(t.mgmt_ops for t in self.per_level)
+
+    @property
+    def mgmt_cpu_s(self) -> float:
+        return sum(t.mgmt_cpu_s for t in self.per_level)
+
+    @property
+    def mgmt_energy_j(self) -> float:
+        return sum(t.mgmt_energy_j for t in self.per_level)
+
+    def rows(self) -> list[dict]:
+        out = []
+        for lvl, agg in zip(self.per_node, self.per_level):
+            out.extend(t.row() for t in lvl)
+            out.append(agg.row())
+        return out
+
+
+def fleet_report(
+    topo: Topology,
+    result: dict[str, Any],
+    *,
+    cost_model: str = "heap",
+    per_op_s: float = 1e-7,
+) -> FleetReport:
+    """Roll up one ``simulate_fleet`` result (host-side numpy).
+
+    For batched results (leading sample axis from ``simulate_fleet_batch``)
+    counters are summed over samples — i.e. the report covers the whole batch.
+    """
+    names = topo.names
+    # total trace steps across the batch: every request hits exactly one edge
+    edge_req = np.asarray(result["tiers"][0]["requests"])
+    total_steps = float(edge_req.sum())
+    per_node: list[list[TierReport]] = []
+    per_level: list[TierReport] = []
+    for l, specs in enumerate(topo.levels):
+        c = {k: np.asarray(v) for k, v in result["tiers"][l].items()}
+        # collapse an optional sample axis, keeping the node axis (always last)
+        c = {k: v.reshape(-1, v.shape[-1]).sum(0) for k, v in c.items()}
+        nodes = [
+            tier_report(
+                f"{names[l]}[{i}]",
+                specs[i],
+                {k: c[k][i] for k in c},
+                cost_model,
+                per_op_s,
+                global_requests=total_steps,
+            )
+            for i in range(len(specs))
+        ]
+        per_node.append(nodes)
+        per_level.append(
+            aggregate_tiers(
+                names[l], specs[0].kind, sum(s.capacity for s in specs), nodes
+            )
+        )
+    n_requests = per_level[0].requests
+    origin = n_requests - sum(t.hits for t in per_level)
+    return FleetReport(
+        per_node=per_node,
+        per_level=per_level,
+        n_requests=n_requests,
+        origin_requests=origin,
+    )

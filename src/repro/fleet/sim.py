@@ -1,0 +1,190 @@
+"""Jitted N-tier fleet simulator: one device launch per topology.
+
+Every level runs the branch-free ``jax_cache.step`` as a single vmapped,
+masked scan over its nodes: node ``i`` at level ``l`` is *active* at trace
+position ``t`` iff the request routed to it (the edge assignment pushed up
+the parent tree) **and** no level below served it — i.e. each tier consumes
+exactly the interleaved miss stream of its children, in true request order.
+State updates freeze under a ``where`` when inactive, so the whole topology
+is fixed-shape, jittable, and vmaps over trace samples.
+
+Decision parity: :mod:`repro.fleet.reference` runs the same topology with the
+paper's pure-Python policy objects; tests assert identical per-level hit
+sequences, final cache contents, and eviction counts (tests/test_fleet.py).
+``repro.cdn.simulate_hierarchy`` is now a thin depth-2 wrapper over this
+module.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import jax_cache
+from repro.core.jax_cache import PolicySpec
+from repro.fleet.topology import Topology
+
+__all__ = [
+    "masked_scan",
+    "tier_counters",
+    "simulate_fleet",
+    "simulate_fleet_batch",
+]
+
+
+def masked_scan(spec: PolicySpec, state, trace, active, cap=None):
+    """Scan ``step`` over the trace, freezing state where ``active`` is False.
+
+    plfua_dyn routes through the chunked scan so its global-time hot-set
+    refresh fires at trace-position boundaries for every instance, active or
+    not (the reference oracle drives ``refresh_now`` on the same timer)."""
+    if spec.kind == "plfua_dyn":
+        return jax_cache._chunked_scan(spec, state, trace, active, cap)
+
+    def f(s, inp):
+        x, a = inp
+        ns, hit = jax_cache.step(spec, s, x, cap)
+        ns = jax.tree_util.tree_map(lambda o, n: jnp.where(a, n, o), s, ns)
+        return ns, hit & a
+
+    return jax.lax.scan(f, state, (trace, active))
+
+
+def tier_counters(spec: PolicySpec, hits, active, trace, state):
+    """Derived per-node accounting, all from the hit/active series + final state.
+
+    Inserts are implied by the policy semantics (every admitted miss inserts),
+    so evictions = inserts - final occupancy. Sketch kinds carry the insert
+    count in state (admission there is data-dependent, and plfua_dyn's hot
+    mask changes over time, so neither can be derived from the final state).
+    """
+    miss = active & ~hits
+    count = state["count"]
+    if spec.kind == "plfua":
+        admitted = jnp.take(state["hot"], trace, axis=-1)  # hot mask gathered at x_t
+        inserts = (miss & admitted).sum(-1)
+        admitted_requests = (active & admitted).sum(-1)
+    elif spec.kind in jax_cache.SKETCH_POLICY_KINDS:
+        inserts = state["inserts"]
+        # every hit touches policy metadata; every insert is an admitted miss
+        admitted_requests = hits.sum(-1) + inserts
+    else:
+        inserts = miss.sum(-1)
+        admitted_requests = active.sum(-1)
+    return {
+        "requests": active.sum(-1),
+        "hits": hits.sum(-1),
+        "admitted_requests": admitted_requests,
+        "inserts": inserts,
+        "evictions": inserts - count,
+        "count": count,
+    }
+
+
+def level_assignments(topo: Topology, assignment: jax.Array) -> list[jax.Array]:
+    """Edge assignment pushed up the tree: one (T,) node-index array per level
+    (the parent maps are static tuples, folded into the jit as constants)."""
+    outs = [assignment]
+    for pmap in topo.parents:
+        outs.append(jnp.asarray(np.asarray(pmap, np.int32))[outs[-1]])
+    return outs
+
+
+def stack_level_state(specs: tuple[PolicySpec, ...]):
+    """Stacked zero state for one level's node fleet."""
+    return jax.tree_util.tree_map(
+        lambda *xs: jnp.stack(xs), *[jax_cache.init_state(s) for s in specs]
+    )
+
+
+def run_level(specs: tuple[PolicySpec, ...], trace, active):
+    """One level: vmap the masked scan over its nodes.
+
+    ``active``: (K, T) bool — request t routed here and unserved below.
+    Returns (stacked final states, (K, T) hit series)."""
+    s0 = specs[0]
+    states = stack_level_state(specs)
+    caps = jnp.array([s.capacity for s in specs], jnp.int32)
+    return jax.vmap(
+        lambda st, act, cap: masked_scan(s0, st, trace, act, cap)
+    )(states, active, caps)
+
+
+def upper_levels(topo: Topology, trace, assigns, demand):
+    """Run levels 1..L-1 given the edge tier's surviving ``demand`` stream.
+
+    Shared by the single-device path and the shard_map path (which computes
+    level 0 under a device mesh and the global miss stream via a collective).
+    Returns (per-level hit series list, counters list, states list, demand).
+    """
+    level_hits, counters, states_out = [], [], []
+    for l in range(1, topo.n_levels):
+        specs = topo.levels[l]
+        K = len(specs)
+        active = (
+            assigns[l][None, :] == jnp.arange(K, dtype=jnp.int32)[:, None]
+        ) & demand[None, :]
+        states, hits = run_level(specs, trace, active)
+        hit_l = hits.any(axis=0)
+        level_hits.append(hits)
+        counters.append(tier_counters(specs[0], hits, active, trace, states))
+        states_out.append(states)
+        demand = demand & ~hit_l
+    return level_hits, counters, states_out, demand
+
+
+def _simulate_fleet_impl(topo: Topology, trace, assignment):
+    trace = trace.astype(jnp.int32)
+    assignment = assignment.astype(jnp.int32)
+    assigns = level_assignments(topo, assignment)
+
+    specs0 = topo.levels[0]
+    E = len(specs0)
+    active0 = assigns[0][None, :] == jnp.arange(E, dtype=jnp.int32)[:, None]
+    edge_states, edge_hits = run_level(specs0, trace, active0)
+    demand = ~edge_hits.any(axis=0)
+
+    hits_up, counters_up, states_up, demand = upper_levels(
+        topo, trace, assigns, demand
+    )
+    all_hits = [edge_hits, *hits_up]
+    return {
+        # (T,) bool per level: request served at this level
+        "hit": tuple(h.any(axis=0) for h in all_hits),
+        # (K_l, T) bool per level: which node served it
+        "node_hit": tuple(all_hits),
+        # per-level counter dicts, arrays of shape (K_l,)
+        "tiers": (
+            tier_counters(specs0[0], edge_hits, active0, trace, edge_states),
+            *counters_up,
+        ),
+        # per-level stacked final policy states
+        "states": (edge_states, *states_up),
+        # (T,) bool: missed every tier -> fetched from origin
+        "origin_miss": demand,
+    }
+
+
+@functools.partial(jax.jit, static_argnums=0)
+def simulate_fleet(topo: Topology, trace: jax.Array, assignment: jax.Array):
+    """Run one trace through an N-tier topology. See module docstring.
+
+    Returns a dict of arrays:
+      ``hit``         tuple per level, (T,) bool — served at this level
+      ``node_hit``    tuple per level, (K_l, T) bool — per-node hit series
+      ``tiers``       tuple per level of counter dicts (requests/hits/
+                      admitted_requests/inserts/evictions/count), shape (K_l,)
+      ``states``      tuple per level of stacked final policy states
+      ``origin_miss`` (T,) bool — missed every tier
+    """
+    return _simulate_fleet_impl(topo, trace, assignment)
+
+
+@functools.partial(jax.jit, static_argnums=0)
+def simulate_fleet_batch(topo: Topology, traces: jax.Array, assignments: jax.Array):
+    """vmap the fleet over (S, T) trace samples in one device launch."""
+    return jax.vmap(lambda tr, a: _simulate_fleet_impl(topo, tr, a))(
+        traces, assignments
+    )

@@ -49,10 +49,15 @@ class ContentCache:
         hot: list[int] | None = None,
         window: int | None = None,
         size_of: Callable[[Any], int] = lambda p: 1,
+        policy_obj: pol_mod.CachePolicy | None = None,
     ):
-        self.policy = pol_mod.make_policy(
-            policy, capacity, n_objects=n_objects, hot=hot, window=window
-        )
+        # a prebuilt brain (e.g. fleet.build_policy(PolicySpec) with sketch /
+        # doorkeeper parameters the name+kwargs surface doesn't carry) wins
+        if policy_obj is None:
+            policy_obj = pol_mod.make_policy(
+                policy, capacity, n_objects=n_objects, hot=hot, window=window
+            )
+        self.policy = policy_obj
         self._payloads: dict[int, Any] = {}
         self._size_of = size_of
         self.stats = CacheStats()

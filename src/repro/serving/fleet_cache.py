@@ -1,19 +1,24 @@
 """Multi-node content-cache front for the serving engine.
 
-``FleetContentCache`` puts E edge ``ContentCache`` nodes (each with its own
-policy brain) in front of one shared parent node and routes every lookup with
-the same deterministic router the CDN simulator uses (:mod:`repro.cdn.router`).
+``FleetContentCache`` routes every lookup onto a cache-tier tree: E edge
+``ContentCache`` nodes (each with its own policy brain) in front of shared
+upper tiers, with the same deterministic router the fleet simulator uses
+(:mod:`repro.cdn.router`). Two construction surfaces:
+
+  * the legacy two-tier signature (``n_edges, edge_capacity,
+    parent_capacity, policy=...``) — unchanged behaviour;
+  * :meth:`from_topology` — any ``repro.fleet.Topology`` (arbitrary depth /
+    fan-in); each topology node becomes a ContentCache whose brain is built
+    by ``fleet.build_policy`` from that node's PolicySpec.
+
 The lookup/offer surface is identical to a single ``ContentCache``, so
 ``ServeEngine`` takes it unchanged:
 
-  * ``lookup`` — route to an edge; edge hit serves directly. On an edge miss
-    the parent is consulted; a parent hit fills the edge back (standard CDN
+  * ``lookup`` — route to an edge, then climb the node's ancestor chain; a
+    hit at any tier fills every tier below it on the path (standard CDN
     fill-on-read) and serves.
-  * ``offer``  — both tiers are offered the computed payload (each tier's own
-    admission policy decides).
-
-Per-node policies may differ (e.g. WLFU edges over a PLFU parent): the edges
-list takes one policy name or a list of E names.
+  * ``offer``  — the computed payload is offered to every tier on the miss
+    path (each tier's own admission policy decides).
 """
 from __future__ import annotations
 
@@ -44,23 +49,80 @@ class FleetContentCache:
     ):
         if n_edges < 1:
             raise ValueError(f"n_edges must be >= 1, got {n_edges}")
-        if router not in router_mod.ROUTER_MODES:
-            raise ValueError(
-                f"unknown router {router!r}; expected one of {router_mod.ROUTER_MODES}"
-            )
         edge_policies = [policy] * n_edges if isinstance(policy, str) else list(policy)
         if len(edge_policies) != n_edges:
             raise ValueError("need one policy name per edge")
         kw = dict(n_objects=n_objects, window=window, size_of=size_of)
-        self.edges = [
-            ContentCache(edge_capacity, p, **kw) for p in edge_policies
-        ]
-        self.parent = ContentCache(parent_capacity, parent_policy or edge_policies[0], **kw)
+        self._init_tree(
+            levels=[
+                [ContentCache(edge_capacity, p, **kw) for p in edge_policies],
+                [ContentCache(parent_capacity, parent_policy or edge_policies[0], **kw)],
+            ],
+            parents=[[0] * n_edges],
+            router=router,
+            session_len=session_len,
+        )
+
+    @classmethod
+    def from_topology(
+        cls,
+        topo,
+        *,
+        size_of: Callable[[Any], int] = lambda p: 1,
+    ) -> "FleetContentCache":
+        """Route the serving front onto a ``repro.fleet.Topology``: one
+        ContentCache per topology node, brains built from each PolicySpec."""
+        from repro.fleet.reference import build_policy
+
+        self = cls.__new__(cls)
+        self._init_tree(
+            levels=[
+                [
+                    ContentCache(
+                        s.capacity, s.kind, size_of=size_of,
+                        policy_obj=build_policy(s),
+                    )
+                    for s in lvl
+                ]
+                for lvl in topo.levels
+            ],
+            parents=[list(p) for p in topo.parents],
+            router=topo.router,
+            session_len=topo.session_len,
+        )
+        return self
+
+    def _init_tree(self, levels, parents, router, session_len):
+        from repro.fleet.topology import ancestry_path
+
+        if router not in router_mod.ROUTER_MODES:
+            raise ValueError(
+                f"unknown router {router!r}; expected one of {router_mod.ROUTER_MODES}"
+            )
+        self.levels: list[list[ContentCache]] = levels
+        self.parents: list[list[int]] = parents
+        # miss paths are pure functions of the (static) tree — precomputed so
+        # the per-lookup hot path is one list index
+        self._paths = [ancestry_path(parents, e) for e in range(len(levels[0]))]
         self.router = router
         self.session_len = session_len
         self._clock = 0  # request counter driving sticky / round-robin routing
-        self._pending: dict[int, int] = {}  # obj_id -> edge of its open miss
+        self._pending: dict[int, tuple[int, ...]] = {}  # obj -> miss path nodes
         self.parent_fills = 0
+
+    # --------------------------------------------------------- legacy views
+    @property
+    def edges(self) -> list[ContentCache]:
+        return self.levels[0]
+
+    @property
+    def parent(self) -> ContentCache:
+        """The root node (for depth-2 trees: the one parent)."""
+        return self.levels[-1][0]
+
+    @property
+    def n_levels(self) -> int:
+        return len(self.levels)
 
     # ------------------------------------------------------------- routing
     def edge_for(self, obj_id: int) -> int:
@@ -78,65 +140,78 @@ class FleetContentCache:
             % np.uint64(len(self.edges))
         )
 
+    def path_for(self, edge: int) -> tuple[int, ...]:
+        """Node index at every level on the miss path of ``edge``."""
+        return self._paths[edge]
+
     # ------------------------------------------------------- cache surface
     def lookup(self, obj_id: int) -> Any | None:
-        e = self.edge_for(obj_id)
-        payload = self.edges[e].lookup(obj_id)
-        if payload is not None:
-            self._pending.pop(obj_id, None)
-            return payload
-        payload = self.parent.lookup(obj_id)
-        if payload is not None:
-            # fill the edge on the way back down (its admission already ran)
-            self.edges[e].offer(obj_id, payload)
-            self.parent_fills += 1
-            self._pending.pop(obj_id, None)
-            return payload
-        self._pending[obj_id] = e  # remember which edge owns the open miss
+        path = self.path_for(self.edge_for(obj_id))
+        for l, node in enumerate(path):
+            payload = self.levels[l][node].lookup(obj_id)
+            if payload is not None:
+                # fill every tier below on the way back down (their admission
+                # already ran during the climb)
+                for ll in range(l):
+                    self.levels[ll][path[ll]].offer(obj_id, payload)
+                if l > 0:
+                    self.parent_fills += 1
+                self._pending.pop(obj_id, None)
+                return payload
+        self._pending[obj_id] = path  # remember the path of the open miss
         return None
 
     def offer(self, obj_id: int, payload: Any) -> bool:
-        """Offer a freshly-computed payload to both tiers (post-double-miss).
+        """Offer a freshly-computed payload to every tier on the miss path.
 
-        The payload lands on the edge whose lookup missed (tracked per object,
-        so interleaved lookups of other objects don't misplace it)."""
-        e = self._pending.pop(obj_id, None)
-        if e is None:
+        The payload lands on the nodes whose lookups missed (tracked per
+        object, so interleaved lookups of other objects don't misplace it)."""
+        path = self._pending.pop(obj_id, None)
+        if path is None:
             # no open miss recorded: nothing admitted this object — same
             # contract as ContentCache.offer without a prior lookup
             return False
-        stored_parent = self.parent.offer(obj_id, payload)
-        stored_edge = self.edges[e].offer(obj_id, payload)
-        return stored_edge or stored_parent
+        stored = False
+        for l in range(len(path) - 1, -1, -1):  # top-down, as the fill flows
+            stored = self.levels[l][path[l]].offer(obj_id, payload) or stored
+        return stored
 
     # ------------------------------------------------------------- metrics
+    def _nodes(self) -> list[ContentCache]:
+        return [c for lvl in self.levels for c in lvl]
+
     @property
     def stats(self) -> CacheStats:
         """Fleet-level aggregate. ``hits`` counts requests served from *any*
-        tier; ``misses`` only requests that reached origin (both tiers cold),
+        tier; ``misses`` only requests that reached origin (all tiers cold),
         so ``stats.chr`` is the fleet CHR. Management time sums every node."""
         agg = CacheStats()
-        tiers = [*self.edges, self.parent]
-        for c in tiers:
+        for c in self._nodes():
             agg.inserts += c.stats.inserts
             agg.evictions += c.stats.evictions
             agg.mgmt_time_s += c.stats.mgmt_time_s
             agg.bytes_stored += c.stats.bytes_stored
-        edge_hits = sum(c.stats.hits for c in self.edges)
-        # parent stats count edge-fill lookups too; hits there served a request
-        agg.hits = edge_hits + self.parent.stats.hits
-        total = sum(c.stats.hits + c.stats.misses for c in self.edges)
+        # every tier's hits served a request (upper-tier lookups only happen
+        # on a lower-tier miss; fills use offer, not lookup)
+        agg.hits = sum(c.stats.hits for c in self._nodes())
+        total = sum(c.stats.hits + c.stats.misses for c in self.levels[0])
         agg.misses = total - agg.hits
         return agg
 
     def tier_stats(self) -> dict[str, CacheStats]:
-        out = {f"edge[{i}]": c.stats for i, c in enumerate(self.edges)}
-        out["parent"] = self.parent.stats
-        return out
+        if self.n_levels == 2:  # legacy two-tier naming
+            out = {f"edge[{i}]": c.stats for i, c in enumerate(self.edges)}
+            out["parent"] = self.parent.stats
+            return out
+        return {
+            f"L{l}[{i}]": c.stats
+            for l, lvl in enumerate(self.levels)
+            for i, c in enumerate(lvl)
+        }
 
     @property
     def metadata_entries(self) -> int:
-        return sum(c.metadata_entries for c in self.edges) + self.parent.metadata_entries
+        return sum(c.metadata_entries for c in self._nodes())
 
     def __len__(self) -> int:
-        return sum(len(c) for c in self.edges) + len(self.parent)
+        return sum(len(c) for c in self._nodes())

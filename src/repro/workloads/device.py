@@ -1,0 +1,224 @@
+"""On-device (jnp) ports of the workload scenario generators.
+
+The host generators in :mod:`repro.workloads.generators` build traces in
+numpy and ship them to the device — fine for one cache, wasteful for a fleet
+sharded over many devices. This module re-expresses the scenario math with
+``jax.random`` so each shard synthesizes its own trace chunk *inside* the
+jitted simulation (see ``repro.fleet.shard.simulate_fleet_device``): no host
+array ever crosses the wire, and the generation itself scales with the mesh.
+
+Contract: same shapes/ranges as the host generators — ``(n_samples,
+trace_len)`` int32 ids in ``[0, n_objects)``, ids = initial-popularity ranks,
+sample ``i`` fully determined by ``fold_in(PRNGKey(seed), i)`` so a sharded
+fleet generates identical traces regardless of how samples land on devices.
+The *distributions* match the host generators; the streams are not
+bit-identical to numpy's (different RNG) — decision-parity tests therefore
+always pull the generated trace off the device and replay it through the
+pure-Python oracle.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import zipf
+
+__all__ = [
+    "DEVICE_SCENARIO_NAMES",
+    "DeviceTraceSpec",
+    "gen_sample",
+    "make_traces_device",
+    "sample_key",
+]
+
+DEVICE_SCENARIO_NAMES = (
+    "stationary",
+    "churn",
+    "flash_crowd",
+    "diurnal",
+    "multi_tenant",
+)
+
+#: recognised per-scenario overrides (mirrors the host generators' keywords)
+_SCENARIO_OPTS = {
+    "stationary": (),
+    "churn": ("n_phases", "churn_frac"),
+    "flash_crowd": ("n_spikes", "spike_len_frac", "spike_intensity"),
+    "diurnal": ("n_cycles", "alpha_swing", "n_chunks"),
+    "multi_tenant": ("n_tenants", "weights"),
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class DeviceTraceSpec:
+    """A fully-resolved on-device scenario (hashable; a jit static)."""
+
+    scenario: str
+    n_objects: int
+    n_samples: int = zipf.PAPER_NUM_SAMPLES
+    trace_len: int = zipf.PAPER_TRACE_LEN
+    seed: int = 0
+    alpha: float = zipf.PAPER_ALPHA
+    overrides: tuple[tuple[str, Any], ...] = ()
+
+    def __post_init__(self):
+        if self.scenario not in DEVICE_SCENARIO_NAMES:
+            raise ValueError(
+                f"unknown device scenario {self.scenario!r}; expected one of "
+                f"{DEVICE_SCENARIO_NAMES}"
+            )
+        allowed = _SCENARIO_OPTS[self.scenario]
+        for k, _ in self.overrides:
+            if k not in allowed:
+                raise ValueError(
+                    f"{self.scenario}: unknown override {k!r}; allowed: {allowed}"
+                )
+
+    def opt(self, name: str, default):
+        return dict(self.overrides).get(name, default)
+
+
+def sample_key(dspec: DeviceTraceSpec, sample) -> jax.Array:
+    """Per-sample PRNG key — a pure function of (seed, global sample index),
+    so shards agree on sample identity wherever the sample is placed."""
+    return jax.random.fold_in(jax.random.PRNGKey(dspec.seed), sample)
+
+
+def _cdf(n_objects: int, alpha: float) -> jnp.ndarray:
+    """Zipf CDF as a jit constant (host float64 cumsum, then device float32:
+    the accumulation happens at full precision, only the boundaries round)."""
+    return jnp.asarray(np.cumsum(zipf.zipf_probs(n_objects, alpha)), jnp.float32)
+
+
+def _ranks(cdf: jnp.ndarray, u: jax.Array, n_objects: int) -> jax.Array:
+    idx = jnp.searchsorted(cdf, u, side="right")
+    return jnp.minimum(idx, n_objects - 1).astype(jnp.int32)
+
+
+# ------------------------------------------------------------ per-scenario
+def _stationary(dspec: DeviceTraceSpec, key: jax.Array) -> jax.Array:
+    u = jax.random.uniform(key, (dspec.trace_len,))
+    return _ranks(_cdf(dspec.n_objects, dspec.alpha), u, dspec.n_objects)
+
+
+def _churn(dspec: DeviceTraceSpec, key: jax.Array) -> jax.Array:
+    n, T = dspec.n_objects, dspec.trace_len
+    n_phases = int(dspec.opt("n_phases", 5))
+    churn_frac = float(dspec.opt("churn_frac", 0.3))
+    if not 0.0 <= churn_frac <= 1.0:
+        raise ValueError(f"churn_frac must be in [0, 1], got {churn_frac}")
+    phase_len = max(1, -(-T // max(1, n_phases)))
+    phases = -(-T // phase_len)  # phases that actually occur in the trace
+    k = int(round(churn_frac * n))
+    k_ranks, key = jax.random.split(key)
+    ranks = _ranks(_cdf(n, dspec.alpha), jax.random.uniform(k_ranks, (T,)), n)
+    perm = jnp.arange(n, dtype=jnp.int32)
+    perms = [perm]
+    for _ in range(1, phases):
+        if k >= 2:
+            k_mv, k_sh, key = jax.random.split(key, 3)
+            moved = jax.random.permutation(k_mv, n)[:k]
+            shuffled = moved[jax.random.permutation(k_sh, k)]
+            perm = perm.at[moved].set(perm[shuffled])
+        perms.append(perm)
+    table = jnp.stack(perms)  # (phases, n): rank -> id per phase
+    phase_of_t = jnp.minimum(jnp.arange(T) // phase_len, phases - 1)
+    return table[phase_of_t, ranks]
+
+
+def _flash_crowd(dspec: DeviceTraceSpec, key: jax.Array) -> jax.Array:
+    n, T = dspec.n_objects, dspec.trace_len
+    n_spikes = int(dspec.opt("n_spikes", 3))
+    spike_len = max(1, int(round(float(dspec.opt("spike_len_frac", 0.05)) * T)))
+    intensity = float(dspec.opt("spike_intensity", 0.6))
+    cold_lo = max(1, (3 * n) // 4)
+    k_base, key = jax.random.split(key)
+    out = _ranks(_cdf(n, dspec.alpha), jax.random.uniform(k_base, (T,)), n)
+    t = jnp.arange(T)
+    for _ in range(n_spikes):
+        k_start, k_hot, k_mask, key = jax.random.split(key, 4)
+        # spikes draw starts independently (the host generator samples without
+        # replacement; for n_spikes << T the overlap probability is negligible)
+        start = jax.random.randint(k_start, (), 0, max(1, T - spike_len))
+        hot_id = jax.random.randint(k_hot, (), cold_lo, n)
+        take = jax.random.uniform(k_mask, (T,)) < intensity
+        in_window = (t >= start) & (t < start + spike_len)
+        out = jnp.where(in_window & take, hot_id, out)
+    return out
+
+
+def _diurnal(dspec: DeviceTraceSpec, key: jax.Array) -> jax.Array:
+    n, T = dspec.n_objects, dspec.trace_len
+    n_cycles = int(dspec.opt("n_cycles", 2))
+    swing = float(dspec.opt("alpha_swing", 0.5))
+    n_chunks = int(dspec.opt("n_chunks", 48))
+    bounds = np.linspace(0, T, n_chunks + 1).astype(int)
+    mid = 0.5 * (bounds[:-1] + bounds[1:]) / T
+    alphas = np.maximum(
+        dspec.alpha + swing * np.sin(2 * np.pi * n_cycles * mid), 0.05
+    )
+    keys = jax.random.split(key, n_chunks)
+    pieces = []
+    for ck, a, lo, hi in zip(keys, alphas, bounds[:-1], bounds[1:]):
+        if hi > lo:
+            u = jax.random.uniform(ck, (int(hi - lo),))
+            pieces.append(_ranks(_cdf(n, float(a)), u, n))
+    return jnp.concatenate(pieces)
+
+
+def _multi_tenant(dspec: DeviceTraceSpec, key: jax.Array) -> jax.Array:
+    n, T = dspec.n_objects, dspec.trace_len
+    n_tenants = int(dspec.opt("n_tenants", 4))
+    weights = dspec.opt("weights", None)
+    if n_tenants < 1 or n_tenants > n:
+        raise ValueError(f"need 1 <= n_tenants <= n_objects, got {n_tenants}")
+    if weights is None:
+        w = zipf.zipf_probs(n_tenants, 1.0)
+    else:
+        if len(weights) != n_tenants:
+            raise ValueError("len(weights) must equal n_tenants")
+        w = np.asarray(weights, np.float64)
+        w = w / w.sum()
+    block = n // n_tenants
+    sizes = np.full(n_tenants, block, np.int64)
+    sizes[: n - block * n_tenants] += 1
+    offsets = np.concatenate([[0], np.cumsum(sizes)[:-1]])
+    k_tenant, k_u = jax.random.split(key)
+    tenant = jax.random.choice(
+        k_tenant, n_tenants, (T,), p=jnp.asarray(w, jnp.float32)
+    )
+    u = jax.random.uniform(k_u, (T,))
+    out = jnp.zeros((T,), jnp.int32)
+    for ti in range(n_tenants):
+        idx = _ranks(_cdf(int(sizes[ti]), dspec.alpha), u, int(sizes[ti]))
+        out = jnp.where(tenant == ti, jnp.int32(offsets[ti]) + idx, out)
+    return out
+
+
+_GENERATORS = {
+    "stationary": _stationary,
+    "churn": _churn,
+    "flash_crowd": _flash_crowd,
+    "diurnal": _diurnal,
+    "multi_tenant": _multi_tenant,
+}
+
+
+def gen_sample(dspec: DeviceTraceSpec, key: jax.Array) -> jax.Array:
+    """One (trace_len,) int32 sample from its PRNG key. Traceable: the fleet
+    shard path vmaps this inside shard_map."""
+    return _GENERATORS[dspec.scenario](dspec, key).astype(jnp.int32)
+
+
+@functools.partial(jax.jit, static_argnums=0)
+def make_traces_device(dspec: DeviceTraceSpec) -> jax.Array:
+    """All samples in one jitted launch: (n_samples, trace_len) int32."""
+    keys = jax.vmap(lambda i: sample_key(dspec, i))(
+        jnp.arange(dspec.n_samples, dtype=jnp.int32)
+    )
+    return jax.vmap(lambda k: gen_sample(dspec, k))(keys)

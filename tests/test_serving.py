@@ -209,3 +209,55 @@ def test_engine_report_exposes_mgmt_time(tiny_engine):
     # without a content cache the report stays engine-only
     bare = ServeEngine(model, params, cache_len=16)
     assert "mgmt_time_s" not in bare.report()
+
+
+# ----------------------------------------------------- fleet cache topologies
+def test_fleet_cache_from_topology_three_tiers():
+    """The serving front routed onto a 3-tier fleet.Topology: hits climb the
+    ancestor chain, fills flow back down, per-node capacity holds."""
+    from repro import fleet
+    from repro.serving import FleetContentCache
+
+    topo = fleet.tree(
+        n_objects=50, widths=(4, 2, 1), kinds="plfu", capacities=(6, 12, 24)
+    )
+    fc = FleetContentCache.from_topology(topo)
+    assert fc.n_levels == 3
+    trace = zipf.sample_trace(50, 4000, seed=4)
+    origin = 0
+    for x in trace.tolist():
+        if fc.lookup(int(x)) is None:
+            origin += 1
+            fc.offer(int(x), ("payload", int(x)))
+    s = fc.stats
+    assert s.hits + s.misses == 4000
+    assert s.misses == origin
+    assert s.chr > 0.5
+    assert fc.parent_fills > 0  # upper tiers actually backstopped the edges
+    tiers = fc.tier_stats()
+    assert set(tiers) == {
+        "L0[0]", "L0[1]", "L0[2]", "L0[3]", "L1[0]", "L1[1]", "L2[0]"
+    }
+    assert s.hits == sum(t.hits for t in tiers.values())
+    for l, lvl in enumerate(fc.levels):
+        for i, node in enumerate(lvl):
+            assert len(node) <= topo.levels[l][i].capacity, f"L{l}[{i}]"
+
+
+def test_fleet_cache_topology_payload_consistency():
+    """A payload served from an upper tier is the one that was offered."""
+    from repro import fleet
+    from repro.serving import FleetContentCache
+
+    topo = fleet.tree(n_objects=30, widths=(2, 1), kinds="lru", capacities=(2, 20))
+    fc = FleetContentCache.from_topology(topo)
+    for x in range(25):  # fill the root far beyond edge capacity
+        if fc.lookup(x) is None:
+            fc.offer(x, f"p{x}")
+    # recently offered objects are still resident somewhere on their path
+    # (edge or root) and must come back as exactly the offered payload
+    assert fc.lookup(24) == "p24"
+    assert fc.lookup(23) == "p23"
+    # an object the 2-slot edges evicted long ago survives at the LRU root
+    assert fc.lookup(20) == "p20"
+    assert fc.parent_fills > 0

@@ -85,6 +85,81 @@ def test_defaults_conventions():
     assert sketch.default_refresh(25) == 1000
 
 
+# ------------------------------------------------------ doorkeeper bloom front
+def test_bloom_table_numpy_jnp_bit_identical():
+    for m in (7, 64, 512, 1000):
+        tn = sketch.bloom_table(np.arange(500), m)
+        tj = np.asarray(sketch.bloom_table(jnp.arange(500), m, xp=jnp))
+        np.testing.assert_array_equal(tn, tj)
+        assert tn.shape == (500, sketch.BLOOM_DEPTH)
+        assert tn.min() >= 0 and tn.max() < m
+
+
+def test_bloom_salts_decorrelate_from_sketch_rows():
+    bt = sketch.bloom_table(np.arange(2000), 256)
+    ct = sketch.bucket_table(np.arange(2000), 256)
+    assert (bt[:, 0] == ct[:, 0]).mean() < 0.05
+
+
+def test_bloom_filter_membership_and_clear():
+    b = sketch.BloomFilter(256)
+    assert not b.contains(7)
+    b.add(7)
+    assert b.contains(7)
+    # functional ops agree with the stateful wrapper
+    bits = jnp.zeros((256,), jnp.bool_)
+    idx = sketch.bloom_table(np.arange(40), 256)
+    bits = sketch.bloom_set(bits, idx[7])
+    np.testing.assert_array_equal(np.asarray(bits), b.bits)
+    assert bool(sketch.bloom_contains(bits, idx[7]))
+    b.clear()
+    assert not b.contains(7)
+    assert sketch.default_doorkeeper(60) == 512
+    assert sketch.default_doorkeeper(100) == 800
+
+
+def test_doorkeeper_gates_first_touch():
+    """First touch per window marks the bloom only; the sketch counts from
+    the second touch, and the estimate adds the bloom'd occurrence back."""
+    pol = policies.TinyLFUCache(4, window=1000, sketch_width=64, doorkeeper=256)
+    pol.request(5)
+    assert pol._sketch.estimate(5) == 0 and pol._bloom.contains(5)
+    assert pol._estimate(5) == 1  # sketch 0 + bloom'd occurrence
+    pol.request(5)
+    assert pol._sketch.estimate(5) == 1 and pol._estimate(5) == 2
+
+
+def test_doorkeeper_jax_matches_reference():
+    """Differential: tinylfu + doorkeeper, jitted vs pure-Python, including
+    the aging boundary that clears the bloom."""
+    n, cap, window = 96, 5, 37  # small window: several clears mid-trace
+    for scenario in ("stationary", "churn"):
+        trace = workloads.make_traces(scenario, n, 1, 1_500, seed=23)[0]
+        spec = jax_cache.PolicySpec(
+            kind="tinylfu", n_objects=n, capacity=cap,
+            window=window, sketch_width=48, doorkeeper=64,
+        )
+        hits, state = jax_cache.simulate(spec, trace)
+        pol = policies.TinyLFUCache(cap, window=window, sketch_width=48, doorkeeper=64)
+        hits_py = np.array([pol.request(int(x)) for x in trace])
+        ctx = f"doorkeeper x {scenario}"
+        np.testing.assert_array_equal(np.asarray(hits), hits_py, err_msg=ctx)
+        np.testing.assert_array_equal(
+            np.asarray(state["sketch"]), pol._sketch.rows, err_msg=ctx
+        )
+        np.testing.assert_array_equal(
+            np.asarray(state["bloom"]), pol._bloom.bits, err_msg=ctx
+        )
+        assert int(jax_cache.metadata_entries(spec, state)) == pol.metadata_entries
+
+
+def test_doorkeeper_spec_validation():
+    with pytest.raises(ValueError, match="tinylfu-only"):
+        jax_cache.PolicySpec(kind="lru", n_objects=64, capacity=4, doorkeeper=32)
+    with pytest.raises(ValueError, match=">= 0"):
+        jax_cache.PolicySpec(kind="tinylfu", n_objects=64, capacity=4, doorkeeper=-1)
+
+
 # ------------------------------------------------------- registry consistency
 def test_registry_backs_every_name_tuple():
     assert policies.POLICY_NAMES == registry.names(reference=True)

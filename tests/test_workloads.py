@@ -130,3 +130,86 @@ def test_registry_and_tracespec():
 def test_register_scenario_rejects_duplicates():
     with pytest.raises(ValueError, match="already registered"):
         workloads.register_scenario("stationary", generators.stationary)
+
+# ------------------------------------------------------ on-device generators
+class TestDeviceGenerators:
+    """jnp ports in workloads.device: same contract (shape/dtype/range,
+    determinism, Zipf head), generated entirely inside jit."""
+
+    def _make(self, scenario, seed=11, n=N, s=2, t=3_000):
+        from repro.workloads.device import DeviceTraceSpec, make_traces_device
+
+        return np.asarray(
+            make_traces_device(DeviceTraceSpec(scenario, n, n_samples=s, trace_len=t, seed=seed))
+        )
+
+    @pytest.mark.parametrize("scenario", workloads.SCENARIO_NAMES)
+    def test_contract(self, scenario):
+        tr = self._make(scenario)
+        assert tr.shape == (2, 3_000)
+        assert tr.dtype == np.int32
+        assert tr.min() >= 0 and tr.max() < N
+
+    @pytest.mark.parametrize("scenario", workloads.SCENARIO_NAMES)
+    def test_deterministic_and_seed_sensitive(self, scenario):
+        a = self._make(scenario, seed=5)
+        b = self._make(scenario, seed=5)
+        c = self._make(scenario, seed=6)
+        np.testing.assert_array_equal(a, b)
+        assert (a != c).any()
+        assert (a[0] != a[1]).any()  # samples independent
+
+    def test_zipf_head_dominates(self):
+        for scenario in workloads.SCENARIO_NAMES:
+            tr = self._make(scenario, seed=3, t=6_000)
+            head = N // 10
+            if scenario == "churn":
+                counts = np.bincount(tr.ravel(), minlength=N)
+                share = np.sort(counts)[::-1][:head].sum() / tr.size
+            else:
+                share = (tr < head).mean()
+            assert share > 2.5 * 0.1, (scenario, share)
+
+    def test_sample_key_is_placement_independent(self):
+        """Sample i is a pure function of (seed, i): generating samples in
+        any chunking (the sharded path) yields the same streams."""
+        from repro.workloads.device import DeviceTraceSpec, gen_sample, sample_key
+
+        dspec = DeviceTraceSpec("churn", N, n_samples=4, trace_len=1_000, seed=9)
+        full = self._make("churn", seed=9, s=4, t=1_000)
+        for i in (0, 3):
+            one = np.asarray(gen_sample(dspec, sample_key(dspec, i)))
+            np.testing.assert_array_equal(one, full[i])
+
+    def test_unknown_override_rejected(self):
+        from repro.workloads.device import DeviceTraceSpec
+
+        with pytest.raises(ValueError, match="unknown override"):
+            DeviceTraceSpec("stationary", N, overrides=(("n_phases", 3),))
+        with pytest.raises(ValueError, match="unknown device scenario"):
+            DeviceTraceSpec("nope", N)
+
+
+def test_device_router_contract():
+    """route_device: deterministic, in-range, mode semantics match the host
+    router's structure (constant sessions / exact round-robin balance)."""
+    import jax.numpy as jnp
+
+    from repro.cdn.router import route_device
+
+    trace = jnp.asarray(workloads.make_traces("stationary", N, 1, 2_000, seed=1)[0])
+    for mode in ("hash", "sticky", "round_robin"):
+        a = np.asarray(route_device(trace, 5, mode, session_len=100, seed=3))
+        b = np.asarray(route_device(trace, 5, mode, session_len=100, seed=3))
+        np.testing.assert_array_equal(a, b)
+        assert a.dtype == np.int32 and a.min() >= 0 and a.max() < 5
+    rr = np.asarray(route_device(trace, 4, "round_robin"))
+    counts = np.bincount(rr, minlength=4)
+    assert counts.max() - counts.min() <= 1
+    st = np.asarray(route_device(trace, 4, "sticky", session_len=100))
+    blocks = st.reshape(-1, 100)
+    assert (blocks == blocks[:, :1]).all()
+    hs = np.asarray(route_device(trace, 4, "hash"))
+    tr = np.asarray(trace)
+    for obj in np.unique(tr)[:20]:
+        assert len(np.unique(hs[tr == obj])) == 1  # content-addressed
