@@ -54,15 +54,31 @@ def jax_batched(full: bool = False):
     return rows
 
 
+def _kernel_kwargs(kind: str, cap: int) -> dict:
+    """The sweep's non-default knobs: a wlfu window sized like the cdn bench,
+    and small sketch params so aging/refresh actually fire mid-trace."""
+    from benchmarks.cdn_bench import policy_window
+
+    kw = {"window": policy_window(kind)}
+    if kind == "tinylfu":
+        kw["window"] = 10 * cap
+    if kind == "plfua_dyn":
+        kw["refresh"] = 10 * cap
+    return kw
+
+
 def pallas_interpret(full: bool = False):
     from repro.kernels.cache_sim.ops import cache_sim
 
     n, cap, tlen = 512, 64, 2_000  # interpret mode is python-speed: keep small
     traces = zipf.sample_traces(n, n_samples=2, trace_len=tlen, seed=2)
     rows = []
-    for kind in ("lfu", "plfu", "plfua"):
+    for kind in registry.names(pallas=True):
+        kw = _kernel_kwargs(kind, cap)
         t0 = time.perf_counter()
-        hits, _, _ = cache_sim(traces, kind=kind, n_objects=n, capacity=cap, interpret=True)
+        hits, _, _ = cache_sim(
+            traces, kind=kind, n_objects=n, capacity=cap, interpret=True, **kw
+        )
         hits.block_until_ready()
         dt = time.perf_counter() - t0
         rows.append(
@@ -75,8 +91,56 @@ def pallas_interpret(full: bool = False):
     return rows
 
 
+def kernel_vs_jax(full: bool = False):
+    """Kernel-vs-jax steps-per-sec, one row per sketch-admission kind (wlfu
+    rides along as the windowed non-sketch control). Both tiers run the same
+    traces; off-TPU the kernel executes in interpret mode, so the jax column
+    is the meaningful CPU throughput and the recorded ratio is the regression
+    trail for when a TPU runner compiles the kernel natively."""
+    from repro.kernels.cache_sim.ops import cache_sim
+
+    n, cap = (2_000, 180) if full else (512, 64)
+    tlen = 8_000 if full else 2_000
+    samples = 2
+    traces = zipf.sample_traces(n, n_samples=samples, trace_len=tlen, seed=3)
+    steps = tlen * samples
+    rows = []
+    for kind in registry.names(sketch=True) + ("wlfu",):
+        kw = _kernel_kwargs(kind, cap)
+        spec = jax_cache.PolicySpec(kind=kind, n_objects=n, capacity=cap, **kw)
+
+        hits_j = jax_cache.simulate_batch(spec, traces)  # compile
+        hits_j.block_until_ready()
+        t0 = time.perf_counter()
+        hits_j = jax_cache.simulate_batch(spec, traces)
+        hits_j.block_until_ready()
+        jax_sps = steps / (time.perf_counter() - t0)
+
+        args = dict(kind=kind, n_objects=n, capacity=cap, interpret=True, **kw)
+        hits_k, _, _ = cache_sim(traces, **args)  # compile
+        hits_k.block_until_ready()
+        t0 = time.perf_counter()
+        hits_k, _, _ = cache_sim(traces, **args)
+        hits_k.block_until_ready()
+        kern_sps = steps / (time.perf_counter() - t0)
+
+        assert int(np.asarray(hits_k).sum()) == int(
+            np.asarray(hits_j).sum()
+        ), f"kernel/jax hit divergence for {kind}"
+        rows.append(
+            (
+                f"kernel_vs_jax/{kind}",
+                1e6 / kern_sps,
+                f"kernel={kern_sps:,.0f} steps/s jax={jax_sps:,.0f} steps/s "
+                f"ratio={kern_sps / jax_sps:.3f} (interpret mode off-TPU)",
+            )
+        )
+    return rows
+
+
 ALL = {
     "cache_py": python_reference,
     "cache_jax": jax_batched,
     "cache_pallas": pallas_interpret,
+    "kernel_vs_jax": kernel_vs_jax,
 }

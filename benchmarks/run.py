@@ -25,8 +25,9 @@ def main() -> None:
         "--only",
         default=None,
         help="comma-separated group list (fig2..fig9, metadata, cache_py, "
-        "cache_jax, cache_pallas, cdn, cdn_router, cdn_topo, fleet_policies, "
-        "fleet_depth, fleet_scale, serving_energy, roofline)",
+        "cache_jax, cache_pallas, kernel_vs_jax, cdn, cdn_router, cdn_topo, "
+        "fleet_policies, fleet_depth, fleet_scale, serving_energy, roofline, "
+        "cache_roofline) — see docs/benchmarks.md",
     )
     ap.add_argument(
         "--record",

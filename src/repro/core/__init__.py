@@ -1,9 +1,17 @@
 """The paper's primary contribution: cache eviction/admission policies with
-CHR + total-CPU-time (energy) metrics, in three tiers:
+CHR + total-CPU-time (energy) metrics, in three tiers that implement every
+kind in :mod:`repro.core.registry` (sketch-admission ones included):
 
   * :mod:`repro.core.policies`  — paper-faithful Python reference (the timed baseline)
-  * :mod:`repro.core.jax_cache` — vectorised fixed-shape JAX simulator (TPU adaptation)
+  * :mod:`repro.core.jax_cache` — vectorised fixed-shape JAX simulator (TPU
+    adaptation; its step also powers the N-tier :mod:`repro.fleet` and the
+    two-tier :mod:`repro.cdn` hierarchies)
   * :mod:`repro.kernels.cache_sim` — Pallas VMEM-resident kernel (grid over the paper's 60x12 sweep)
+
+:mod:`repro.core.sketch` carries the shared count-min + doorkeeper-bloom
+machinery (lowbias32 hashing, bit-identical numpy/jnp/in-kernel), and
+:mod:`repro.core.registry` is the one list of policy names + tier support
+flags everything else derives from (see docs/policies.md).
 """
 from repro.core import energy, jax_cache, policies, registry, simulate, sketch, zipf
 from repro.core.jax_cache import PolicySpec, simulate as jax_simulate, simulate_batch

@@ -27,16 +27,20 @@ class PolicyInfo:
     pallas: bool  # kind accepted by kernels.cache_sim
     sketch: bool = False  # carries count-min-sketch state (core.sketch)
     description: str = ""
+    #: tunable knobs the PolicySpec/kernel accept for this kind (the docs
+    #: policy-support matrix is generated from these — see
+    #: experiments/render_policy_table.py)
+    options: tuple[str, ...] = ()
 
 
 POLICIES: tuple[PolicyInfo, ...] = (
     PolicyInfo("lru", True, True, True, description="recency eviction"),
     PolicyInfo("lfu", True, True, True, description="in-memory LFU; eviction destroys metadata"),
     PolicyInfo("plfu", True, True, True, description="Perfect LFU with parked-list"),
-    PolicyInfo("plfua", True, True, True, description="PLFU + static rank-prefix hot-set admission"),
-    PolicyInfo("wlfu", True, True, False, description="Window-LFU over the last W requests"),
-    PolicyInfo("tinylfu", True, True, False, sketch=True, description="sketch-vs-victim admission over LFU eviction (optional doorkeeper bloom front)"),
-    PolicyInfo("plfua_dyn", True, True, False, sketch=True, description="PLFUA with sketch-refreshed hot set"),
+    PolicyInfo("plfua", True, True, True, description="PLFU + static rank-prefix hot-set admission", options=("hot_size",)),
+    PolicyInfo("wlfu", True, True, True, description="Window-LFU over the last W requests", options=("window",)),
+    PolicyInfo("tinylfu", True, True, True, sketch=True, description="sketch-vs-victim admission over LFU eviction (optional doorkeeper bloom front)", options=("window", "sketch_width", "doorkeeper")),
+    PolicyInfo("plfua_dyn", True, True, True, sketch=True, description="PLFUA with sketch-refreshed hot set", options=("hot_size", "refresh", "sketch_width")),
 )
 
 _BY_NAME = {p.name: p for p in POLICIES}

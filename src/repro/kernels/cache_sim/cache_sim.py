@@ -1,21 +1,42 @@
-"""Pallas TPU kernel: VMEM-resident cache-policy simulation.
+"""Pallas TPU kernel: VMEM-resident cache-policy simulation — all 7 kinds.
 
 The paper's experiment is 60 cases x 12 samples = 720 independent simulations
 of a 100k-request trace. On TPU we map samples (same-shape sims) to the Pallas
 grid; each program keeps the *entire* policy state — the dense ``freq`` table
-(the LFU container + PLFU parked-list collapsed, see DESIGN.md §3) and the
-``in_cache`` mask — in VMEM for the whole trace. For the paper's largest case
-(N = 100 000) that is ~0.9 MB of state, far under the ~16 MB VMEM budget, so
-the inner loop never touches HBM except to stream the trace block in.
+(the LFU container + PLFU parked-list collapsed, see DESIGN.md §3), the
+``in_cache`` mask, and for the sketch-admission policies the 4 x width
+count-min rows, the doorkeeper bloom bits, and the dynamic hot mask — in VMEM
+for the whole trace. For the paper's largest case (N = 100 000) the dense
+state is ~0.9 MB and a default sketch adds 4 x 4C x 4 B, far under the ~16 MB
+VMEM budget, so the inner loop never touches HBM except to stream the trace
+block in.
 
 TPU-native formulation (no gathers/scatters):
   * hit test     -> lane-wise compare against a broadcasted iota + mask AND +
                     any-reduction (VPU friendly),
   * eviction     -> masked argmin over the freq vector (ties: lowest id,
                     matching the reference implementation),
-  * all updates  -> one-hot selects; the request id never indexes an array.
+  * all updates  -> one-hot selects; the request id never indexes an array,
+  * sketch touch -> the lowbias32 bucket tables are computed *inside* the
+                    kernel from a broadcasted iota (pure uint32 arithmetic,
+                    bit-identical to ``repro.core.sketch.bucket_table``), and
+                    the per-step row scatter-increment is a one-hot add per
+                    row — the id never indexes the count-min rows either.
+
+``tinylfu`` runs the sketch-vs-victim admission duel (optional doorkeeper
+bloom front) over LFU eviction; ``plfua_dyn`` hoists the hot-mask refresh out
+of the inner step exactly like ``jax_cache._chunked_scan`` does: the trace is
+walked in ``refresh``-length chunks with the hot mask frozen, and the
+estimate-all + top-k rank selection runs once per chunk boundary (global-time
+cadence — a partial tail chunk never fires). The rank selection is a pairwise
+comparison matrix (O(N^2) transient per refresh), cheap at fleet-node scale
+(N up to a few thousand) and amortised over ``refresh`` steps; it reproduces
+``lax.top_k``'s ordering (estimate desc, ties to the lowest id) bit for bit.
 
 The only dynamic access is the scalar trace read ``trace_ref[0, t]`` per step.
+Every kind in ``repro.core.registry`` is implemented here; differential
+parity against both ``jax_cache.simulate`` and the pure-Python references is
+asserted in tests/test_kernels_cache_sim.py and tests/test_differential.py.
 """
 from __future__ import annotations
 
@@ -27,7 +48,7 @@ import numpy as np
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-from repro.core import registry
+from repro.core import registry, sketch
 
 _I32_MAX = np.iinfo(np.int32).max
 
@@ -39,6 +60,85 @@ def _round_up(x: int, m: int) -> int:
     return (x + m - 1) // m * m
 
 
+def _bucket_rows(iota_u32, salts, width: int):
+    """Per-row lowbias32 bucket tables, computed in-kernel.
+
+    ``iota_u32``: (1, n_pad) uint32 id iota. Returns one (1, n_pad) int32
+    table per salt — identical bits to ``sketch.bucket_table`` /
+    ``sketch.bloom_table`` because the arithmetic is uint32-only.
+    """
+    u = jnp.uint32
+    return [
+        (sketch._mix32((iota_u32 + u(1)) * u(salt), jnp) % u(width)).astype(jnp.int32)
+        for salt in salts
+    ]
+
+
+def _lane_pick(onehot, table):
+    """table[x] without indexing: sum over the one-hot lane. Scalar int32."""
+    return jnp.sum(jnp.where(onehot, table, 0))
+
+
+def _rows_add(rows, w_iota, idx, inc):
+    """One-hot scatter-increment: rows[d][idx[d]] += inc (inc: scalar bool)."""
+    return [
+        r + ((w_iota == i) & inc).astype(jnp.int32) for r, i in zip(rows, idx)
+    ]
+
+
+def _rows_estimate(rows, w_iota, idx):
+    """Count-min point estimate: min over rows of the addressed counter."""
+    est = _lane_pick(w_iota == idx[0], rows[0])
+    for d in range(1, len(rows)):
+        est = jnp.minimum(est, _lane_pick(w_iota == idx[d], rows[d]))
+    return est
+
+
+def _bloom_contains(bloom, b_iota, bidx):
+    """All BLOOM_DEPTH addressed bits set (scalar bool)."""
+    got = jnp.any((b_iota == bidx[0]) & bloom)
+    for d in range(1, len(bidx)):
+        got = got & jnp.any((b_iota == bidx[d]) & bloom)
+    return got
+
+
+def _bloom_set(bloom, b_iota, bidx):
+    marks = b_iota == bidx[0]
+    for d in range(1, len(bidx)):
+        marks = marks | (b_iota == bidx[d])
+    return bloom | marks
+
+
+def _refresh_hot(rows, tables, *, n_pad: int, n_objects: int, hot_k: int):
+    """plfua_dyn chunk-boundary refresh: hot mask = sketch top-``hot_k``.
+
+    Estimate-all is a one-hot reduction per row (no gather); the top-k is a
+    pairwise rank — ``rank(i) = |{j: est_j > est_i}| + |{j < i: est_j =
+    est_i}|`` — which is exactly ``lax.top_k``'s order (estimate descending,
+    ties to the lowest id), so the mask matches ``jax_cache.refresh_hot`` bit
+    for bit. Padding lanes get estimate -1 so they always rank last. Returns
+    (hot (1, n_pad) bool, halved rows).
+    """
+    w_pad = rows[0].shape[-1]
+    w_iota = jax.lax.broadcasted_iota(jnp.int32, (1, w_pad), 1)
+    est = None
+    for d in range(len(rows)):
+        tbl_col = jnp.transpose(tables[d])  # (n_pad, 1)
+        match = tbl_col == w_iota  # (n_pad, w_pad)
+        est_d = jnp.sum(jnp.where(match, rows[d], 0), axis=1, keepdims=True)
+        est = est_d if est is None else jnp.minimum(est, est_d)
+    valid_col = jax.lax.broadcasted_iota(jnp.int32, (n_pad, 1), 0) < n_objects
+    est = jnp.where(valid_col, est, -1)  # (n_pad, 1)
+
+    row_i = jax.lax.broadcasted_iota(jnp.int32, (n_pad, n_pad), 0)
+    col_j = jax.lax.broadcasted_iota(jnp.int32, (n_pad, n_pad), 1)
+    est_row = jnp.transpose(est)  # (1, n_pad)
+    beats = (est_row > est) | ((est_row == est) & (col_j < row_i))
+    rank = jnp.sum(beats.astype(jnp.int32), axis=1, keepdims=True)
+    hot = jnp.transpose(rank < hot_k)  # (1, n_pad) bool
+    return hot, [r >> 1 for r in rows]
+
+
 def _cache_sim_kernel(
     trace_ref,  # (1, T) int32 VMEM
     hits_ref,  # (1, 1) int32 VMEM out
@@ -48,53 +148,214 @@ def _cache_sim_kernel(
     kind: str,
     capacity: int,
     hot_size: int,
+    window: int,
+    refresh: int,
+    sketch_width: int,
+    doorkeeper: int,
+    n_objects: int,
     n_pad: int,
     trace_len: int,
 ):
     iota = jax.lax.broadcasted_iota(jnp.int32, (1, n_pad), 1)
+    iota_u32 = iota.astype(jnp.uint32)
 
-    def body(t, carry):
-        freq, in_cache, count, hits = carry
-        x = trace_ref[0, t]
-        onehot = iota == x  # (1, n_pad) — the id never indexes an array
+    sketchy = kind in _SKETCH_KINDS
+    if sketchy:
+        w_pad = _round_up(max(sketch_width, 128), 128)
+        w_iota = jax.lax.broadcasted_iota(jnp.int32, (1, w_pad), 1)
+        tables = _bucket_rows(iota_u32, sketch._SALTS, sketch_width)
+        rows0 = [jnp.zeros((1, w_pad), jnp.int32) for _ in sketch._SALTS]
+    if kind == "tinylfu" and doorkeeper:
+        b_pad = _round_up(max(doorkeeper, 128), 128)
+        b_iota = jax.lax.broadcasted_iota(jnp.int32, (1, b_pad), 1)
+        btables = _bucket_rows(iota_u32, sketch._BLOOM_SALTS, doorkeeper)
+    if kind == "wlfu":
+        r_pad = _round_up(max(window, 128), 128)
+        r_iota = jax.lax.broadcasted_iota(jnp.int32, (1, r_pad), 1)
+
+    def victim_of(freq, in_cache):
+        scores = jnp.where(in_cache, freq, _I32_MAX)
+        victim = jnp.argmin(scores)  # flat == lane index for (1, n_pad)
+        return iota == victim
+
+    # ---------------------------------------------------------------- steps
+    def base_step(t, carry, active=None):
+        """lru / lfu / plfu / plfua / plfua_dyn one-hot step (plfua_dyn's
+        carry additionally threads (rows, hot); ``active`` masks tail
+        padding of the chunked plfua_dyn walk)."""
+        if kind == "plfua_dyn":
+            freq, in_cache, count, hits, rows, hot = carry
+        else:
+            freq, in_cache, count, hits = carry
+        x = trace_ref[0, jnp.minimum(t, trace_len - 1)]
+        onehot = iota == x
         hit = jnp.any(onehot & in_cache)
 
-        if kind == "plfua":
+        if kind == "plfua_dyn":
+            idx = [_lane_pick(onehot, tbl) for tbl in tables]
+            new_rows = _rows_add(rows, w_iota, idx, jnp.bool_(True))
+            admitted = jnp.any(onehot & hot) | hit
+        elif kind == "plfua":
             admitted = x < hot_size
         else:
             admitted = jnp.bool_(True)
         touch = hit | admitted
         need_evict = (~hit) & admitted & (count >= capacity)
+        victim_onehot = victim_of(freq, in_cache)
 
         if kind == "lru":
             # recency eviction: "freq" holds last-access stamps (t+1; 0 = never)
-            scores = jnp.where(in_cache, freq, _I32_MAX)
-            victim = jnp.argmin(scores)
-            victim_onehot = iota == victim
-            in_cache = in_cache & ~(victim_onehot & need_evict)
-            freq = jnp.where(onehot & touch, t + 1, freq)
+            new_in_cache = in_cache & ~(victim_onehot & need_evict)
+            new_freq = jnp.where(onehot & touch, t + 1, freq)
         else:
-            scores = jnp.where(in_cache, freq, _I32_MAX)
-            victim = jnp.argmin(scores)
-            victim_onehot = iota == victim
-            in_cache = in_cache & ~(victim_onehot & need_evict)
+            new_in_cache = in_cache & ~(victim_onehot & need_evict)
+            new_freq = freq
             if kind == "lfu":
                 # in-memory LFU destroys metadata on eviction -> restart at 1
-                freq = jnp.where(victim_onehot & need_evict, 0, freq)
+                new_freq = jnp.where(victim_onehot & need_evict, 0, new_freq)
             # PLFU/PLFUA: untouched freq of an evicted id *is* the parked-list
-            freq = jnp.where(onehot & touch, freq + 1, freq)
+            new_freq = jnp.where(onehot & touch, new_freq + 1, new_freq)
 
         insert = (~hit) & admitted
-        in_cache = in_cache | (onehot & insert)
+        new_in_cache = new_in_cache | (onehot & insert)
+        new_count = count + insert.astype(jnp.int32) - need_evict.astype(jnp.int32)
+        if active is not None:
+            new_freq = jnp.where(active, new_freq, freq)
+            new_in_cache = jnp.where(active, new_in_cache, in_cache)
+            new_count = jnp.where(active, new_count, count)
+            hit = hit & active
+        hits = hits + hit.astype(jnp.int32)
+        if kind == "plfua_dyn":
+            if active is not None:
+                new_rows = [
+                    jnp.where(active, nr, r) for nr, r in zip(new_rows, rows)
+                ]
+            return new_freq, new_in_cache, new_count, hits, new_rows, hot
+        return new_freq, new_in_cache, new_count, hits
+
+    def wlfu_step(t, carry):
+        freq, in_cache, count, hits, ring, ptr = carry
+        x = trace_ref[0, t]
+        onehot = iota == x
+        # slide the window *before* the hit test, as the reference does
+        ptr_onehot = r_iota == ptr
+        old = jnp.sum(jnp.where(ptr_onehot, ring, 0))
+        freq = freq - ((iota == old) & (old >= 0)).astype(jnp.int32)
+        ring = jnp.where(ptr_onehot, x, ring)
+        ptr = (ptr + 1) % window
+        freq = freq + onehot.astype(jnp.int32)
+
+        hit = jnp.any(onehot & in_cache)
+        need_evict = (~hit) & (count >= capacity)
+        victim_onehot = victim_of(freq, in_cache)
+        in_cache = (in_cache & ~(victim_onehot & need_evict)) | onehot
+        count = count + (~hit).astype(jnp.int32) - need_evict.astype(jnp.int32)
+        hits = hits + hit.astype(jnp.int32)
+        return freq, in_cache, count, hits, ring, ptr
+
+    def tinylfu_step(t, carry):
+        if doorkeeper:
+            freq, in_cache, count, hits, rows, seen, bloom = carry
+        else:
+            freq, in_cache, count, hits, rows, seen = carry
+        x = trace_ref[0, t]
+        onehot = iota == x
+        idx = [_lane_pick(onehot, tbl) for tbl in tables]
+        # sketch first (add, then age), exactly as TinyLFUCache.request does
+        if doorkeeper:
+            # doorkeeper gate: first touch per window marks the bloom only;
+            # the sketch increments from the second touch on
+            bidx = [_lane_pick(onehot, tbl) for tbl in btables]
+            in_dk = _bloom_contains(bloom, b_iota, bidx)
+            rows = _rows_add(rows, w_iota, idx, in_dk)
+            bloom = _bloom_set(bloom, b_iota, bidx)
+        else:
+            rows = _rows_add(rows, w_iota, idx, jnp.bool_(True))
+        seen = seen + 1
+        age = seen >= window
+        rows = [jnp.where(age, r >> 1, r) for r in rows]
+        seen = jnp.where(age, 0, seen)
+        if doorkeeper:
+            bloom = bloom & ~age
+
+        hit = jnp.any(onehot & in_cache)
+        full = count >= capacity
+        victim_onehot = victim_of(freq, in_cache)
+        vidx = [_lane_pick(victim_onehot, tbl) for tbl in tables]
+        # admission duel: incoming vs victim, by (post-aging) sketch estimate,
+        # with the doorkeeper'd occurrence added back when the front is on
+        est_x = _rows_estimate(rows, w_iota, idx)
+        est_v = _rows_estimate(rows, w_iota, vidx)
+        if doorkeeper:
+            vbidx = [_lane_pick(victim_onehot, tbl) for tbl in btables]
+            est_x = est_x + _bloom_contains(bloom, b_iota, bidx).astype(jnp.int32)
+            est_v = est_v + _bloom_contains(bloom, b_iota, vbidx).astype(jnp.int32)
+        admit = est_x > est_v
+        insert = (~hit) & ((~full) | admit)
+        need_evict = (~hit) & full & admit
+        in_cache = (in_cache & ~(victim_onehot & need_evict)) | (onehot & insert)
+        # LFU eviction semantics: metadata dies with the victim, entry restarts at 1
+        freq = jnp.where(victim_onehot & need_evict, 0, freq)
+        freq = jnp.where(
+            onehot,
+            jnp.where(hit, freq + 1, jnp.where(insert, 1, freq)),
+            freq,
+        )
         count = count + insert.astype(jnp.int32) - need_evict.astype(jnp.int32)
         hits = hits + hit.astype(jnp.int32)
-        return freq, in_cache, count, hits
+        if doorkeeper:
+            return freq, in_cache, count, hits, rows, seen, bloom
+        return freq, in_cache, count, hits, rows, seen
 
+    # -------------------------------------------------------------- drivers
     freq0 = jnp.zeros((1, n_pad), jnp.int32)
     cache0 = jnp.zeros((1, n_pad), jnp.bool_)
-    freq, in_cache, _, hits = jax.lax.fori_loop(
-        0, trace_len, body, (freq0, cache0, jnp.int32(0), jnp.int32(0))
-    )
+    zero = jnp.int32(0)
+
+    if kind == "wlfu":
+        ring0 = jnp.full((1, r_pad), -1, jnp.int32)
+        carry = jax.lax.fori_loop(
+            0, trace_len, wlfu_step, (freq0, cache0, zero, zero, ring0, zero)
+        )
+    elif kind == "tinylfu":
+        carry = (freq0, cache0, zero, zero, rows0, zero)
+        if doorkeeper:
+            carry = carry + (jnp.zeros((1, b_pad), jnp.bool_),)
+        carry = jax.lax.fori_loop(0, trace_len, tinylfu_step, carry)
+    elif kind == "plfua_dyn":
+        # chunked walk, hot mask frozen inside each chunk; the refresh fires
+        # only when its whole period lies within the real trace (global-time
+        # cadence — a padded tail chunk must NOT refresh, or the final
+        # hot/sketch state would diverge whenever T % refresh != 0)
+        hot0 = iota < hot_size
+        n_chunks = -(-trace_len // refresh)
+
+        def chunk(c, carry):
+            base = c * refresh
+
+            def step_in_chunk(tl, cy):
+                t = base + tl
+                return base_step(t, cy, active=t < trace_len)
+
+            carry = jax.lax.fori_loop(0, refresh, step_in_chunk, carry)
+            freq, in_cache, count, hits, rows, hot = carry
+            fire = (c + 1) * refresh <= trace_len
+            new_hot, new_rows = _refresh_hot(
+                rows, tables, n_pad=n_pad, n_objects=n_objects, hot_k=hot_size
+            )
+            hot = jnp.where(fire, new_hot, hot)
+            rows = [jnp.where(fire, nr, r) for nr, r in zip(new_rows, rows)]
+            return freq, in_cache, count, hits, rows, hot
+
+        carry = jax.lax.fori_loop(
+            0, n_chunks, chunk, (freq0, cache0, zero, zero, rows0, hot0)
+        )
+    else:
+        carry = jax.lax.fori_loop(
+            0, trace_len, base_step, (freq0, cache0, zero, zero)
+        )
+
+    freq, in_cache, _, hits = carry[0], carry[1], carry[2], carry[3]
     hits_ref[0, 0] = hits
     freq_ref[...] = freq
     cache_ref[...] = in_cache.astype(jnp.int32)
@@ -107,40 +368,68 @@ def cache_sim_pallas(
     n_objects: int,
     capacity: int,
     hot_size: int = 0,
+    window: int = 0,
+    refresh: int = 0,
+    sketch_width: int = 0,
+    doorkeeper: int = 0,
     interpret: bool = True,
 ):
     """Simulate S same-shape traces on the Pallas grid.
 
     Args:
       traces: (S, T) int32 request ids in [0, n_objects).
-      kind: one of KERNEL_KINDS.
-      hot_size: PLFUA hot-set size (0 -> the paper's 2*capacity convention).
+      kind: one of KERNEL_KINDS (every kind in the registry).
+      hot_size: plfua/plfua_dyn hot-set size (0 -> the paper's 2*capacity).
+      window: wlfu sliding window (required >= 1) / tinylfu aging window
+        (0 -> ``sketch.default_window``).
+      refresh: plfua_dyn hot-set refresh period (0 -> ``sketch.default_refresh``).
+      sketch_width: count-min width for the sketch kinds
+        (0 -> ``sketch.default_width``).
+      doorkeeper: tinylfu bloom front size in bits (0 = off).
+
+    The defaults mirror ``jax_cache.PolicySpec`` exactly, so identical
+    arguments produce bit-identical state across the two tiers.
 
     Returns:
       hits:     (S,)      int32 — total hits per sample (CHR = hits / T).
       freq:     (S, N)    int32 — final frequency table (lru: last-access stamps).
       in_cache: (S, N)    bool  — final cache contents.
     """
-    if kind in _SKETCH_KINDS:
-        # loud and typed, so the benchmark/test layers can't fall through to a
-        # silently-wrong kernel result for sketch-admission policies
-        raise NotImplementedError(
-            f"cache_sim Pallas kernel does not implement sketch-admission "
-            f"kind {kind!r}; use repro.core.jax_cache.simulate (the count-min "
-            f"rows would need a VMEM-resident scatter per request)"
-        )
     if kind not in KERNEL_KINDS:
         raise ValueError(f"kind={kind!r} not in {KERNEL_KINDS}")
+    if kind == "wlfu" and window < 1:
+        raise ValueError("wlfu requires window >= 1")
+    if doorkeeper < 0:
+        raise ValueError(f"doorkeeper must be >= 0, got {doorkeeper}")
+    if doorkeeper and kind != "tinylfu":
+        raise ValueError("doorkeeper is a tinylfu-only option")
     s, t = traces.shape
     n_pad = _round_up(max(n_objects, 128), 128)
-    if kind == "plfua":
+    if kind in ("plfua", "plfua_dyn"):
         hot_size = min(n_objects, hot_size or 2 * capacity)
+    # normalise options the kind ignores to 0 so they can't create spurious
+    # jit-cache variants (or the false impression that they applied)
+    if kind == "tinylfu":
+        window = window or sketch.default_window(capacity)
+    elif kind != "wlfu":
+        window = 0
+    refresh = refresh or sketch.default_refresh(capacity) if kind == "plfua_dyn" else 0
+    sketch_width = (
+        sketch_width or sketch.default_width(capacity)
+        if kind in _SKETCH_KINDS
+        else 0
+    )
 
     kernel = functools.partial(
         _cache_sim_kernel,
         kind=kind,
         capacity=capacity,
         hot_size=hot_size,
+        window=window,
+        refresh=refresh,
+        sketch_width=sketch_width,
+        doorkeeper=doorkeeper,
+        n_objects=n_objects,
         n_pad=n_pad,
         trace_len=t,
     )

@@ -13,7 +13,18 @@ def _on_tpu() -> bool:
 
 
 @functools.partial(
-    jax.jit, static_argnames=("kind", "n_objects", "capacity", "hot_size", "interpret")
+    jax.jit,
+    static_argnames=(
+        "kind",
+        "n_objects",
+        "capacity",
+        "hot_size",
+        "window",
+        "refresh",
+        "sketch_width",
+        "doorkeeper",
+        "interpret",
+    ),
 )
 def cache_sim(
     traces,
@@ -22,6 +33,10 @@ def cache_sim(
     n_objects: int,
     capacity: int,
     hot_size: int = 0,
+    window: int = 0,
+    refresh: int = 0,
+    sketch_width: int = 0,
+    doorkeeper: int = 0,
     interpret: bool | None = None,
 ):
     """Batched cache-policy simulation (see cache_sim_pallas for the contract).
@@ -37,6 +52,10 @@ def cache_sim(
         n_objects=n_objects,
         capacity=capacity,
         hot_size=hot_size,
+        window=window,
+        refresh=refresh,
+        sketch_width=sketch_width,
+        doorkeeper=doorkeeper,
         interpret=interpret,
     )
 

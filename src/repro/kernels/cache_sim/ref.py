@@ -1,8 +1,9 @@
 """Pure-jnp oracle for the cache_sim kernel: the validated lax.scan simulator.
 
 (`repro.core.jax_cache.simulate` is itself validated decision-for-decision
-against the paper-faithful Python reference in tests/test_jax_cache.py, so the
-kernel inherits a two-deep validation chain.)
+against the paper-faithful Python reference in tests/test_jax_cache.py and
+tests/test_differential.py, so the kernel inherits a two-deep validation
+chain — for every registry kind, sketch-admission ones included.)
 """
 from __future__ import annotations
 
@@ -12,13 +13,28 @@ import numpy as np
 from repro.core import jax_cache
 
 
-def cache_sim_ref(traces, *, kind, n_objects, capacity, hot_size=0):
+def cache_sim_ref(
+    traces,
+    *,
+    kind,
+    n_objects,
+    capacity,
+    hot_size=0,
+    window=0,
+    refresh=0,
+    sketch_width=0,
+    doorkeeper=0,
+):
     """Same contract as cache_sim_pallas: (hits, freq/stamps, in_cache)."""
     spec = jax_cache.PolicySpec(
         kind=kind,
         n_objects=n_objects,
         capacity=capacity,
         hot_size=hot_size,
+        window=window,
+        refresh=refresh,
+        sketch_width=sketch_width,
+        doorkeeper=doorkeeper,
     )
     hits_list, freqs, caches = [], [], []
     for s in range(traces.shape[0]):

@@ -11,7 +11,11 @@ is the one-call entry point:
 
 Every scenario returns ``(n_samples, trace_len)`` int32 with ids in
 ``[0, n_objects)`` — drop-in for ``core.jax_cache.simulate_batch``, the
-cache_sim Pallas kernel, and ``repro.cdn.simulate_hierarchy_batch``.
+cache_sim Pallas kernel (every registry kind), and the N-tier fleet
+simulator ``repro.fleet.simulate_fleet_batch`` (of which the two-tier
+``repro.cdn.simulate_hierarchy_batch`` is a thin depth-2 wrapper).
+``repro.workloads.device`` ports the same five generators to ``jax.random``
+so sharded fleets can synthesize their trace chunks on device, inside jit.
 """
 from __future__ import annotations
 

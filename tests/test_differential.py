@@ -1,4 +1,4 @@
-"""Differential oracle: EVERY JAX policy kind x EVERY workload scenario.
+"""Differential oracle: EVERY policy kind x EVERY workload scenario x tiers.
 
 The per-policy tests elsewhere check a few hand-picked traces; this harness is
 the exhaustive matrix — ``jax_cache.simulate`` must agree with the pure-Python
@@ -7,6 +7,11 @@ contents + metadata, for the full cross product of ``JAX_POLICY_KINDS`` and
 ``workloads.SCENARIOS``. Trace parameters are drawn through the hypothesis
 shim (seeded random examples when the real package is absent), with shapes
 pinned to a small fixed set so jit recompiles stay bounded.
+
+The Pallas tier rides the same matrix: ``test_pallas_matches_both_oracles``
+runs the cache_sim kernel (interpret mode on CPU) for every kind x scenario —
+doorkeeper-enabled tinylfu included — and pins its outputs bit-identically to
+*both* the jnp scan state and the pure-Python reference totals.
 """
 import numpy as np
 import pytest
@@ -19,6 +24,7 @@ except ImportError:  # pragma: no cover - CI installs hypothesis; shim elsewhere
 from repro import workloads
 from repro.cdn.reference import build_policy
 from repro.core import jax_cache
+from repro.kernels.cache_sim.ops import cache_sim
 
 N = 64
 TRACE_LEN = 600
@@ -80,9 +86,83 @@ def test_jax_matches_reference(kind, scenario, cap, seed):
             )
 
 
+#: tinylfu runs twice in the Pallas matrix: bare and with a doorkeeper front.
+_PALLAS_VARIANTS = [
+    (kind, 0) for kind in jax_cache.JAX_POLICY_KINDS
+] + [("tinylfu", 128)]
+
+
+@pytest.mark.parametrize("kind,doorkeeper", _PALLAS_VARIANTS)
+@pytest.mark.parametrize("scenario", workloads.SCENARIO_NAMES)
+def test_pallas_matches_both_oracles(kind, doorkeeper, scenario):
+    """Kernel tier x every scenario: bit-identical to the jnp scan (full final
+    state) and to the pure-Python reference (hit totals, final contents).
+
+    TRACE_LEN=600 with REFRESH=97 exercises the partial-tail-period edge for
+    plfua_dyn (600 % 97 != 0: the last chunk must not fire a refresh)."""
+    cap = CAPS[1]
+    trace = workloads.make_traces(
+        scenario, N, n_samples=1, trace_len=TRACE_LEN, seed=777
+    )
+    spec = jax_cache.PolicySpec(
+        kind=kind,
+        n_objects=N,
+        capacity=cap,
+        window=WINDOW if kind in ("wlfu", "tinylfu") else 0,
+        refresh=REFRESH if kind == "plfua_dyn" else 0,
+        sketch_width=SKETCH_W if kind in jax_cache.SKETCH_POLICY_KINDS else 0,
+        doorkeeper=doorkeeper,
+    )
+    hits_k, freq_k, cache_k = cache_sim(
+        trace.astype(np.int32),
+        kind=kind,
+        n_objects=N,
+        capacity=cap,
+        window=spec.window,
+        refresh=spec.refresh,
+        sketch_width=spec.sketch_width,
+        doorkeeper=doorkeeper,
+        interpret=True,
+    )
+    ctx = f"{kind} x {scenario} cap={cap} dk={doorkeeper}"
+
+    # vs the jnp scan: full final-state parity
+    hits_j, state = jax_cache.simulate(spec, trace[0])
+    np.testing.assert_array_equal(
+        np.asarray(cache_k)[0], np.asarray(state["in_cache"]),
+        err_msg=f"kernel vs jax contents: {ctx}",
+    )
+    if kind == "lru":
+        cached = np.asarray(state["in_cache"])
+        np.testing.assert_array_equal(
+            np.asarray(freq_k)[0][cached], (np.asarray(state["last"]) + 1)[cached],
+            err_msg=f"kernel vs jax stamps: {ctx}",
+        )
+    else:
+        np.testing.assert_array_equal(
+            np.asarray(freq_k)[0], np.asarray(state["freq"]),
+            err_msg=f"kernel vs jax freq: {ctx}",
+        )
+    assert int(np.asarray(hits_k)[0]) == int(np.asarray(hits_j).sum()), ctx
+
+    # vs the pure-Python reference: totals + final contents
+    pol = build_policy(spec)
+    pol.run(int(x) for x in trace[0])
+    assert int(np.asarray(hits_k)[0]) == pol.hits, f"kernel vs py hits: {ctx}"
+    cached_py = np.array([pol.contains(i) for i in range(N)])
+    np.testing.assert_array_equal(
+        np.asarray(cache_k)[0], cached_py, err_msg=f"kernel vs py contents: {ctx}"
+    )
+
+
 def test_matrix_is_total():
     """The harness really does cover every kind and every scenario."""
     assert set(jax_cache.JAX_POLICY_KINDS) >= set(jax_cache.SKETCH_POLICY_KINDS)
     assert len(workloads.SCENARIO_NAMES) >= 5
     for kind in jax_cache.JAX_POLICY_KINDS:
         build_policy(_spec(kind, CAPS[0]))  # every kind has a reference oracle
+    # the Pallas matrix is total too: every jax kind appears, plus the
+    # doorkeeper'd tinylfu variant
+    kinds = {k for k, _ in _PALLAS_VARIANTS}
+    assert kinds == set(jax_cache.JAX_POLICY_KINDS)
+    assert ("tinylfu", 128) in _PALLAS_VARIANTS

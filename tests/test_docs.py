@@ -1,0 +1,78 @@
+"""Docs subsystem checks: the policy table cannot rot, links cannot break.
+
+Run by the tier-1 suite and by the CI docs lane. Two invariants:
+
+* the policy support matrix embedded in docs/policies.md and README.md is
+  exactly what ``experiments/render_policy_table.py`` renders from
+  ``repro.core.registry`` (so adding/retiring a policy without refreshing the
+  docs fails CI), and
+* every intra-repo markdown link in README.md and docs/*.md resolves to a
+  real file or directory.
+"""
+import re
+import sys
+from pathlib import Path
+
+import pytest
+
+ROOT = Path(__file__).resolve().parent.parent
+
+sys.path.insert(0, str(ROOT / "experiments"))
+import render_policy_table  # noqa: E402
+
+DOC_FILES = [ROOT / "README.md"] + sorted((ROOT / "docs").glob("*.md"))
+
+#: [text](target) markdown links, excluding images' leading ! is fine to keep
+_LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+
+
+def test_docs_pages_exist():
+    for name in ("architecture.md", "policies.md", "benchmarks.md"):
+        assert (ROOT / "docs" / name).exists(), f"docs/{name} missing"
+
+
+def test_policy_table_is_fresh():
+    """The committed tables match the registry bit for bit."""
+    stale = render_policy_table.check(ROOT)
+    assert not stale, (
+        f"stale policy table in {stale}; run "
+        "PYTHONPATH=src python experiments/render_policy_table.py --write"
+    )
+
+
+def test_policy_table_covers_every_policy():
+    from repro.core import registry
+
+    table = render_policy_table.render_table()
+    for p in registry.POLICIES:
+        assert f"`{p.name}`" in table, f"{p.name} missing from rendered table"
+        for opt in p.options:
+            assert f"`{opt}`" in table, f"{p.name} option {opt} missing"
+
+
+@pytest.mark.parametrize("path", DOC_FILES, ids=lambda p: str(p.relative_to(ROOT)))
+def test_intra_repo_links_resolve(path):
+    """Every relative link target in README/docs points at a real path."""
+    text = path.read_text()
+    broken = []
+    for target in _LINK_RE.findall(text):
+        if target.startswith(("http://", "https://", "mailto:", "#")):
+            continue
+        rel = target.split("#", 1)[0]
+        if not rel:
+            continue
+        if not (path.parent / rel).exists():
+            broken.append(target)
+    assert not broken, f"broken intra-repo links in {path.name}: {broken}"
+
+
+def test_doc_pages_cross_link():
+    """The three pages form a navigable set (each links to the others)."""
+    for name, others in {
+        "architecture.md": ["policies.md", "benchmarks.md"],
+        "policies.md": ["architecture.md", "benchmarks.md"],
+        "benchmarks.md": ["architecture.md", "policies.md"],
+    }.items():
+        text = (ROOT / "docs" / name).read_text()
+        for other in others:
+            assert other in text, f"docs/{name} does not link {other}"

@@ -1,36 +1,46 @@
-"""Shape/policy sweep: cache_sim Pallas kernel (interpret) vs pure-jnp oracle."""
+"""Shape/policy sweep: cache_sim Pallas kernel (interpret) vs pure-jnp oracle.
+
+Every registry kind — the sketch-admission ones included — runs on the kernel
+tier; the sweep pins parity on hits, final cache contents and the frequency
+table against ``jax_cache.simulate`` (itself oracle-validated against the
+pure-Python references in tests/test_differential.py).
+"""
 import numpy as np
 import pytest
 
-from repro.core import jax_cache, zipf
+from repro.core import jax_cache, registry, zipf
 from repro.kernels.cache_sim.ops import cache_sim
 from repro.kernels.cache_sim.ref import cache_sim_ref
 
 SWEEP = [
-    # (kind, n_objects, capacity, n_samples, trace_len)
-    ("lfu", 64, 9, 3, 400),
-    ("lfu", 200, 50, 2, 600),
-    ("plfu", 64, 9, 3, 400),
-    ("plfu", 130, 3, 2, 500),
-    ("plfua", 64, 9, 3, 400),
-    ("plfua", 300, 20, 2, 500),
-    ("lru", 64, 9, 3, 400),
-    ("lru", 100, 25, 2, 500),
-    ("lfu", 128, 128, 2, 300),   # capacity == N: never evicts
-    ("plfu", 16, 1, 2, 300),     # degenerate single-slot cache
+    # (kind, n_objects, capacity, n_samples, trace_len, kwargs)
+    ("lfu", 64, 9, 3, 400, {}),
+    ("lfu", 200, 50, 2, 600, {}),
+    ("plfu", 64, 9, 3, 400, {}),
+    ("plfu", 130, 3, 2, 500, {}),
+    ("plfua", 64, 9, 3, 400, {}),
+    ("plfua", 300, 20, 2, 500, {}),
+    ("lru", 64, 9, 3, 400, {}),
+    ("lru", 100, 25, 2, 500, {}),
+    ("lfu", 128, 128, 2, 300, {}),   # capacity == N: never evicts
+    ("plfu", 16, 1, 2, 300, {}),     # degenerate single-slot cache
+    ("wlfu", 64, 9, 3, 400, dict(window=48)),
+    ("wlfu", 130, 3, 2, 500, dict(window=33)),  # odd window, n crosses a pad
+    ("tinylfu", 64, 9, 3, 400, dict(window=48, sketch_width=64)),
+    ("tinylfu", 300, 20, 2, 500, dict(window=77, sketch_width=100)),
+    ("tinylfu", 64, 9, 2, 400, {}),  # defaults: window=1000 > T, no aging
+    ("plfua_dyn", 64, 9, 3, 400, dict(refresh=97, sketch_width=64)),
+    ("plfua_dyn", 130, 3, 2, 500, dict(refresh=50, sketch_width=96, hot_size=7)),
+    ("plfua_dyn", 16, 1, 2, 300, dict(refresh=30, sketch_width=64)),
 ]
 
 
-@pytest.mark.parametrize("kind,n,cap,s,t", SWEEP)
-def test_kernel_matches_oracle(kind, n, cap, s, t):
-    traces = np.stack(
-        [zipf.sample_trace(n, t, seed=100 + i) for i in range(s)]
-    ).astype(np.int32)
+def _assert_matches_oracle(kind, n, cap, traces, **kw):
     hits_k, freq_k, cache_k = cache_sim(
-        traces, kind=kind, n_objects=n, capacity=cap, interpret=True
+        traces, kind=kind, n_objects=n, capacity=cap, interpret=True, **kw
     )
     hits_r, freq_r, cache_r = cache_sim_ref(
-        traces, kind=kind, n_objects=n, capacity=cap
+        traces, kind=kind, n_objects=n, capacity=cap, **kw
     )
     np.testing.assert_array_equal(np.asarray(hits_k), hits_r)
     np.testing.assert_array_equal(np.asarray(cache_k), cache_r)
@@ -41,6 +51,14 @@ def test_kernel_matches_oracle(kind, n, cap, s, t):
         )
     else:
         np.testing.assert_array_equal(np.asarray(freq_k), freq_r)
+
+
+@pytest.mark.parametrize("kind,n,cap,s,t,kw", SWEEP)
+def test_kernel_matches_oracle(kind, n, cap, s, t, kw):
+    traces = np.stack(
+        [zipf.sample_trace(n, t, seed=100 + i) for i in range(s)]
+    ).astype(np.int32)
+    _assert_matches_oracle(kind, n, cap, traces, **kw)
 
 
 def test_kernel_uniform_trace_dtype_robustness():
@@ -57,17 +75,60 @@ def test_kernel_uniform_trace_dtype_robustness():
         np.testing.assert_array_equal(np.asarray(cache_k), cache_r)
 
 
-@pytest.mark.parametrize("kind", jax_cache.SKETCH_POLICY_KINDS)
-def test_kernel_sketch_kinds_raise_loudly(kind):
-    """The kernel doesn't implement sketch admission; it must say so with a
-    typed error, never fall through to a silently-wrong simulation."""
+def test_kernel_implements_every_registry_kind():
+    """The NotImplementedError gate is gone: the registry advertises Pallas
+    support for all kinds, and KERNEL_KINDS covers the whole canonical list."""
+    from repro.kernels.cache_sim.ops import KERNEL_KINDS
+
+    assert KERNEL_KINDS == registry.names()
+    assert set(jax_cache.SKETCH_POLICY_KINDS) <= set(KERNEL_KINDS)
+    for p in registry.POLICIES:
+        assert p.pallas, f"{p.name} lost kernel support"
+
+
+def test_kernel_rejects_unknown_kind_and_bad_options():
     traces = np.zeros((1, 16), np.int32)
-    with pytest.raises(NotImplementedError, match="sketch-admission"):
-        cache_sim(traces, kind=kind, n_objects=32, capacity=4, interpret=True)
-    # ...while the jitted jnp tier does support them on identical inputs
-    spec = jax_cache.PolicySpec(kind=kind, n_objects=32, capacity=4)
-    hits, _ = jax_cache.simulate(spec, traces[0])
-    assert np.asarray(hits).shape == (16,)
+    with pytest.raises(ValueError, match="not in"):
+        cache_sim(traces, kind="nope", n_objects=32, capacity=4, interpret=True)
+    with pytest.raises(ValueError, match="window"):
+        cache_sim(traces, kind="wlfu", n_objects=32, capacity=4, interpret=True)
+    with pytest.raises(ValueError, match="doorkeeper"):
+        cache_sim(
+            traces, kind="lfu", n_objects=32, capacity=4, doorkeeper=64,
+            interpret=True,
+        )
+
+
+def test_kernel_tinylfu_doorkeeper_matches_oracle():
+    """The bloom front changes admission decisions (first touch per window is
+    doorkeeper'd) — the kernel must track the jnp tier through them."""
+    n, cap, t = 64, 9, 500
+    traces = np.stack([zipf.sample_trace(n, t, seed=5 + i) for i in range(2)])
+    kw = dict(window=60, sketch_width=64, doorkeeper=128)
+    _assert_matches_oracle("tinylfu", n, cap, traces.astype(np.int32), **kw)
+    # ...and the doorkeeper'd run really made different decisions
+    hits_dk, _, _ = cache_sim(
+        traces, kind="tinylfu", n_objects=n, capacity=cap, interpret=True, **kw
+    )
+    hits_plain, _, _ = cache_sim(
+        traces, kind="tinylfu", n_objects=n, capacity=cap, interpret=True,
+        window=60, sketch_width=64,
+    )
+    assert not np.array_equal(np.asarray(hits_dk), np.asarray(hits_plain))
+
+
+@pytest.mark.parametrize("trace_len", [388, 400])  # 388 = 4*97: exact periods
+def test_kernel_plfua_dyn_refresh_boundary(trace_len):
+    """Global-time refresh cadence: a partial tail period must NOT fire a
+    refresh (trace_len % refresh != 0), and an exact multiple must fire on
+    the last step — both bit-identical to the chunked jnp scan."""
+    n, cap, refresh = 64, 9, 97
+    traces = np.stack(
+        [zipf.sample_trace(n, trace_len, seed=40 + i) for i in range(2)]
+    ).astype(np.int32)
+    _assert_matches_oracle(
+        "plfua_dyn", n, cap, traces, refresh=refresh, sketch_width=64
+    )
 
 
 def test_kernel_plfua_custom_hot_size():

@@ -168,9 +168,9 @@ def test_registry_backs_every_name_tuple():
     from repro.kernels.cache_sim.cache_sim import KERNEL_KINDS
 
     assert KERNEL_KINDS == registry.names(pallas=True)
-    # pallas support is a subset of jax support; sketch kinds are jax-only
-    assert set(KERNEL_KINDS) <= set(jax_cache.JAX_POLICY_KINDS)
-    assert not set(KERNEL_KINDS) & set(jax_cache.SKETCH_POLICY_KINDS)
+    # since PR 4 every tier implements every kind, sketch-admission included
+    assert KERNEL_KINDS == jax_cache.JAX_POLICY_KINDS == registry.names()
+    assert set(jax_cache.SKETCH_POLICY_KINDS) <= set(KERNEL_KINDS)
     with pytest.raises(ValueError, match="unknown policy"):
         registry.info("nope")
 
