@@ -6,12 +6,18 @@ device wall-time per simulated request and derived carries steps/sec,
 per-level CHR and the management-energy roll-up.
 
 Groups:
-  * ``fleet_policies`` — every registry policy kind on a 3-tier topology
+  * ``fleet_policies``  — every registry policy kind on a 3-tier topology
     under stationary and churn: CHR + wall-clock + steps/sec (the perf-
     trajectory rows recorded into BENCH_PR3.json).
-  * ``fleet_depth``    — 2/3/4-tier topologies over the same edge fleet:
+  * ``fleet_depth``     — 2/3/4-tier topologies over the same edge fleet:
     how depth buys origin-traffic reduction and what it costs to manage.
-  * ``fleet_scale``    — weak scaling, edges x devices: every added device
+  * ``fleet_placement`` — cross-tier placement (lce / lcd / prob / admit,
+    repro.fleet.placement) x {stationary, churn, flash_crowd}: per-level +
+    total CHR, management energy with the distinct placement row, and
+    steps/sec on the time-major placed engine. The acceptance row: ``lcd``
+    cuts management energy vs ``lce`` on ``stationary`` at <= 2 points of
+    total CHR (recorded into BENCH_PR5.json).
+  * ``fleet_scale``     — weak scaling, edges x devices: every added device
     hosts a full topology replica serving its own on-device-generated
     traffic (``fleet.simulate_fleet_device`` sample-sharding). Runs in
     subprocesses so each device count gets a fresh
@@ -113,6 +119,68 @@ def fleet_depth_sweep(full: bool = False):
     return rows
 
 
+FLEET_PLACEMENTS = ("lce", "lcd", "prob(0.5)", "admit")
+PLACEMENT_SCENARIOS = ("stationary", "churn", "flash_crowd")
+
+
+def fleet_placement_sweep(full: bool = False):
+    """3-tier plfu fleet, every placement x {stationary, churn, flash_crowd}.
+
+    Derived fields carry the trade the placement subsystem exists to expose:
+    per-level and total CHR, total management energy, the placement row's
+    own share, and origin traffic. The final row per scenario asserts the
+    acceptance property on stationary: lcd's management energy below lce's
+    with total CHR within two points."""
+    n, edge_cap = (10_000, 300) if full else (2_000, 60)
+    samples, tlen = (4, 50_000) if full else (2, 8_000)
+    rows = []
+    reports: dict[tuple[str, str], object] = {}
+    for scenario in PLACEMENT_SCENARIOS:
+        traces = workloads.make_traces(
+            scenario, n, n_samples=samples, trace_len=tlen, seed=7
+        )
+        for pl in FLEET_PLACEMENTS:
+            topo = fleet.tree(
+                n_objects=n,
+                widths=(8, 2, 1),
+                kinds="plfu",
+                capacities=(edge_cap, 4 * edge_cap, 8 * edge_cap),
+                placements=pl,
+            )
+            out, us, sps = _run(topo, traces)
+            rep = fleet.fleet_report(topo, out)
+            reports[(scenario, pl)] = rep
+            chrs = " ".join(
+                f"{name}_chr={t.chr:.4f}"
+                for name, t in zip(topo.names, rep.per_level)
+            )
+            rows.append(
+                (
+                    f"fleet_placement/{scenario}/{pl}",
+                    us,
+                    f"steps_per_s={sps:.0f} {chrs} "
+                    f"total_chr={rep.total_chr:.4f} origin={rep.origin_requests} "
+                    f"mgmt_J={rep.mgmt_energy_j:.4f} "
+                    f"placement_J={rep.placement_energy_j:.4f}",
+                )
+            )
+    # the acceptance comparison, recorded as its own row so BENCH_PR5.json
+    # carries the evidence (and a failed property shows up as /ERROR)
+    lce, lcd = reports[("stationary", "lce")], reports[("stationary", "lcd")]
+    saving = 1.0 - lcd.mgmt_energy_j / lce.mgmt_energy_j
+    dchr = lcd.total_chr - lce.total_chr
+    ok = lcd.mgmt_energy_j < lce.mgmt_energy_j and abs(dchr) <= 0.02
+    rows.append(
+        (
+            "fleet_placement/stationary/lcd_vs_lce" + ("" if ok else "/ERROR"),
+            0.0,
+            f"mgmt_saving={saving:.4f} dchr={dchr:+.4f} "
+            f"lce_J={lce.mgmt_energy_j:.4f} lcd_J={lcd.mgmt_energy_j:.4f}",
+        )
+    )
+    return rows
+
+
 # one weak-scaling worker: D forced host devices, D x samples_per_device
 # topology replicas, traces synthesized on device (sample-sharded shard_map)
 _SCALE_WORKER = r"""
@@ -208,5 +276,6 @@ def fleet_weak_scaling(full: bool = False):
 ALL = {
     "fleet_policies": fleet_policy_sweep,
     "fleet_depth": fleet_depth_sweep,
+    "fleet_placement": fleet_placement_sweep,
     "fleet_scale": fleet_weak_scaling,
 }

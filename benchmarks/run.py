@@ -26,8 +26,8 @@ def main() -> None:
         default=None,
         help="comma-separated group list (fig2..fig9, metadata, cache_py, "
         "cache_jax, cache_pallas, kernel_vs_jax, cdn, cdn_router, cdn_topo, "
-        "fleet_policies, fleet_depth, fleet_scale, serving_energy, roofline, "
-        "cache_roofline) — see docs/benchmarks.md",
+        "fleet_policies, fleet_depth, fleet_placement, fleet_scale, "
+        "serving_energy, roofline, cache_roofline) — see docs/benchmarks.md",
     )
     ap.add_argument(
         "--record",

@@ -11,6 +11,16 @@ unchanged — E edges run the branch-free ``jax_cache.step`` in parallel via
 stream — so results are bit-identical to the pre-fleet implementation
 (asserted against the pure-Python oracle in tests/test_cdn.py).
 
+A ``HierarchySpec`` always maps to an all-``lce`` (leave-copy-everywhere)
+tree: on the fill path both tiers are offered the object and each tier's
+*own policy admission* decides what sticks (a PLFUA edge still rejects
+non-hot objects, a TinyLFU parent still runs its duel) — "copy everywhere"
+here names where the fill is *offered*, not an unconditional store. The
+other cross-tier placements (``lcd`` / ``prob(p)`` / ``admit``,
+:mod:`repro.fleet.placement`) and per-level routers live on the general
+``Topology``; build one directly (or via ``spec.topology()`` plus
+``dataclasses.replace``) to study them on a two-tier shape.
+
 Edges may differ in capacity / hot size (traced per-edge ``cap`` override in
 ``jax_cache.step``; per-edge ``hot`` masks live in the stacked state) but must
 share ``kind``, ``n_objects`` and ``window`` so their states stack.

@@ -24,6 +24,12 @@ import numpy as np
 
 ROUTER_MODES = ("hash", "sticky", "round_robin")
 
+#: per-level router sentinel: follow the topology's static parent map instead
+#: of routing (valid for every level but the edge tier). See
+#: ``repro.fleet.Topology.routers``.
+TREE = "tree"
+LEVEL_ROUTER_MODES = ROUTER_MODES + (TREE,)
+
 _SEED_STRIDE = 1_000_003
 
 _MIX_MULT = np.uint64(0xFF51AFD7ED558CCD)
@@ -69,6 +75,84 @@ def route(
     return np.ascontiguousarray(assign.astype(np.int32))
 
 
+def route_level(
+    trace,
+    n_nodes: int,
+    mode: str = "hash",
+    *,
+    session_len: int = 64,
+    seed: int = 0,
+    xp=np,
+):
+    """32-bit (lowbias32) router over one tier's ``n_nodes`` nodes, generic
+    over ``xp`` (numpy or jax.numpy) with **bit-identical** partitions.
+
+    This is the per-level routing primitive: non-edge tiers of a
+    ``repro.fleet.Topology`` with a router kind (instead of the static
+    parent map) derive their node assignment from it *inside* the jitted
+    simulator, and the pure-Python reference oracle replays the exact same
+    assignment host-side — which is only possible because the hash is the
+    shared pure-uint32 lowbias32 mixer (``core.sketch``), not the host
+    router's 64-bit avalanche (unavailable under JAX's default x64-off).
+    """
+    from repro.core.sketch import _mix32
+
+    if n_nodes < 1:
+        raise ValueError(f"n_nodes must be >= 1, got {n_nodes}")
+    T = trace.shape[-1]
+    salt = xp.uint32(np.uint32(np.int64(seed) * _SEED_STRIDE & 0xFFFFFFFF))
+    if mode == "round_robin":
+        assign = xp.broadcast_to(
+            xp.arange(T, dtype=xp.int32) % n_nodes, trace.shape
+        )
+    elif mode == "hash":
+        h = _mix32(trace.astype(xp.uint32) + salt, xp)
+        assign = h % xp.uint32(n_nodes)
+    elif mode == "sticky":
+        if session_len < 1:
+            raise ValueError(f"session_len must be >= 1, got {session_len}")
+        block = (xp.arange(T, dtype=xp.int32) // session_len).astype(xp.uint32)
+        assign = xp.broadcast_to(
+            _mix32(block + salt, xp) % xp.uint32(n_nodes), trace.shape
+        )
+    else:
+        raise ValueError(f"unknown router mode {mode!r}; expected one of {ROUTER_MODES}")
+    return assign.astype(xp.int32)
+
+
+def route_point(
+    mode: str,
+    obj_id: int,
+    t: int,
+    n_nodes: int,
+    *,
+    session_len: int = 64,
+    seed: int = 0,
+) -> int:
+    """One request's node under :func:`route_level` semantics (host scalar).
+
+    The serving front (``repro.serving.fleet_cache``) routes each lookup's
+    climb per level with this — same mixer, same salts — so a served fleet
+    partitions its upper tiers exactly as the simulator does."""
+    from repro.core.sketch import _mix32
+
+    if n_nodes < 1:
+        raise ValueError(f"n_nodes must be >= 1, got {n_nodes}")
+    if mode == "round_robin":
+        return int(t % n_nodes)
+    salt = np.uint32(np.int64(seed) * _SEED_STRIDE & 0xFFFFFFFF)
+    if mode == "hash":
+        key = obj_id
+    elif mode == "sticky":
+        if session_len < 1:
+            raise ValueError(f"session_len must be >= 1, got {session_len}")
+        key = t // session_len
+    else:
+        raise ValueError(f"unknown router mode {mode!r}; expected one of {ROUTER_MODES}")
+    # 1-element array: uint32 wrap-around is silent for arrays, warned for scalars
+    return int(_mix32(np.asarray([key], np.uint32) + salt, np)[0] % np.uint32(n_nodes))
+
+
 def route_device(
     trace,
     n_edges: int,
@@ -81,34 +165,14 @@ def route_device(
     on-device trace-generation path routes freshly synthesized chunks without
     a host round-trip).
 
-    Hash/sticky use the shared 32-bit lowbias mixer (JAX runs with x64 off,
-    so the host router's 64-bit avalanche is unavailable): partitions are
-    equally deterministic/uniform but *differ* from the host ``route``.
-    Parity tests always carry the assignment array with the results, so
-    oracle comparisons stay exact either way.
+    Hash/sticky use the shared 32-bit lowbias mixer via :func:`route_level`
+    (JAX runs with x64 off, so the host router's 64-bit avalanche is
+    unavailable): partitions are equally deterministic/uniform but *differ*
+    from the host ``route``. Parity tests always carry the assignment array
+    with the results, so oracle comparisons stay exact either way.
     """
     import jax.numpy as jnp
 
-    from repro.core.sketch import _mix32
-
-    if n_edges < 1:
-        raise ValueError(f"n_edges must be >= 1, got {n_edges}")
-    T = trace.shape[-1]
-    salt = jnp.uint32(np.uint32(np.int64(seed) * _SEED_STRIDE & 0xFFFFFFFF))
-    if mode == "round_robin":
-        assign = jnp.broadcast_to(
-            jnp.arange(T, dtype=jnp.int32) % n_edges, trace.shape
-        )
-    elif mode == "hash":
-        h = _mix32(trace.astype(jnp.uint32) + salt, jnp)
-        assign = h % jnp.uint32(n_edges)
-    elif mode == "sticky":
-        if session_len < 1:
-            raise ValueError(f"session_len must be >= 1, got {session_len}")
-        block = (jnp.arange(T, dtype=jnp.int32) // session_len).astype(jnp.uint32)
-        assign = jnp.broadcast_to(
-            _mix32(block + salt, jnp) % jnp.uint32(n_edges), trace.shape
-        )
-    else:
-        raise ValueError(f"unknown router mode {mode!r}; expected one of {ROUTER_MODES}")
-    return assign.astype(jnp.int32)
+    return route_level(
+        trace, n_edges, mode, session_len=session_len, seed=seed, xp=jnp
+    )

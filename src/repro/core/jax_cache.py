@@ -121,17 +121,32 @@ def _masked_argmin(values: jax.Array, mask: jax.Array) -> jax.Array:
     return jnp.argmin(jnp.where(mask, values, _I32_MAX)).astype(jnp.int32)
 
 
-def step(spec: PolicySpec, state: dict[str, jax.Array], x: jax.Array, cap: jax.Array | None = None):
+def step(
+    spec: PolicySpec,
+    state: dict[str, jax.Array],
+    x: jax.Array,
+    cap: jax.Array | None = None,
+    fill: jax.Array | None = None,
+):
     """One request. Returns (new_state, hit: bool). Order of operations matches
     the Python reference exactly (see tests/test_jax_cache.py).
 
     ``cap`` optionally overrides ``spec.capacity`` with a *traced* value so a
     fleet of edges sharing one compiled step can differ in cache size
-    (repro.cdn vmaps this step over edge nodes)."""
+    (repro.cdn vmaps this step over edge nodes).
+
+    ``fill`` optionally gates *insertion* (and the eviction that makes room
+    for it) — the fleet's cross-tier placement hook (repro.fleet.placement):
+    with ``fill`` False a miss still updates policy metadata (window slide,
+    sketch feed, parked-frequency bump — the tier saw the demand) but the
+    object is not stored. In-memory LFU is the exception: its metadata only
+    exists while cached, so an unfilled miss leaves no trace. ``fill=None``
+    means unconditional insertion (the flat-cache behaviour)."""
     x = x.astype(jnp.int32)
     in_cache = state["in_cache"]
     count = state["count"]
     cap = jnp.int32(spec.capacity) if cap is None else jnp.asarray(cap, jnp.int32)
+    fill = jnp.bool_(True) if fill is None else jnp.asarray(fill, jnp.bool_)
 
     if spec.kind == "wlfu":
         # Slide the window *before* the hit test, as the reference does.
@@ -142,22 +157,24 @@ def step(spec: PolicySpec, state: dict[str, jax.Array], x: jax.Array, cap: jax.A
         ptr = (ptr + 1) % spec.window
         freq = freq.at[x].add(1)
         hit = in_cache[x]
-        need_evict = (~hit) & (count >= cap)
+        insert = (~hit) & fill
+        need_evict = insert & (count >= cap)
         victim = _masked_argmin(freq, in_cache)
         in_cache = in_cache.at[victim].set(in_cache[victim] & ~need_evict)
-        in_cache = in_cache.at[x].set(True)
-        count = count + jnp.where(hit, 0, 1) - need_evict.astype(jnp.int32)
+        in_cache = in_cache.at[x].set(in_cache[x] | insert)
+        count = count + insert.astype(jnp.int32) - need_evict.astype(jnp.int32)
         return dict(in_cache=in_cache, count=count, freq=freq, ring=ring, ptr=ptr), hit
 
     if spec.kind == "lru":
         last, t = state["last"], state["t"]
         hit = in_cache[x]
-        need_evict = (~hit) & (count >= cap)
+        insert = (~hit) & fill
+        need_evict = insert & (count >= cap)
         victim = _masked_argmin(last, in_cache)
         in_cache = in_cache.at[victim].set(in_cache[victim] & ~need_evict)
-        in_cache = in_cache.at[x].set(True)
+        in_cache = in_cache.at[x].set(in_cache[x] | insert)
         last = last.at[x].set(t)
-        count = count + jnp.where(hit, 0, 1) - need_evict.astype(jnp.int32)
+        count = count + insert.astype(jnp.int32) - need_evict.astype(jnp.int32)
         return dict(in_cache=in_cache, count=count, last=last, t=t + 1), hit
 
     if spec.kind == "tinylfu":
@@ -194,8 +211,8 @@ def step(spec: PolicySpec, state: dict[str, jax.Array], x: jax.Array, cap: jax.A
             est_x = est_x + sketch.bloom_contains(bloom, bidx).astype(jnp.int32)
             est_v = est_v + sketch.bloom_contains(bloom, btab[victim]).astype(jnp.int32)
         admit = est_x > est_v
-        insert = (~hit) & ((~full) | admit)
-        need_evict = (~hit) & full & admit
+        insert = (~hit) & ((~full) | admit) & fill
+        need_evict = (~hit) & full & admit & fill
         in_cache = in_cache.at[victim].set(in_cache[victim] & ~need_evict)
         # LFU eviction semantics: metadata dies with the victim, entry restarts at 1
         freq = freq.at[victim].set(jnp.where(need_evict, 0, freq[victim]))
@@ -228,8 +245,12 @@ def step(spec: PolicySpec, state: dict[str, jax.Array], x: jax.Array, cap: jax.A
         admitted = state["hot"][x]
     else:
         admitted = jnp.bool_(True)
-    touch = hit | admitted
-    need_evict = (~hit) & admitted & (count >= cap)
+    insert = (~hit) & admitted & fill
+    # an unfilled admitted miss still bumps the parked frequency (demand
+    # evidence for the tier) — except in-memory LFU, whose metadata exists
+    # only while cached, so its touch is gated on the actual insert
+    touch = hit | (insert if spec.kind == "lfu" else admitted)
+    need_evict = insert & (count >= cap)
     victim = _masked_argmin(freq, in_cache)
     in_cache = in_cache.at[victim].set(in_cache[victim] & ~need_evict)
     if spec.kind == "lfu":
@@ -238,7 +259,6 @@ def step(spec: PolicySpec, state: dict[str, jax.Array], x: jax.Array, cap: jax.A
     # PLFU/PLFUA: freq[x] of a non-cached object *is* the parked-list entry,
     # so `freq[x] + 1` resumes from it; for LFU it is guaranteed zero.
     freq = freq.at[x].set(jnp.where(touch, freq[x] + 1, freq[x]))
-    insert = (~hit) & admitted
     in_cache = in_cache.at[x].set(in_cache[x] | insert)
     count = count + insert.astype(jnp.int32) - need_evict.astype(jnp.int32)
     out = dict(in_cache=in_cache, count=count, freq=freq)

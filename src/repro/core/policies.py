@@ -66,8 +66,16 @@ class CachePolicy:
         self.evictions = 0
 
     # -- interface -----------------------------------------------------------
-    def request(self, x: int) -> bool:
-        """Process one request; returns True on hit."""
+    def request(self, x: int, fill: bool = True) -> bool:
+        """Process one request; returns True on hit.
+
+        ``fill`` gates *insertion only* (the fleet's cross-tier placement
+        hook, :mod:`repro.fleet.placement`): with ``fill=False`` a miss still
+        updates the policy's demand metadata (window slide, sketch feed,
+        parked-frequency bump) but the object is not stored — except
+        in-memory LFU, whose metadata dies with the object, so an unfilled
+        miss leaves no trace. Mirrors the ``fill`` argument of
+        ``core.jax_cache.step`` decision-for-decision."""
         raise NotImplementedError
 
     def contains(self, x: int) -> bool:
@@ -97,13 +105,15 @@ class LRUCache(CachePolicy):
         super().__init__(capacity)
         self._od: OrderedDict[int, None] = OrderedDict()
 
-    def request(self, x: int) -> bool:
+    def request(self, x: int, fill: bool = True) -> bool:
         od = self._od
         if x in od:
             od.move_to_end(x)
             self.hits += 1
             return True
         self.misses += 1
+        if not fill:
+            return False
         if len(od) >= self.capacity:
             od.popitem(last=False)
             self.evictions += 1
@@ -167,7 +177,7 @@ class LFUCache(_HeapLFUBase):
 
     name = "lfu"
 
-    def request(self, x: int) -> bool:
+    def request(self, x: int, fill: bool = True) -> bool:
         freq = self._freq
         f = freq.get(x)
         if f is not None:
@@ -175,6 +185,8 @@ class LFUCache(_HeapLFUBase):
             self._bump(x, f + 1)
             return True
         self.misses += 1
+        if not fill:
+            return False  # in-memory LFU: no metadata without the object
         if len(freq) >= self.capacity:
             self._evict_min()
         self._bump(x, 1)  # frequency recommences from 1 (paper §2.1)
@@ -194,7 +206,7 @@ class PLFUCache(_HeapLFUBase):
         super().__init__(capacity, evict=evict)
         self._parked: dict[int, int] = {}  # evicted object -> last frequency
 
-    def request(self, x: int) -> bool:
+    def request(self, x: int, fill: bool = True) -> bool:
         freq = self._freq
         f = freq.get(x)
         if f is not None:
@@ -202,6 +214,11 @@ class PLFUCache(_HeapLFUBase):
             self._bump(x, f + 1)
             return True
         self.misses += 1
+        if not fill:
+            # demand evidence accumulates in the parked-list even when
+            # placement withholds the copy — promotion resumes from it
+            self._parked[x] = self._parked.get(x, 0) + 1
+            return False
         if len(freq) >= self.capacity:
             victim_f = self._freq_of_min()
             victim = self._evict_min()
@@ -242,9 +259,9 @@ class PLFUACache(CachePolicy):
         self._hot = frozenset(int(h) for h in hot)
         self._plfu = PLFUCache(capacity)
 
-    def request(self, x: int) -> bool:
+    def request(self, x: int, fill: bool = True) -> bool:
         if x in self._hot:
-            hit = self._plfu.request(x)
+            hit = self._plfu.request(x, fill=fill)
         else:
             hit = False
             self._plfu.misses += 1  # non-admitted request is still a miss
@@ -282,7 +299,7 @@ class WLFUCache(CachePolicy):
         self._ptr = 0
         self._cache: set[int] = set()
 
-    def request(self, x: int) -> bool:
+    def request(self, x: int, fill: bool = True) -> bool:
         wfreq = self._wfreq
         # slide the window
         old = self._ring[self._ptr]
@@ -300,6 +317,8 @@ class WLFUCache(CachePolicy):
             self.hits += 1
             return True
         self.misses += 1
+        if not fill:
+            return False
         if len(self._cache) >= self.capacity:
             victim = min(self._cache, key=lambda o: (wfreq.get(o, 0), o))
             self._cache.remove(victim)
@@ -353,7 +372,7 @@ class TinyLFUCache(_HeapLFUBase):
             est += 1
         return est
 
-    def request(self, x: int) -> bool:
+    def request(self, x: int, fill: bool = True) -> bool:
         if self._bloom is None or self._bloom.contains(x):
             self._sketch.add(x)
         else:
@@ -372,6 +391,8 @@ class TinyLFUCache(_HeapLFUBase):
             self._bump(x, f + 1)
             return True
         self.misses += 1
+        if not fill:
+            return False
         if len(freq) < self.capacity:
             self._bump(x, 1)
             return False
@@ -450,10 +471,10 @@ class DynamicPLFUACache(CachePolicy):
         self._sketch.halve()
         self._seen = 0
 
-    def request(self, x: int) -> bool:
+    def request(self, x: int, fill: bool = True) -> bool:
         self._sketch.add(x)
         if self._plfu.contains(x) or self._hot[x]:
-            hit = self._plfu.request(x)
+            hit = self._plfu.request(x, fill=fill)
         else:
             hit = False
             self._plfu.misses += 1  # non-admitted request is still a miss

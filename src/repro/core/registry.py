@@ -26,6 +26,10 @@ class PolicyInfo:
     jax: bool  # kind accepted by core.jax_cache (and the cdn hierarchy)
     pallas: bool  # kind accepted by kernels.cache_sim
     sketch: bool = False  # carries count-min-sketch state (core.sketch)
+    #: kind runs under fleet cross-tier placement gating (the ``fill`` gate
+    #: in jax_cache.step / core.policies; see repro.fleet.placement) — every
+    #: jax-capable kind does, asserted by the placement differential matrix
+    placement: bool = True
     description: str = ""
     #: tunable knobs the PolicySpec/kernel accept for this kind (the docs
     #: policy-support matrix is generated from these — see

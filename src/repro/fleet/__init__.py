@@ -12,12 +12,23 @@ report roll-ups.
     out = fleet.simulate_fleet_batch(topo, traces, assign)
     print(fleet.fleet_report(topo, out).rows())
 
-Multi-device: ``fleet.simulate_fleet_sharded`` splits the edge tier over a
-mesh (collective miss aggregation); ``fleet.simulate_fleet_device`` shards
-the sample axis with on-device trace generation (weak scaling). The legacy
-two-tier API in :mod:`repro.cdn` is a thin wrapper over depth-2 topologies.
+Cross-tier placement (``placements=`` per level: ``lce`` / ``lcd`` /
+``prob(p)`` / ``admit``, see :mod:`repro.fleet.placement`) decides which
+tiers store a copy on the fill path, and ``routers=`` picks a router kind
+per level (sticky edges over hashed regionals, or the ``"tree"`` parent
+map). Multi-device: ``fleet.simulate_fleet_sharded`` splits the edge tier
+over a mesh (collective miss aggregation); ``fleet.simulate_fleet_device``
+shards the sample axis with on-device trace generation (weak scaling) —
+both honour placement. The legacy two-tier API in :mod:`repro.cdn` is a
+thin wrapper over depth-2 topologies.
 """
-from repro.fleet.topology import Topology, from_hierarchy, tree
+from repro.fleet import placement
+from repro.fleet.topology import (
+    Topology,
+    from_hierarchy,
+    level_assignments,
+    tree,
+)
 from repro.fleet.sim import (
     masked_scan,
     simulate_fleet,
@@ -29,7 +40,13 @@ from repro.fleet.reference import (
     build_policy,
     simulate_fleet_reference,
 )
-from repro.fleet.report import FleetReport, TierReport, fleet_report, mgmt_ops
+from repro.fleet.report import (
+    FleetReport,
+    TierReport,
+    fleet_report,
+    mgmt_ops,
+    placement_ops,
+)
 from repro.fleet.shard import (
     fleet_mesh,
     mesh_size,
@@ -41,6 +58,9 @@ __all__ = [
     "Topology",
     "tree",
     "from_hierarchy",
+    "placement",
+    "placement_ops",
+    "level_assignments",
     "simulate_fleet",
     "simulate_fleet_batch",
     "simulate_fleet_sharded",

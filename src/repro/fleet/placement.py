@@ -1,0 +1,142 @@
+"""Cross-tier placement policies: where a missed object is re-inserted.
+
+When a request misses at level ``l`` and is eventually served at some level
+``s > l`` (or at the origin), every consulted tier below ``s`` sees the
+object travel back down the fill path. *Placement* decides which of those
+tiers store a copy — the knob that trades hit-rate against the management
+work (inserts, evictions, metadata churn) every fill burns, the paper's
+CPU-time-vs-CHR axis extended to a hierarchy:
+
+  * ``lce``      — leave-copy-everywhere: every consulted tier inserts
+                   (subject to its own policy admission). The default and
+                   the pre-placement behaviour of ``repro.fleet``.
+  * ``lcd``      — leave-copy-down: only the tier *directly below* the
+                   serving tier inserts, so objects descend one level per
+                   request [Laoutaris et al.]. The Zipf tail never reaches
+                   the edge, which is where the management savings live.
+  * ``prob(p)``  — probabilistic copy: the tier directly below the server
+                   always fills (the ``lcd`` floor), every other consulted
+                   tier fills with probability ``p``. ``prob(1.0)`` is
+                   bit-identical to ``lce`` and ``prob(0.0)`` to ``lcd``
+                   (asserted in tests/test_placement.py). The coin is a
+                   deterministic lowbias32 hash of (trace position, level),
+                   bit-identical in numpy and jnp, so runs are reproducible
+                   across processes and platforms.
+  * ``admit``    — sketch-gated placement: the level carries one count-min
+                   sketch per node (fed by every consulted request, aged by
+                   halving on a request window); a miss is filled only when
+                   the cache has room or the incoming object's estimate
+                   beats the current eviction victim's — TinyLFU's duel
+                   applied as a *placement* layer over any eviction kind.
+
+Placement gates **insertion only**. Metadata bookkeeping (PLFU parked
+frequencies, wlfu's window, tinylfu's sketch/bloom, LRU stamps) still runs
+on every consulted request, so a tier accumulates demand evidence for
+objects it has not yet stored — which is exactly what lets ``lcd`` promote
+an object with its accumulated parked frequency. Exception: in-memory LFU
+destroys metadata with the object, so an unfilled miss leaves no trace
+(``jax_cache.step`` and ``core.policies`` agree on this, see the ``fill``
+gate in both).
+
+Semantics are defined per *level*: ``Topology.placements`` names one
+placement per level, and for level ``l`` the fill condition given serving
+level ``serve`` (``L`` = origin) is as above with "directly below the
+server" meaning ``serve == l + 1``. The root tier is always directly below
+the origin, so ``lcd`` at the root behaves like ``lce`` there.
+"""
+from __future__ import annotations
+
+import re
+
+import numpy as np
+
+from repro.core import sketch
+
+__all__ = [
+    "PLACEMENT_KINDS",
+    "parse",
+    "validate",
+    "prob_fill",
+    "fill_hash_u32",
+    "admit_params",
+]
+
+#: base placement kinds; ``prob`` takes a parameter, spelled ``prob(p)``.
+PLACEMENT_KINDS = ("lce", "lcd", "prob", "admit")
+
+_PROB_RE = re.compile(r"^prob\(([0-9.eE+-]+)\)$")
+
+#: salt constants decorrelating the placement coin from every other lowbias32
+#: use in the repo (sketch buckets, bloom bits, routers).
+_T_SALT = 0x2545F491
+_LEVEL_SALT = 0x9E3779B9
+
+
+def parse(spec: str) -> tuple[str, float | None]:
+    """``"lce" | "lcd" | "admit" | "prob(p)"`` -> ``(kind, p-or-None)``."""
+    if not isinstance(spec, str):
+        raise ValueError(f"placement must be a string, got {spec!r}")
+    if spec in ("lce", "lcd", "admit"):
+        return spec, None
+    m = _PROB_RE.match(spec)
+    if m:
+        try:
+            p = float(m.group(1))
+        except ValueError:
+            p = None
+        if p is not None and 0.0 <= p <= 1.0:
+            return "prob", p
+        raise ValueError(f"prob placement needs p in [0, 1], got {spec!r}")
+    raise ValueError(
+        f"unknown placement {spec!r}; expected one of "
+        f"'lce', 'lcd', 'admit', or 'prob(p)' with p in [0, 1]"
+    )
+
+
+def validate(spec: str) -> str:
+    """Parse for effect; returns the spec unchanged (Topology validation)."""
+    parse(spec)
+    return spec
+
+
+def fill_hash_u32(t, level: int, xp=np):
+    """Deterministic uint32 coin for the ``prob(p)`` placement at trace
+    position ``t``, level ``level`` — pure uint32 lowbias32 arithmetic, so
+    numpy (reference oracle) and jnp (jitted simulator) agree bit for bit
+    and reruns across processes are identical (the determinism regression
+    in tests/test_placement.py pins exactly this)."""
+    u = xp.uint32
+    t_arr = xp.asarray(t, xp.uint32)
+    scalar = xp is np and t_arr.ndim == 0
+    if scalar:
+        t_arr = t_arr.reshape(1)  # array ops wrap silently; scalar ops warn
+    level_salt = ((level + 1) * _LEVEL_SALT) & 0xFFFFFFFF  # host-side wrap
+    key = (t_arr + u(1)) * u(_T_SALT)
+    key = key ^ u(level_salt)
+    mixed = sketch._mix32(key, xp)
+    return mixed[0] if scalar else mixed
+
+
+def prob_fill(t, level: int, p: float, xp=np):
+    """The ``prob(p)`` coin: True where the hash falls below ``p``'s
+    threshold. ``p`` is static config, so the degenerate ends collapse at
+    trace time — ``p >= 1`` is constant True (== lce) and ``p <= 0``
+    constant False (== lcd's floor only)."""
+    thr = int(round(float(p) * 4294967296.0))  # p * 2**32
+    shape = xp.shape(xp.asarray(t))
+    if thr >= 1 << 32:
+        return xp.ones(shape, bool) if shape else xp.asarray(True)
+    if thr <= 0:
+        return xp.zeros(shape, bool) if shape else xp.asarray(False)
+    return fill_hash_u32(t, level, xp) < xp.uint32(thr)
+
+
+def admit_params(level_specs) -> tuple[int, int]:
+    """(sketch width, aging window) of one level's *placement* sketch.
+
+    Derived from the level's first node (nodes of a level share kind /
+    n_objects / window by the stacked-state rule; the placement sketch is
+    likewise shared-shape so it stacks): the same capacity-driven
+    conventions TinyLFU uses for its own admission sketch."""
+    cap = level_specs[0].capacity
+    return sketch.default_width(cap), sketch.default_window(cap)

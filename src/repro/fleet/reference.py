@@ -3,13 +3,18 @@ fleet simulator.
 
 Builds every topology node from the paper-faithful policy objects in
 ``repro.core.policies`` and processes requests strictly in trace order:
-request -> assigned edge; on a miss the same request climbs the parent chain
-until some tier serves it (or it falls through to origin). Dynamic-PLFUA
-nodes refresh on *global* time (one timer per node, fired every
+request -> assigned node per level (edge assignment pushed up the parent
+tree, or each level's own router — the same xp-generic
+``topology.level_assignments`` the jitted simulator uses); the miss path is
+probed bottom-up to find the serving level, then every consulted tier
+applies its fill-gated update — ``lce`` / ``lcd`` / ``prob(p)`` / ``admit``
+cross-tier placement exactly as :mod:`repro.fleet.placement` defines it
+(and as the time-major jitted engine computes it). Dynamic-PLFUA nodes
+refresh on *global* time (one timer per node, fired every
 ``effective_refresh`` trace positions), matching the jitted simulator's
 chunked scan. Decision-for-decision equality (per-level hit sequences, final
-cache contents, eviction counts) is asserted in tests/test_fleet.py and, via
-the cdn wrapper, tests/test_cdn.py.
+cache contents, eviction counts) is asserted in tests/test_fleet.py,
+tests/test_placement.py and, via the cdn wrapper, tests/test_cdn.py.
 """
 from __future__ import annotations
 
@@ -17,11 +22,19 @@ import dataclasses
 
 import numpy as np
 
-from repro.core import policies
+from repro.core import policies, sketch
 from repro.core.jax_cache import PolicySpec
+from repro.fleet import placement as placement_mod
+from repro.fleet import topology as topo_mod
 from repro.fleet.topology import Topology
 
-__all__ = ["build_policy", "simulate_fleet_reference", "FleetReferenceResult"]
+__all__ = [
+    "build_policy",
+    "cache_count",
+    "peek_victim",
+    "simulate_fleet_reference",
+    "FleetReferenceResult",
+]
 
 
 def build_policy(spec: PolicySpec) -> policies.CachePolicy:
@@ -67,6 +80,33 @@ class FleetReferenceResult:
         ]
 
 
+def cache_count(pol: policies.CachePolicy) -> int:
+    """Number of cached objects (the policy-side ``count``)."""
+    if isinstance(pol, policies.LRUCache):
+        return len(pol._od)
+    if isinstance(pol, (policies.PLFUACache, policies.DynamicPLFUACache)):
+        return len(pol._plfu._freq)
+    if isinstance(pol, policies.WLFUCache):
+        return len(pol._cache)
+    return len(pol._freq)  # the _HeapLFUBase family
+
+
+def peek_victim(pol: policies.CachePolicy) -> int:
+    """The eviction candidate *without* evicting, with the jitted tier's
+    tie-breaking (min key, then lowest id) — the object the admit placement
+    duels against. Only meaningful when the cache is non-empty."""
+    if isinstance(pol, policies.LRUCache):
+        return next(iter(pol._od))  # front of the recency order
+    if isinstance(pol, (policies.PLFUACache, policies.DynamicPLFUACache)):
+        f = pol._plfu._freq
+        return min(f, key=lambda o: (f[o], o))
+    if isinstance(pol, policies.WLFUCache):
+        wf = pol._wfreq
+        return min(pol._cache, key=lambda o: (wf.get(o, 0), o))
+    f = pol._freq
+    return min(f, key=lambda o: (f[o], o))
+
+
 def simulate_fleet_reference(
     topo: Topology, trace: np.ndarray, assignment: np.ndarray
 ) -> FleetReferenceResult:
@@ -80,17 +120,60 @@ def simulate_fleet_reference(
             if isinstance(pol, policies.DynamicPLFUACache):
                 pol.external_refresh = True
                 timers.append((pol, spec.effective_refresh))
+    parsed = [placement_mod.parse(p) for p in topo.placements]
+    # admit placement: one count-min sketch + aging counter per node
+    admit_state: dict[int, list[dict]] = {}
+    for l, (pk, _) in enumerate(parsed):
+        if pk == "admit":
+            width, window = placement_mod.admit_params(topo.levels[l])
+            admit_state[l] = [
+                {"sk": sketch.CountMinSketch(width), "seen": 0, "window": window}
+                for _ in topo.levels[l]
+            ]
     T = len(trace)
     L = topo.n_levels
+    assigns = [
+        a.tolist()
+        for a in topo_mod.level_assignments(
+            topo, np.asarray(trace), np.asarray(assignment), xp=np
+        )
+    ]
     level_hit = [np.zeros(T, bool) for _ in range(L)]
-    for t, (x, e) in enumerate(zip(trace.tolist(), assignment.tolist())):
-        node = e
+    for t, x in enumerate(np.asarray(trace).tolist()):
+        nodes = [assigns[l][t] for l in range(L)]
+        # probe the miss path bottom-up (pre-update membership), exactly as
+        # the time-major engine does; serve == L means origin
+        serve = L
         for l in range(L):
-            if pols[l][node].request(x):
-                level_hit[l][t] = True
+            if pols[l][nodes[l]].contains(x):
+                serve = l
                 break
-            if l < L - 1:
-                node = topo.parents[l][node]
+        # every consulted tier (through the serving one) updates, with the
+        # level's placement gating insertion on the tiers that missed
+        for l in range(min(serve, L - 1) + 1):
+            node = nodes[l]
+            pol = pols[l][node]
+            pk, pp = parsed[l]
+            fill = True
+            if pk == "admit":
+                a = admit_state[l][node]
+                a["sk"].add(x)
+                a["seen"] += 1
+                if a["seen"] >= a["window"]:
+                    a["sk"].halve()
+                    a["seen"] = 0
+                if l < serve and cache_count(pol) >= topo.levels[l][node].capacity:
+                    v = peek_victim(pol)
+                    fill = a["sk"].estimate(x) > a["sk"].estimate(v)
+            elif l < serve:
+                if pk == "lcd":
+                    fill = serve == l + 1
+                elif pk == "prob":
+                    fill = serve == l + 1 or bool(
+                        placement_mod.prob_fill(t, l, pp, np)
+                    )
+            if pol.request(x, fill=fill):
+                level_hit[l][t] = True
         for pol, period in timers:
             if (t + 1) % period == 0:
                 pol.refresh_now()

@@ -16,6 +16,14 @@ the eviction inner loop, with the paper's two cost profiles:
 per dict/heap touch on the paper's Xeon Gold 6130) reproduces the right order
 of magnitude against core.simulate timings. It is a parameter, not a claim.
 
+Cross-tier placement (``Topology.placements``) is priced as a **distinct row
+per level** (``<level>:placement``): the fill-path writes each stored copy
+costs, plus the decision machinery (``prob``'s hash, ``admit``'s count-min
+duel). That separation is what makes the leave-copy-down-vs-everywhere
+trade visible — ``lcd`` buys its management savings by filling less, not by
+touching policy metadata less (see ``benchmarks.fleet_bench``'s
+``fleet_placement`` group).
+
 This module owns the cost model; ``repro.cdn.report`` re-exports it and wraps
 :func:`fleet_report` for the legacy two-tier result shape.
 """
@@ -29,6 +37,7 @@ import numpy as np
 
 from repro.core import energy, sketch
 from repro.core.jax_cache import PolicySpec
+from repro.fleet import placement as placement_mod
 from repro.fleet.topology import Topology
 
 __all__ = [
@@ -36,6 +45,7 @@ __all__ = [
     "FleetReport",
     "aggregate_tiers",
     "mgmt_ops",
+    "placement_ops",
     "fleet_report",
     "tier_report",
 ]
@@ -55,6 +65,41 @@ _REQ_OPS = {
 #: extra touches per *admitted* request (the PLFUA family meters metadata work
 #: only for the hot set — that asymmetry is the paper's §4 energy argument).
 _ADMITTED_OPS = {"plfua": 3.0, "plfua_dyn": 3.0}
+
+#: placement cost model (the fill path's own management work, priced as a
+#: distinct row per level so cross-tier placement trade-offs are visible):
+#: every fill writes the copy's index/bookkeeping entry; a ``prob`` decision
+#: pays one hash; an ``admit`` decision pays the count-min duel (the sketch
+#: feed on every consulted request plus two estimates per decision and the
+#: amortised halving — same convention as the tinylfu rows above).
+_PLACEMENT_WRITE_OPS = 2.0
+_PROB_DECISION_OPS = 1.0
+
+
+def placement_ops(
+    pl: str,
+    level_specs: tuple[PolicySpec, ...],
+    requests: float,
+    hits: float,
+    inserts: float,
+) -> float:
+    """Abstract placement-operation count for one level (aggregate).
+
+    ``requests - hits`` is the number of placement *decisions* (every
+    consulted miss is offered the object on the fill path, whatever tier
+    ends up serving it); ``inserts`` is the number of fills actually
+    performed."""
+    kind, _ = placement_mod.parse(pl)
+    decisions = max(0.0, requests - hits)
+    ops = _PLACEMENT_WRITE_OPS * inserts
+    if kind == "prob":
+        ops += _PROB_DECISION_OPS * decisions
+    elif kind == "admit":
+        width, window = placement_mod.admit_params(level_specs)
+        ops += float(sketch.DEPTH) * requests  # feed on every consult
+        ops += 2.0 * float(sketch.DEPTH) * decisions  # the duel's estimates
+        ops += requests / window * float(sketch.DEPTH * width)  # aging
+    return float(ops)
 
 
 def mgmt_ops(
@@ -195,6 +240,10 @@ class FleetReport:
     per_level: list[TierReport]  # aggregate per level
     n_requests: int
     origin_requests: int  # missed every tier -> fetched from origin
+    #: one row per level pricing the cross-tier placement machinery (fill
+    #: writes + decision cost; see placement_ops). ``requests`` on these
+    #: rows counts placement decisions, ``hits``/``evictions`` are 0.
+    per_level_placement: list[TierReport] = dataclasses.field(default_factory=list)
 
     @property
     def level_chr(self) -> list[float]:
@@ -213,21 +262,36 @@ class FleetReport:
 
     @property
     def mgmt_ops(self) -> float:
-        return sum(t.mgmt_ops for t in self.per_level)
+        return sum(t.mgmt_ops for t in self.per_level) + self.placement_ops
 
     @property
     def mgmt_cpu_s(self) -> float:
-        return sum(t.mgmt_cpu_s for t in self.per_level)
+        return sum(t.mgmt_cpu_s for t in self.per_level) + sum(
+            t.mgmt_cpu_s for t in self.per_level_placement
+        )
 
     @property
     def mgmt_energy_j(self) -> float:
-        return sum(t.mgmt_energy_j for t in self.per_level)
+        return sum(t.mgmt_energy_j for t in self.per_level) + sum(
+            t.mgmt_energy_j for t in self.per_level_placement
+        )
+
+    @property
+    def placement_ops(self) -> float:
+        return sum(t.mgmt_ops for t in self.per_level_placement)
+
+    @property
+    def placement_energy_j(self) -> float:
+        return sum(t.mgmt_energy_j for t in self.per_level_placement)
 
     def rows(self) -> list[dict]:
         out = []
-        for lvl, agg in zip(self.per_node, self.per_level):
+        pls = self.per_level_placement or [None] * len(self.per_level)
+        for lvl, agg, pl in zip(self.per_node, self.per_level, pls):
             out.extend(t.row() for t in lvl)
             out.append(agg.row())
+            if pl is not None:
+                out.append(pl.row())
         return out
 
 
@@ -249,6 +313,7 @@ def fleet_report(
     total_steps = float(edge_req.sum())
     per_node: list[list[TierReport]] = []
     per_level: list[TierReport] = []
+    per_level_placement: list[TierReport] = []
     for l, specs in enumerate(topo.levels):
         c = {k: np.asarray(v) for k, v in result["tiers"][l].items()}
         # collapse an optional sample axis, keeping the node axis (always last)
@@ -265,9 +330,29 @@ def fleet_report(
             for i in range(len(specs))
         ]
         per_node.append(nodes)
+        cap = sum(s.capacity for s in specs)
         per_level.append(
-            aggregate_tiers(
-                names[l], specs[0].kind, sum(s.capacity for s in specs), nodes
+            aggregate_tiers(names[l], specs[0].kind, cap, nodes)
+        )
+        # the distinct placement row: fill writes + decision machinery
+        requests = float(c["requests"].sum())
+        hits = float(c["hits"].sum())
+        inserts = float(c["inserts"].sum())
+        p_ops = placement_ops(
+            topo.placements[l], specs, requests, hits, inserts
+        )
+        p_cpu = p_ops * per_op_s
+        per_level_placement.append(
+            TierReport(
+                tier=f"{names[l]}:placement",
+                policy=topo.placements[l],
+                capacity=cap,
+                requests=int(requests - hits),  # placement decisions
+                hits=0,
+                evictions=0,
+                mgmt_ops=p_ops,
+                mgmt_cpu_s=p_cpu,
+                mgmt_energy_j=energy.mgmt_energy_j(p_cpu),
             )
         )
     n_requests = per_level[0].requests
@@ -277,4 +362,5 @@ def fleet_report(
         per_level=per_level,
         n_requests=n_requests,
         origin_requests=origin,
+        per_level_placement=per_level_placement,
     )

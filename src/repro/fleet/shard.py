@@ -90,7 +90,7 @@ def _edge_sharded_fn(topo: Topology, mesh: Mesh):
     def run(trace, assignment):
         trace = trace.astype(jnp.int32)
         assignment = assignment.astype(jnp.int32)
-        assigns = sim_mod.level_assignments(topo, assignment)
+        assigns = sim_mod.level_assignments(topo, trace, assignment)
         active0 = assigns[0][None, :] == jnp.arange(E, dtype=jnp.int32)[:, None]
         states0 = sim_mod.stack_level_state(specs0)
         caps0 = jnp.array([s.capacity for s in specs0], jnp.int32)
@@ -114,15 +114,97 @@ def _edge_sharded_fn(topo: Topology, mesh: Mesh):
     return run
 
 
+# ------------------------------------------- edge-sharded, placed topologies
+@functools.lru_cache(maxsize=None)
+def _edge_sharded_placed_fn(topo: Topology, mesh: Mesh):
+    """Edge-sharded execution of a placement-enabled topology.
+
+    Cross-tier placement couples the levels at every trace position, so the
+    whole time-major scan (``sim._placed_run``) moves *inside* the shard_map
+    body: each device carries its contiguous slice of the edge fleet plus a
+    replica of the upper tiers, and one ``psum`` per step rebuilds the
+    global edge-served bit (exactly one device owns the assigned edge).
+    Upper-tier updates are pure functions of replicated inputs, so every
+    device computes them identically — bit-parity with the single-device
+    placed engine is asserted in tests/test_placement.py."""
+    axis = mesh.axis_names[0]
+    D = mesh.shape[axis]
+    specs0 = topo.levels[0]
+    E = len(specs0)
+    if E % D:
+        raise ValueError(f"edge count {E} must divide over the {D}-device mesh")
+    L = topo.n_levels
+
+    def body(states0, caps0, trace, assigns):
+        states, pstates, fills, admitted, hit_lv = sim_mod._placed_run(
+            topo,
+            trace,
+            list(assigns),
+            level0_states=states0,
+            level0_caps=caps0,
+            edge_axis=axis,
+        )
+        return (
+            tuple(states),
+            pstates,
+            tuple(fills),
+            tuple(admitted),
+            tuple(hit_lv),
+        )
+
+    edge_or_rep = lambda l: P(axis) if l == 0 else P()
+    parsed_admit = [
+        l for l, p in enumerate(topo.placements) if p == "admit"
+    ]
+    out_specs = (
+        tuple(edge_or_rep(l) for l in range(L)),
+        {l: edge_or_rep(l) for l in parsed_admit},
+        tuple(edge_or_rep(l) for l in range(L)),
+        tuple(edge_or_rep(l) for l in range(L)),
+        tuple(P() for _ in range(L)),
+    )
+    sharded = shard_map(
+        body,
+        mesh=mesh,
+        in_specs=(P(axis), P(axis), P(), P()),
+        out_specs=out_specs,
+        check_rep=False,  # upper tiers are replicated by construction (the
+        # per-step psum), which the rep checker cannot see through the scan
+    )
+
+    @jax.jit
+    def run(trace, assignment):
+        trace = trace.astype(jnp.int32)
+        assignment = assignment.astype(jnp.int32)
+        assigns = sim_mod.level_assignments(topo, trace, assignment)
+        states0 = sim_mod.stack_level_state(specs0)
+        caps0 = jnp.array([s.capacity for s in specs0], jnp.int32)
+        states, pstates, fills, admitted, hit_lv = sharded(
+            states0, caps0, trace, tuple(assigns)
+        )
+        return sim_mod.assemble_placed(
+            topo, assigns, list(states), pstates, list(fills),
+            list(admitted), list(hit_lv),
+        )
+
+    return run
+
+
 def simulate_fleet_sharded(
     topo: Topology, trace: jax.Array, assignment: jax.Array, mesh: Mesh | None = None
 ):
     """Edge-sharded fleet run; same result pytree as ``simulate_fleet``.
 
     Falls back to the single-device vmap path when ``mesh`` is absent or has
-    one device (the documented single-device fallback)."""
+    one device (the documented single-device fallback). Placement-enabled
+    topologies run the time-major scan inside the mesh (see
+    ``_edge_sharded_placed_fn``); sample-sharded execution
+    (``simulate_fleet_device``) honours placement automatically — every
+    sample replica dispatches through ``sim._simulate_fleet_impl``."""
     if mesh_size(mesh) == 1:
         return sim_mod.simulate_fleet(topo, trace, assignment)
+    if topo.has_placement:
+        return _edge_sharded_placed_fn(topo, mesh)(trace, assignment)
     return _edge_sharded_fn(topo, mesh)(trace, assignment)
 
 

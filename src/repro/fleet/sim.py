@@ -1,29 +1,51 @@
 """Jitted N-tier fleet simulator: one device launch per topology.
 
-Every level runs the branch-free ``jax_cache.step`` as a single vmapped,
-masked scan over its nodes: node ``i`` at level ``l`` is *active* at trace
-position ``t`` iff the request routed to it (the edge assignment pushed up
-the parent tree) **and** no level below served it — i.e. each tier consumes
-exactly the interleaved miss stream of its children, in true request order.
-State updates freeze under a ``where`` when inactive, so the whole topology
-is fixed-shape, jittable, and vmaps over trace samples.
+Two engines share this module, selected statically per topology:
+
+* **Level-major** (all-lce placements, the default): every level runs the
+  branch-free ``jax_cache.step`` as a single vmapped, masked scan over its
+  nodes: node ``i`` at level ``l`` is *active* at trace position ``t`` iff
+  the request routed to it (the edge assignment pushed up the parent tree)
+  **and** no level below served it — i.e. each tier consumes exactly the
+  interleaved miss stream of its children, in true request order. State
+  updates freeze under a ``where`` when inactive, so the whole topology is
+  fixed-shape, jittable, and vmaps over trace samples.
+
+* **Time-major** (any non-lce placement, :mod:`repro.fleet.placement`):
+  cross-tier placement makes a tier's insert decision depend on *where the
+  request was served above it* — information that only exists after the
+  upper tiers' hit tests at the same trace position, so the per-level
+  full-trace scans no longer factorise. The placed engine scans *time*
+  instead: each step probes the miss path bottom-up (pre-update membership
+  gathers), resolves the serving level, then applies fill-gated ``step``
+  updates to the one consulted node per level. plfua_dyn's global-time
+  hot-set refresh keeps its chunked hoisting: the time scan runs in chunks
+  of the gcd of all plfua_dyn refresh periods and refreshes at chunk
+  boundaries whose global position is a whole multiple of each level's
+  period (partial tail periods never fire, as in ``_chunked_scan``).
+  ``prob(1.0)`` topologies reproduce the level-major engine bit for bit
+  (asserted in tests/test_placement.py) — the cross-validation between the
+  two engines.
 
 Decision parity: :mod:`repro.fleet.reference` runs the same topology with the
 paper's pure-Python policy objects; tests assert identical per-level hit
-sequences, final cache contents, and eviction counts (tests/test_fleet.py).
-``repro.cdn.simulate_hierarchy`` is now a thin depth-2 wrapper over this
-module.
+sequences, final cache contents, and eviction counts (tests/test_fleet.py,
+tests/test_placement.py). ``repro.cdn.simulate_hierarchy`` is now a thin
+depth-2 wrapper over this module.
 """
 from __future__ import annotations
 
 import functools
+import math
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import jax_cache
+from repro.core import jax_cache, sketch
 from repro.core.jax_cache import PolicySpec
+from repro.fleet import placement as placement_mod
+from repro.fleet import topology as topo_mod
 from repro.fleet.topology import Topology
 
 __all__ = [
@@ -83,13 +105,13 @@ def tier_counters(spec: PolicySpec, hits, active, trace, state):
     }
 
 
-def level_assignments(topo: Topology, assignment: jax.Array) -> list[jax.Array]:
-    """Edge assignment pushed up the tree: one (T,) node-index array per level
-    (the parent maps are static tuples, folded into the jit as constants)."""
-    outs = [assignment]
-    for pmap in topo.parents:
-        outs.append(jnp.asarray(np.asarray(pmap, np.int32))[outs[-1]])
-    return outs
+def level_assignments(topo: Topology, trace: jax.Array, assignment: jax.Array) -> list[jax.Array]:
+    """Per-level node assignment, one (T,) int32 per level: the edge
+    assignment pushed up the parent tree for ``"tree"`` levels (parent maps
+    are static tuples, folded into the jit as constants), or the level's own
+    router for routed tiers — the jnp instantiation of the xp-generic
+    :func:`repro.fleet.topology.level_assignments` the oracle replays."""
+    return topo_mod.level_assignments(topo, trace, assignment, xp=jnp)
 
 
 def stack_level_state(specs: tuple[PolicySpec, ...]):
@@ -136,9 +158,13 @@ def upper_levels(topo: Topology, trace, assigns, demand):
 
 
 def _simulate_fleet_impl(topo: Topology, trace, assignment):
+    if topo.has_placement:
+        # non-lce placement couples the levels at each trace position ->
+        # the time-major engine (see module docstring)
+        return _simulate_placed_impl(topo, trace, assignment)
     trace = trace.astype(jnp.int32)
     assignment = assignment.astype(jnp.int32)
-    assigns = level_assignments(topo, assignment)
+    assigns = level_assignments(topo, trace, assignment)
 
     specs0 = topo.levels[0]
     E = len(specs0)
@@ -165,6 +191,304 @@ def _simulate_fleet_impl(topo: Topology, trace, assignment):
         # (T,) bool: missed every tier -> fetched from origin
         "origin_miss": demand,
     }
+
+
+# ------------------------------------------------- time-major placed engine
+def _victim_key(spec: PolicySpec, state):
+    """The array whose masked argmin is the node's eviction candidate —
+    recency stamps for LRU, (windowed/parked) frequency for everyone else.
+
+    The admit placement duels against the candidate of the *pre-request*
+    state (the reference oracle's ``peek_victim`` reads the same snapshot).
+    For every kind but wlfu this is exactly the victim ``jax_cache.step``
+    would evict; wlfu slides its window before evicting, so in the corner
+    case where that slide demotes a different cached object the duel's
+    candidate and the step's victim can differ — a deliberate, documented
+    pick (duelling pre-state keeps the gate computable without replaying
+    the slide), identical across the jitted engine and the oracle.
+    """
+    return state["last"] if spec.kind == "lru" else state["freq"]
+
+
+def _dyn_chunk(topo: Topology) -> int | None:
+    """Chunk length of the placed time scan: the gcd of every plfua_dyn
+    level's refresh period (their global-time refreshes all land on chunk
+    boundaries), or None when no level needs one."""
+    periods = [
+        lvl[0].effective_refresh
+        for lvl in topo.levels
+        if lvl[0].kind == "plfua_dyn"
+    ]
+    if not periods:
+        return None
+    g = periods[0]
+    for p in periods[1:]:
+        g = math.gcd(g, p)
+    return g
+
+
+def _placed_run(
+    topo: Topology,
+    trace,
+    assigns,
+    *,
+    level0_states=None,
+    level0_caps=None,
+    edge_axis: str | None = None,
+):
+    """The time-major scan shared by the single-device and edge-sharded
+    placed paths. ``trace`` (T,) int32, ``assigns`` one (T,) int32 per level.
+
+    With ``edge_axis`` set this runs *inside* a shard_map body: the level-0
+    stacked state/caps hold only this device's contiguous slice of edges
+    (``level0_states`` / ``level0_caps``), the probe rebuilds the global
+    edge-served bit with one ``psum`` per step, and upper levels run
+    replicated (identical on every device, being pure functions of
+    replicated inputs).
+
+    Returns ``(states, pstates, fills, admitted, hit_lv)`` where ``hit_lv``
+    is one (T,) bool per level, ``fills``/``admitted`` one (K_l,) int32 per
+    level (level 0 local in the sharded case), and ``pstates`` maps admit
+    levels to their placement-sketch state.
+    """
+    L = topo.n_levels
+    (T,) = trace.shape
+    specs = [lvl[0] for lvl in topo.levels]
+    parsed = [placement_mod.parse(p) for p in topo.placements]
+
+    states = [stack_level_state(lvl) for lvl in topo.levels]
+    caps = [jnp.array([s.capacity for s in lvl], jnp.int32) for lvl in topo.levels]
+    if level0_states is not None:
+        states[0] = level0_states
+    if level0_caps is not None:
+        caps[0] = level0_caps
+    n_local = int(states[0]["count"].shape[0])  # E, or E/D under a mesh
+
+    # admit placement: host-side bucket constants + per-node sketch state
+    admit_tables: dict[int, jax.Array] = {}
+    admit_windows: dict[int, int] = {}
+    pstates: dict[int, dict] = {}
+    for l, (pk, _) in enumerate(parsed):
+        if pk != "admit":
+            continue
+        width, window = placement_mod.admit_params(topo.levels[l])
+        admit_tables[l] = jnp.asarray(
+            sketch.bucket_table(np.arange(topo.n_objects), width)
+        )
+        admit_windows[l] = window
+        K = n_local if l == 0 else len(topo.levels[l])
+        pstates[l] = dict(
+            rows=jnp.zeros((K, sketch.DEPTH, width), jnp.int32),
+            seen=jnp.zeros((K,), jnp.int32),
+        )
+    fills = [
+        jnp.zeros((int(states[l]["count"].shape[0]),), jnp.int32) for l in range(L)
+    ]
+    admitted = [jnp.zeros_like(f) for f in fills]
+
+    def step_t(carry, inp):
+        states, pstates, fills, admitted = carry
+        t, x, valid, nodes = inp
+        # ---- probe the miss path bottom-up on pre-update membership
+        consulted, hits = [], []
+        demand = valid
+        if edge_axis is not None:
+            offset = jax.lax.axis_index(edge_axis).astype(jnp.int32) * n_local
+            local0 = nodes[0] - offset
+            own0 = (local0 >= 0) & (local0 < n_local)
+            node0 = jnp.clip(local0, 0, n_local - 1)
+        else:
+            own0, node0 = jnp.bool_(True), nodes[0]
+        for l in range(L):
+            if l == 0:
+                in_c = own0 & states[0]["in_cache"][node0, x]
+                if edge_axis is not None:
+                    # one collective rebuilds the global edge-served bit
+                    # (exactly one device owns the assigned edge)
+                    in_c = jax.lax.psum(in_c.astype(jnp.int32), edge_axis) > 0
+            else:
+                in_c = states[l]["in_cache"][nodes[l], x]
+            consulted.append(demand)
+            hits.append(demand & in_c)
+            demand = demand & ~in_c
+        serve = jnp.int32(L)  # L = served at origin
+        for l in reversed(range(L)):
+            serve = jnp.where(hits[l], jnp.int32(l), serve)
+        # ---- fill-gated update of the one consulted node per level
+        new_states, new_fills, new_admitted = [], [], []
+        new_pstates = dict(pstates)
+        for l in range(L):
+            spec = specs[l]
+            node = node0 if l == 0 else nodes[l]
+            act = consulted[l] & (own0 if l == 0 else True)
+            st = jax.tree_util.tree_map(lambda a: a[node], states[l])
+            cap = caps[l][node]
+            pk, pp = parsed[l]
+            if pk == "lce":
+                fill = None
+            elif pk == "lcd":
+                fill = serve == l + 1
+            elif pk == "prob":
+                fill = (serve == l + 1) | placement_mod.prob_fill(t, l, pp, jnp)
+            else:  # admit: feed + age the placement sketch, then duel
+                ps = pstates[l]
+                idx = admit_tables[l][x]
+                rows = sketch.rows_add(ps["rows"][node], idx)
+                seen = ps["seen"][node] + 1
+                age = seen >= admit_windows[l]
+                rows = jnp.where(age, sketch.rows_halve(rows), rows)
+                seen = jnp.where(age, 0, seen)
+                victim = jax_cache._masked_argmin(
+                    _victim_key(spec, st), st["in_cache"]
+                )
+                full = st["count"] >= cap
+                est_x = sketch.rows_estimate(rows, idx)
+                est_v = sketch.rows_estimate(rows, admit_tables[l][victim])
+                fill = (~full) | (est_x > est_v)
+                new_pstates[l] = dict(
+                    rows=ps["rows"].at[node].set(
+                        jnp.where(act, rows, ps["rows"][node])
+                    ),
+                    seen=ps["seen"].at[node].set(
+                        jnp.where(act, seen, ps["seen"][node])
+                    ),
+                )
+            ns, hit = jax_cache.step(spec, st, x, cap, fill=fill)
+            insert = act & (~hit) & ns["in_cache"][x]
+            new_states.append(
+                jax.tree_util.tree_map(
+                    lambda old, new: old.at[node].set(
+                        jnp.where(act, new, old[node])
+                    ),
+                    states[l],
+                    ns,
+                )
+            )
+            new_fills.append(fills[l].at[node].add(insert.astype(jnp.int32)))
+            # same admitted_requests conventions as tier_counters
+            if spec.kind == "plfua":
+                adm = act & st["hot"][x]
+            elif spec.kind in jax_cache.SKETCH_POLICY_KINDS:
+                adm = (act & hit) | insert
+            else:
+                adm = act
+            new_admitted.append(
+                admitted[l].at[node].add(adm.astype(jnp.int32))
+            )
+        carry = (
+            tuple(new_states),
+            new_pstates,
+            tuple(new_fills),
+            tuple(new_admitted),
+        )
+        return carry, tuple(hits)
+
+    # chunked over the gcd of the plfua_dyn refresh periods so the
+    # estimate-all + top-k stays amortised (cf. jax_cache._chunked_scan)
+    dyn_levels = [l for l in range(L) if specs[l].kind == "plfua_dyn"]
+    G = _dyn_chunk(topo) or T
+    n_chunks = -(-T // G)
+    pad = n_chunks * G - T
+    t_arr = jnp.arange(n_chunks * G, dtype=jnp.int32)
+    x_p = jnp.concatenate([trace, jnp.zeros((pad,), jnp.int32)])
+    valid_p = jnp.concatenate(
+        [jnp.ones((T,), jnp.bool_), jnp.zeros((pad,), jnp.bool_)]
+    )
+    assigns_p = tuple(
+        jnp.concatenate([a, jnp.zeros((pad,), jnp.int32)]) for a in assigns
+    )
+    # a refresh fires only at boundaries that are whole multiples of the
+    # level's own period *and* lie within the real trace (no partial tail)
+    fire = np.array(
+        [
+            [
+                (c + 1) * G <= T
+                and ((c + 1) * G) % specs[l].effective_refresh == 0
+                for l in dyn_levels
+            ]
+            for c in range(n_chunks)
+        ],
+        bool,
+    ).reshape(n_chunks, len(dyn_levels))
+
+    def chunk_fn(carry, inp):
+        xs, fire_c = inp
+        carry, hits = jax.lax.scan(step_t, carry, xs)
+        states, pstates, fills, admitted = carry
+        states = list(states)
+        for j, l in enumerate(dyn_levels):
+            refreshed = jax.vmap(
+                lambda s: jax_cache.refresh_hot(specs[l], s)
+            )(states[l])
+            states[l] = jax.tree_util.tree_map(
+                lambda o, r: jnp.where(fire_c[j], r, o), states[l], refreshed
+            )
+        return (tuple(states), pstates, fills, admitted), hits
+
+    chunk = lambda a: a.reshape(n_chunks, G, *a.shape[1:])
+    carry0 = (tuple(states), pstates, tuple(fills), tuple(admitted))
+    (states, pstates, fills, admitted), hits = jax.lax.scan(
+        chunk_fn,
+        carry0,
+        (
+            (
+                chunk(t_arr),
+                chunk(x_p),
+                chunk(valid_p),
+                tuple(chunk(a) for a in assigns_p),
+            ),
+            jnp.asarray(fire),
+        ),
+    )
+    hit_lv = [h.reshape(-1)[:T] for h in hits]
+    return list(states), pstates, list(fills), list(admitted), hit_lv
+
+
+def assemble_placed(topo: Topology, assigns, states, pstates, fills, admitted, hit_lv):
+    """Fold a ``_placed_run`` result into the ``simulate_fleet`` pytree.
+
+    Per-node activity is recomputed from the hit series (level ``l`` node
+    ``k`` is active at ``t`` iff the request routed to it and no level below
+    served it) — identical to the level-major masks by construction."""
+    T = hit_lv[0].shape[0]
+    demand = jnp.ones((T,), jnp.bool_)
+    tiers, node_hits = [], []
+    for l in range(topo.n_levels):
+        K = len(topo.levels[l])
+        active = (
+            assigns[l][None, :] == jnp.arange(K, dtype=jnp.int32)[:, None]
+        ) & demand[None, :]
+        nh = active & hit_lv[l][None, :]
+        count = states[l]["count"]
+        tiers.append(
+            {
+                "requests": active.sum(-1),
+                "hits": nh.sum(-1),
+                "admitted_requests": admitted[l],
+                "inserts": fills[l],
+                "evictions": fills[l] - count,
+                "count": count,
+            }
+        )
+        node_hits.append(nh)
+        demand = demand & ~hit_lv[l]
+    return {
+        "hit": tuple(hit_lv),
+        "node_hit": tuple(node_hits),
+        "tiers": tuple(tiers),
+        "states": tuple(states),
+        "origin_miss": demand,
+        # admit levels' placement-sketch state (level index -> rows/seen)
+        "placement_states": pstates,
+    }
+
+
+def _simulate_placed_impl(topo: Topology, trace, assignment):
+    trace = trace.astype(jnp.int32)
+    assignment = assignment.astype(jnp.int32)
+    assigns = level_assignments(topo, trace, assignment)
+    states, pstates, fills, admitted, hit_lv = _placed_run(topo, trace, assigns)
+    return assemble_placed(topo, assigns, states, pstates, fills, admitted, hit_lv)
 
 
 @functools.partial(jax.jit, static_argnums=0)

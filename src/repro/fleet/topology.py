@@ -27,7 +27,13 @@ import numpy as np
 from repro.core import jax_cache
 from repro.core.jax_cache import PolicySpec
 
-__all__ = ["Topology", "ancestry_path", "tree", "from_hierarchy"]
+__all__ = [
+    "Topology",
+    "ancestry_path",
+    "level_assignments",
+    "tree",
+    "from_hierarchy",
+]
 
 
 def ancestry_path(parents, edge: int) -> tuple[int, ...]:
@@ -78,6 +84,19 @@ class Topology:
     index (at level ``l+1``) of the tier that consumes node ``i``'s misses.
     ``level_names`` optionally labels levels for reports (defaults to
     ``edge / mid1 / ... / root``).
+
+    ``placements`` names one cross-tier placement per level (``"lce"`` —
+    leave-copy-everywhere, the default; ``"lcd"``; ``"prob(p)"``;
+    ``"admit"`` — see :mod:`repro.fleet.placement`); empty means all-lce,
+    the pre-placement behaviour, which runs on the original level-major
+    simulator path bit for bit.
+
+    ``routers`` optionally names one router kind per level: ``routers[0]``
+    is the edge router (same as ``router``) and upper entries are either a
+    :data:`repro.cdn.router.ROUTER_MODES` kind — the tier partitions
+    requests itself, e.g. sticky edges over hashed regionals — or the
+    ``"tree"`` sentinel (follow the static parent map, the default).
+    Empty normalises to ``(router, "tree", ..., "tree")``.
     """
 
     levels: tuple[tuple[PolicySpec, ...], ...]
@@ -85,6 +104,8 @@ class Topology:
     router: str = "hash"
     session_len: int = 64
     level_names: tuple[str, ...] = ()
+    placements: tuple[str, ...] = ()
+    routers: tuple[str, ...] = ()
 
     def __post_init__(self):
         if not self.levels or any(not lvl for lvl in self.levels):
@@ -114,12 +135,44 @@ class Topology:
         # cdn's package __init__ itself imports fleet, and a module-level
         # import here would close that cycle during interpreter start-up)
         from repro.cdn import router as router_mod
+        from repro.fleet import placement as placement_mod
 
         if self.router not in router_mod.ROUTER_MODES:
             raise ValueError(
                 f"unknown router {self.router!r}; expected one of "
                 f"{router_mod.ROUTER_MODES}"
             )
+        L = len(self.levels)
+        # normalise the per-level fields in place (frozen dataclass, hence
+        # object.__setattr__) so equal trees hash equal however constructed
+        if not self.placements:
+            object.__setattr__(self, "placements", ("lce",) * L)
+        if len(self.placements) != L:
+            raise ValueError(
+                f"placements must name every level: {len(self.placements)} "
+                f"entries for {L} levels"
+            )
+        for p in self.placements:
+            placement_mod.validate(p)
+        if not self.routers:
+            object.__setattr__(
+                self, "routers", (self.router,) + (router_mod.TREE,) * (L - 1)
+            )
+        if len(self.routers) != L:
+            raise ValueError(
+                f"routers must name every level: {len(self.routers)} "
+                f"entries for {L} levels"
+            )
+        if self.routers[0] == router_mod.TREE:
+            raise ValueError("the edge level (routers[0]) cannot be 'tree'")
+        for r in self.routers:
+            if r not in router_mod.LEVEL_ROUTER_MODES:
+                raise ValueError(
+                    f"unknown level router {r!r}; expected one of "
+                    f"{router_mod.LEVEL_ROUTER_MODES}"
+                )
+        # the edge entry is authoritative: keep the legacy scalar in sync
+        object.__setattr__(self, "router", self.routers[0])
 
     # ------------------------------------------------------------ structure
     @property
@@ -151,6 +204,18 @@ class Topology:
         """Node index at every level on the miss path of ``edge``."""
         return ancestry_path(self.parents, edge)
 
+    # ------------------------------------------------------------ placement
+    @property
+    def has_placement(self) -> bool:
+        """Any level with a non-default (non-lce) placement — the jitted
+        simulator dispatches such trees to the time-major placed engine."""
+        return any(p != "lce" for p in self.placements)
+
+    @property
+    def has_level_routers(self) -> bool:
+        """Any non-edge level routed by kind instead of the parent map."""
+        return any(r != "tree" for r in self.routers[1:])
+
     # -------------------------------------------------------------- routing
     def assignment(self, trace: np.ndarray, seed: int = 0) -> np.ndarray:
         """Route a (..., T) trace to edges (host-side, shared with the
@@ -161,6 +226,33 @@ class Topology:
             trace, self.n_edges, self.router, session_len=self.session_len,
             seed=seed,
         )
+
+
+def level_assignments(topo: Topology, trace, assignment, xp=np):
+    """Per-level node assignment of every request: one (T,) int array per
+    level. Level 0 is the given edge ``assignment``; an upper level either
+    follows the static parent map (``"tree"``, assignment pushed up) or
+    routes the request stream itself with its own router kind
+    (:func:`repro.cdn.router.route_level`, seeded by the level index).
+
+    ``xp``-generic (numpy or jax.numpy) with bit-identical results — the
+    jitted simulator and the pure-Python oracle both call this, which is
+    what keeps routed-level parity exact."""
+    from repro.cdn import router as router_mod
+
+    outs = [xp.asarray(assignment, xp.int32)]
+    for l, pmap in enumerate(topo.parents):
+        mode = topo.routers[l + 1]
+        if mode == router_mod.TREE:
+            outs.append(xp.asarray(np.asarray(pmap, np.int32))[outs[-1]])
+        else:
+            outs.append(
+                router_mod.route_level(
+                    xp.asarray(trace), len(topo.levels[l + 1]), mode,
+                    session_len=topo.session_len, seed=l + 1, xp=xp,
+                )
+            )
+    return outs
 
 
 def _per_level(value, n_levels: int, name: str) -> tuple:
@@ -186,6 +278,8 @@ def tree(
     hot_size: int | Sequence[int] = 0,
     doorkeeper: int | Sequence[int] = 0,
     level_names: Sequence[str] = (),
+    placements: str | Sequence[str] = (),
+    routers: Sequence[str] = (),
 ) -> Topology:
     """Symmetric tier tree: ``widths`` nodes per level (edges first), children
     spread contiguously over the level above, homogeneous capacity per level.
@@ -230,9 +324,12 @@ def tree(
         tuple(i * widths[l + 1] // widths[l] for i in range(widths[l]))
         for l in range(L - 1)
     )
+    if isinstance(placements, str):
+        placements = (placements,) * L
     return Topology(
         levels=levels, parents=parents, router=router,
         session_len=session_len, level_names=tuple(level_names),
+        placements=tuple(placements), routers=tuple(routers),
     )
 
 

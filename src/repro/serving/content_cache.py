@@ -62,19 +62,30 @@ class ContentCache:
         self._size_of = size_of
         self.stats = CacheStats()
 
-    def lookup(self, obj_id: int) -> Any | None:
+    def lookup(self, obj_id: int, fill: bool = True) -> Any | None:
         """One request against the cache. Returns the payload on a hit.
 
         On a miss the policy has already decided whether the object is
         *admitted* — call ``offer`` with the payload afterwards to store it.
+        ``fill=False`` (the fleet's cross-tier placement gate) still runs the
+        policy's demand bookkeeping but withholds admission, so neither the
+        brain nor a later ``offer`` stores the object.
         """
         t0 = time.perf_counter()
-        hit = self.policy.request(obj_id)
+        hit = self.policy.request(obj_id, fill=fill)
         self.stats.mgmt_time_s += time.perf_counter() - t0
         if hit and obj_id in self._payloads:
             self.stats.hits += 1
             return self._payloads[obj_id]
         self.stats.misses += 1
+        return None
+
+    def peek(self, obj_id: int) -> Any | None:
+        """The stored payload iff the brain still owns the object — a pure
+        probe: no policy request, no stats (the fleet front's serve-level
+        discovery before it applies placement-gated lookups)."""
+        if self.policy.contains(obj_id):
+            return self._payloads.get(obj_id)
         return None
 
     def offer(self, obj_id: int, payload: Any) -> bool:

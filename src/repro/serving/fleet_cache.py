@@ -14,11 +14,16 @@ upper tiers, with the same deterministic router the fleet simulator uses
 The lookup/offer surface is identical to a single ``ContentCache``, so
 ``ServeEngine`` takes it unchanged:
 
-  * ``lookup`` — route to an edge, then climb the node's ancestor chain; a
-    hit at any tier fills every tier below it on the path (standard CDN
-    fill-on-read) and serves.
-  * ``offer``  — the computed payload is offered to every tier on the miss
-    path (each tier's own admission policy decides).
+  * ``lookup`` — route to a node per level (the edge router, then each
+    upper level's own router kind or the static parent map), probe the
+    climb for the serving tier, then apply *placement-gated* fill-on-read:
+    each consulted tier below the server stores a copy only when its
+    level's placement says so (``lce`` / ``lcd`` / ``prob(p)`` — the same
+    :mod:`repro.fleet.placement` semantics the fleet simulator runs;
+    ``admit`` defers to the node's own policy admission at this layer).
+  * ``offer``  — the computed payload is offered to the miss-path tiers the
+    placement admitted at lookup time (each tier's own admission policy
+    still decides).
 """
 from __future__ import annotations
 
@@ -27,6 +32,7 @@ from typing import Any, Callable
 import numpy as np
 
 from repro.cdn import router as router_mod
+from repro.fleet import placement as placement_mod
 from repro.serving.content_cache import CacheStats, ContentCache
 
 __all__ = ["FleetContentCache"]
@@ -46,6 +52,7 @@ class FleetContentCache:
         n_objects: int | None = None,
         window: int | None = None,
         size_of: Callable[[Any], int] = lambda p: 1,
+        placements: tuple[str, ...] = (),
     ):
         if n_edges < 1:
             raise ValueError(f"n_edges must be >= 1, got {n_edges}")
@@ -61,6 +68,7 @@ class FleetContentCache:
             parents=[[0] * n_edges],
             router=router,
             session_len=session_len,
+            placements=placements,
         )
 
     @classmethod
@@ -71,7 +79,9 @@ class FleetContentCache:
         size_of: Callable[[Any], int] = lambda p: 1,
     ) -> "FleetContentCache":
         """Route the serving front onto a ``repro.fleet.Topology``: one
-        ContentCache per topology node, brains built from each PolicySpec."""
+        ContentCache per topology node, brains built from each PolicySpec,
+        the tree's per-level routers and cross-tier placements honoured on
+        every lookup's climb."""
         from repro.fleet.reference import build_policy
 
         self = cls.__new__(cls)
@@ -89,25 +99,38 @@ class FleetContentCache:
             parents=[list(p) for p in topo.parents],
             router=topo.router,
             session_len=topo.session_len,
+            placements=topo.placements,
+            routers=topo.routers,
         )
         return self
 
-    def _init_tree(self, levels, parents, router, session_len):
+    def _init_tree(self, levels, parents, router, session_len,
+                   placements=(), routers=()):
         from repro.fleet.topology import ancestry_path
 
         if router not in router_mod.ROUTER_MODES:
             raise ValueError(
                 f"unknown router {router!r}; expected one of {router_mod.ROUTER_MODES}"
             )
+        L = len(levels)
         self.levels: list[list[ContentCache]] = levels
         self.parents: list[list[int]] = parents
-        # miss paths are pure functions of the (static) tree — precomputed so
-        # the per-lookup hot path is one list index
+        # miss paths along the static tree — the per-lookup hot path when no
+        # upper level routes by kind
         self._paths = [ancestry_path(parents, e) for e in range(len(levels[0]))]
         self.router = router
         self.session_len = session_len
+        self.placements = tuple(placements) or ("lce",) * L
+        if len(self.placements) != L:
+            raise ValueError("placements must name every level")
+        self._parsed = [placement_mod.parse(p) for p in self.placements]
+        self.routers = tuple(routers) or (router,) + (router_mod.TREE,) * (L - 1)
+        if len(self.routers) != L or self.routers[0] == router_mod.TREE:
+            raise ValueError("routers must name every level (edge not 'tree')")
+        self._routed = any(r != router_mod.TREE for r in self.routers[1:])
         self._clock = 0  # request counter driving sticky / round-robin routing
-        self._pending: dict[int, tuple[int, ...]] = {}  # obj -> miss path nodes
+        # obj -> (miss path nodes, per-level placement fill flags)
+        self._pending: dict[int, tuple[tuple[int, ...], tuple[bool, ...]]] = {}
         self.parent_fills = 0
 
     # --------------------------------------------------------- legacy views
@@ -125,11 +148,9 @@ class FleetContentCache:
         return len(self.levels)
 
     # ------------------------------------------------------------- routing
-    def edge_for(self, obj_id: int) -> int:
-        """The edge the *next* request for ``obj_id`` routes to (advances the
-        request clock, mirroring cdn.router.route on the request stream)."""
-        t = self._clock
-        self._clock += 1
+    def _edge_at(self, obj_id: int, t: int) -> int:
+        """The edge a request for ``obj_id`` at clock ``t`` routes to
+        (mirrors cdn.router.route on the request stream)."""
         key = {"hash": obj_id, "sticky": t // self.session_len, "round_robin": t}[
             self.router
         ]
@@ -140,40 +161,108 @@ class FleetContentCache:
             % np.uint64(len(self.edges))
         )
 
+    def edge_for(self, obj_id: int) -> int:
+        """The edge the *next* request for ``obj_id`` routes to (advances the
+        request clock)."""
+        t = self._clock
+        self._clock += 1
+        return self._edge_at(obj_id, t)
+
     def path_for(self, edge: int) -> tuple[int, ...]:
-        """Node index at every level on the miss path of ``edge``."""
+        """Node index at every level on the *static-tree* miss path of
+        ``edge`` (routed levels pick their node per request instead — see
+        ``path_at``)."""
         return self._paths[edge]
+
+    def path_at(self, obj_id: int, t: int) -> tuple[int, ...]:
+        """The full miss path of a request at clock ``t``: the parent map
+        for ``"tree"`` levels, each routed level's own router otherwise
+        (same lowbias32 partitioning as the fleet simulator's
+        ``level_assignments``)."""
+        edge = self._edge_at(obj_id, t)
+        if not self._routed:
+            return self._paths[edge]
+        nodes = [edge]
+        for l in range(1, self.n_levels):
+            mode = self.routers[l]
+            if mode == router_mod.TREE:
+                nodes.append(self.parents[l - 1][nodes[-1]])
+            else:
+                nodes.append(
+                    router_mod.route_point(
+                        mode, obj_id, t, len(self.levels[l]),
+                        session_len=self.session_len, seed=l,
+                    )
+                )
+        return tuple(nodes)
+
+    def _should_fill(self, level: int, serve: int, t: int) -> bool:
+        """Placement decision for a consulted-and-missed tier given the
+        serving level (``n_levels`` = origin) — the serving-layer twin of
+        the simulator's fill gate. ``admit`` defers to the node's own
+        policy admission at this layer."""
+        kind, p = self._parsed[level]
+        if kind in ("lce", "admit"):
+            return True
+        if serve == level + 1:
+            return True  # the tier directly below the server always fills
+        if kind == "lcd":
+            return False
+        return bool(placement_mod.prob_fill(t, level, p, np))
 
     # ------------------------------------------------------- cache surface
     def lookup(self, obj_id: int) -> Any | None:
-        path = self.path_for(self.edge_for(obj_id))
+        t = self._clock
+        self._clock += 1
+        path = self.path_at(obj_id, t)
+        L = self.n_levels
+        # probe the climb (no policy requests) for the serving tier, so the
+        # placement gate is known before any tier's admission runs
+        serve = L  # L = origin
         for l, node in enumerate(path):
-            payload = self.levels[l][node].lookup(obj_id)
-            if payload is not None:
-                # fill every tier below on the way back down (their admission
-                # already ran during the climb)
-                for ll in range(l):
+            if self.levels[l][node].peek(obj_id) is not None:
+                serve = l
+                break
+        consulted = min(serve, L - 1)
+        fills = tuple(
+            self._should_fill(l, serve, t) if l < serve else True
+            for l in range(consulted + 1)
+        )
+        payload = None
+        for l in range(consulted + 1):
+            p = self.levels[l][path[l]].lookup(obj_id, fill=fills[l])
+            if l == serve:
+                payload = p
+        if payload is not None:
+            # fill the placement-admitted tiers below on the way back down
+            # (their admission already ran during the gated climb)
+            for ll in range(serve):
+                if fills[ll]:
                     self.levels[ll][path[ll]].offer(obj_id, payload)
-                if l > 0:
-                    self.parent_fills += 1
-                self._pending.pop(obj_id, None)
-                return payload
-        self._pending[obj_id] = path  # remember the path of the open miss
+            if serve > 0:
+                self.parent_fills += 1
+            self._pending.pop(obj_id, None)
+            return payload
+        self._pending[obj_id] = (path, fills)  # the open miss + its gates
         return None
 
     def offer(self, obj_id: int, payload: Any) -> bool:
-        """Offer a freshly-computed payload to every tier on the miss path.
+        """Offer a freshly-computed payload to the placement-admitted tiers
+        of the miss path.
 
-        The payload lands on the nodes whose lookups missed (tracked per
-        object, so interleaved lookups of other objects don't misplace it)."""
-        path = self._pending.pop(obj_id, None)
-        if path is None:
+        The payload lands on the nodes whose lookups missed *and* whose
+        level placement admitted the copy (tracked per object, so
+        interleaved lookups of other objects don't misplace it)."""
+        rec = self._pending.pop(obj_id, None)
+        if rec is None:
             # no open miss recorded: nothing admitted this object — same
             # contract as ContentCache.offer without a prior lookup
             return False
+        path, fills = rec
         stored = False
         for l in range(len(path) - 1, -1, -1):  # top-down, as the fill flows
-            stored = self.levels[l][path[l]].offer(obj_id, payload) or stored
+            if fills[l]:
+                stored = self.levels[l][path[l]].offer(obj_id, payload) or stored
         return stored
 
     # ------------------------------------------------------------- metrics

@@ -12,7 +12,17 @@ The Pallas tier rides the same matrix: ``test_pallas_matches_both_oracles``
 runs the cache_sim kernel (interpret mode on CPU) for every kind x scenario —
 doorkeeper-enabled tinylfu included — and pins its outputs bit-identically to
 *both* the jnp scan state and the pure-Python reference totals.
+
+The cross-tier **placement** axis (repro.fleet.placement) extends the matrix
+a dimension: ``test_fleet_placement_matrix`` runs a 3-tier fleet for every
+non-default placement x kind x scenario cell, jitted-vs-oracle bit-parity
+(the placement-specific invariants live in tests/test_placement.py).
+Placement is a fleet-layer concept, so the Pallas kernel is *asserted
+unaffected*: its surface has no placement knob and a single-tier placed
+fleet degenerates to the flat simulator the kernel is pinned against.
 """
+import inspect
+
 import numpy as np
 import pytest
 
@@ -21,7 +31,7 @@ try:
 except ImportError:  # pragma: no cover - CI installs hypothesis; shim elsewhere
     from _hypothesis_fallback import given, settings, strategies as st
 
-from repro import workloads
+from repro import fleet, workloads
 from repro.cdn.reference import build_policy
 from repro.core import jax_cache
 from repro.kernels.cache_sim.ops import cache_sim
@@ -166,3 +176,88 @@ def test_matrix_is_total():
     kinds = {k for k, _ in _PALLAS_VARIANTS}
     assert kinds == set(jax_cache.JAX_POLICY_KINDS)
     assert ("tinylfu", 128) in _PALLAS_VARIANTS
+    # ... and the placement axis covers every non-default placement kind
+    from repro.fleet import placement
+
+    assert set(p.split("(")[0] for p in _FLEET_PLACEMENTS) == (
+        set(placement.PLACEMENT_KINDS) - {"lce"}
+    )
+
+
+# ----------------------------------------------------- fleet placement axis
+_FLEET_PLACEMENTS = ("lcd", "prob(0.5)", "admit")
+_FLEET_T = 500
+
+
+def _fleet_topo(kind: str, placement: str) -> "fleet.Topology":
+    return fleet.tree(
+        n_objects=N,
+        widths=(3, 1),
+        kinds=kind,
+        capacities=(CAPS[0], CAPS[1] + 6),
+        window=WINDOW if kind == "wlfu" else 0,
+        refresh=REFRESH if kind == "plfua_dyn" else 0,
+        sketch_width=SKETCH_W if kind in jax_cache.SKETCH_POLICY_KINDS else 0,
+        placements=placement,
+    )
+
+
+@pytest.mark.slow  # the exhaustive placement acceptance matrix
+@pytest.mark.parametrize("placement", _FLEET_PLACEMENTS)
+@pytest.mark.parametrize("kind", jax_cache.JAX_POLICY_KINDS)
+@pytest.mark.parametrize("scenario", workloads.SCENARIO_NAMES)
+def test_fleet_placement_matrix(kind, scenario, placement):
+    """Every placement x kind x scenario cell: the time-major placed engine
+    must match the pure-Python fleet oracle decision-for-decision."""
+    topo = _fleet_topo(kind, placement)
+    trace = workloads.make_traces(
+        scenario, N, n_samples=1, trace_len=_FLEET_T, seed=41
+    )[0]
+    assign = topo.assignment(trace)
+    out = fleet.simulate_fleet(topo, trace, assign)
+    ref = fleet.simulate_fleet_reference(topo, trace, assign)
+    contents = ref.in_cache(N)
+    ctx = f"{kind} x {scenario} x {placement}"
+    for l in range(topo.n_levels):
+        np.testing.assert_array_equal(
+            np.asarray(out["hit"][l]), ref.level_hit[l],
+            err_msg=f"hit sequence: {ctx}, level {l}",
+        )
+        np.testing.assert_array_equal(
+            np.asarray(out["states"][l]["in_cache"]), contents[l],
+            err_msg=f"final contents: {ctx}, level {l}",
+        )
+        assert [int(v) for v in np.asarray(out["tiers"][l]["hits"])] == [
+            p.hits for p in ref.levels[l]
+        ], f"per-node hits: {ctx}, level {l}"
+        assert [int(v) for v in np.asarray(out["tiers"][l]["evictions"])] == [
+            p.evictions for p in ref.levels[l]
+        ], f"per-node evictions: {ctx}, level {l}"
+
+
+@pytest.mark.parametrize("kind", ("lru", "tinylfu"))
+def test_pallas_tier_unaffected_by_placement(kind):
+    """Placement lives in the fleet layer: the kernel surface carries no
+    placement/fill knob, and a *single-tier* placed fleet (where every
+    placement degenerates: the one level is always directly below the
+    origin) reproduces the flat simulator the kernel is pinned against."""
+    params = inspect.signature(cache_sim).parameters
+    assert "placement" not in params and "fill" not in params
+    spec = _spec(kind, CAPS[1])
+    trace = workloads.make_traces("churn", N, 1, _FLEET_T, seed=3)[0]
+    hits_flat, state_flat = jax_cache.simulate(spec, trace)
+    for placement in ("lcd", "prob(0.5)"):
+        topo = fleet.Topology(
+            levels=((spec,),), parents=(), placements=(placement,)
+        )
+        out = fleet.simulate_fleet(
+            topo, trace, np.zeros(_FLEET_T, np.int32)
+        )
+        np.testing.assert_array_equal(
+            np.asarray(out["hit"][0]), np.asarray(hits_flat),
+            err_msg=f"single-tier {placement} fleet vs flat simulate ({kind})",
+        )
+        np.testing.assert_array_equal(
+            np.asarray(out["states"][0]["in_cache"])[0],
+            np.asarray(state_flat["in_cache"]),
+        )

@@ -169,8 +169,14 @@ def test_fleet_report_rollup():
     assert rep.origin_requests == rep.n_requests - hits >= 0
     assert rep.mgmt_cpu_s > 0 and rep.mgmt_energy_j > rep.mgmt_cpu_s  # ~5.9 W/core
     rows = rep.rows()
-    assert len(rows) == topo.n_nodes + topo.n_levels  # per-node + per-level agg
+    # per-node + per-level aggregate + per-level placement row
+    assert len(rows) == topo.n_nodes + 2 * topo.n_levels
     assert [t.tier for t in rep.per_level] == ["edge", "mid1", "root"]
+    assert [t.tier for t in rep.per_level_placement] == [
+        "edge:placement", "mid1:placement", "root:placement"
+    ]
+    assert all(t.policy == "lce" for t in rep.per_level_placement)
+    assert rep.placement_energy_j > 0  # lce fills are priced too
     scan = fleet.fleet_report(topo, out, cost_model="scan")
     assert scan.mgmt_cpu_s >= rep.mgmt_cpu_s  # O(C) eviction costs more
 

@@ -244,6 +244,40 @@ def test_fleet_cache_from_topology_three_tiers():
             assert len(node) <= topo.levels[l][i].capacity, f"L{l}[{i}]"
 
 
+def test_fleet_cache_lcd_fill_on_read():
+    """Leave-copy-down on the serving climb (the fleet.placement semantics):
+    after the first miss the object lands at the regional (the tier directly
+    below the origin) but *not* the edge — neither payload nor policy-brain
+    admission; the second request hits the regional and only then promotes
+    the copy to the edge, where the third request finds it."""
+    from repro import fleet
+    from repro.serving import FleetContentCache
+
+    topo = fleet.tree(
+        n_objects=50, widths=(2, 1), kinds="lru", capacities=(8, 32),
+        placements="lcd",
+    )
+    fc = FleetContentCache.from_topology(topo)
+    obj = 7
+    # first request: full miss -> the offer fills the regional only
+    assert fc.lookup(obj) is None
+    assert fc.offer(obj, "payload-7")
+    regional = fc.levels[1][0]
+    assert regional.peek(obj) == "payload-7"
+    for i, edge in enumerate(fc.levels[0]):
+        assert edge.peek(obj) is None, f"edge[{i}] stored under lcd"
+        assert not edge.policy.contains(obj), f"edge[{i}] brain admitted"
+    # second request: edge miss, regional hit -> promoted to the edge
+    assert fc.lookup(obj) == "payload-7"
+    assert fc.parent_fills == 1
+    assert any(e.peek(obj) == "payload-7" for e in fc.levels[0])
+    # third request: served straight from the edge (no new parent fill)
+    assert fc.lookup(obj) == "payload-7"
+    assert fc.parent_fills == 1
+    # offer without an open miss stays a no-op (placement gates preserved)
+    assert not fc.offer(obj, "other")
+
+
 def test_fleet_cache_topology_payload_consistency():
     """A payload served from an upper tier is the one that was offered."""
     from repro import fleet
