@@ -4,10 +4,9 @@ the Pallas kernel (interpret mode on CPU — the TPU number is roofline-derived,
 see roofline_bench)."""
 from __future__ import annotations
 
-import time
-
 import numpy as np
 
+from repro import telemetry
 from repro.core import jax_cache, policies, registry, simulate, zipf
 
 
@@ -37,18 +36,16 @@ def jax_batched(full: bool = False):
         spec = jax_cache.PolicySpec(
             kind=kind, n_objects=n, capacity=cap, window=policy_window(kind)
         )
-        hits = jax_cache.simulate_batch(spec, traces)  # compile
-        hits.block_until_ready()
-        t0 = time.perf_counter()
+        tr = telemetry.measure(
+            jax_cache.simulate_batch, spec, traces, static=(0,), steps=tlen * samples
+        )
         hits = jax_cache.simulate_batch(spec, traces)
-        hits.block_until_ready()
-        dt = time.perf_counter() - t0
         chr_ = float(np.asarray(hits).mean())
         rows.append(
             (
                 f"cache_jax/{kind}",
-                dt / (tlen * samples) * 1e6,
-                f"CHR={chr_:.4f} ({samples} sims batched)",
+                tr.us_per_step,
+                tr.derived(CHR=f"{chr_:.4f}", samples=samples),
             )
         )
     return rows
@@ -75,17 +72,23 @@ def pallas_interpret(full: bool = False):
     rows = []
     for kind in registry.names(pallas=True):
         kw = _kernel_kwargs(kind, cap)
-        t0 = time.perf_counter()
+        # the old loop timed the *first* call — compile folded into steps/sec;
+        # measure() isolates compile_s and times only warmed, blocked calls
+        tr = telemetry.measure(
+            cache_sim, traces, kind=kind, n_objects=n, capacity=cap,
+            interpret=True, steps=tlen * 2, repeats=1, **kw,
+        )
         hits, _, _ = cache_sim(
             traces, kind=kind, n_objects=n, capacity=cap, interpret=True, **kw
         )
-        hits.block_until_ready()
-        dt = time.perf_counter() - t0
         rows.append(
             (
                 f"cache_pallas_interp/{kind}",
-                dt / (tlen * 2) * 1e6,
-                f"CHR={float(np.asarray(hits).sum()) / (tlen * 2):.4f} (correctness tier; TPU perf in roofline)",
+                tr.us_per_step,
+                tr.derived(
+                    CHR=f"{float(np.asarray(hits).sum()) / (tlen * 2):.4f}",
+                    note="(correctness tier; TPU perf in roofline)",
+                ),
             )
         )
     return rows
@@ -109,30 +112,25 @@ def kernel_vs_jax(full: bool = False):
         kw = _kernel_kwargs(kind, cap)
         spec = jax_cache.PolicySpec(kind=kind, n_objects=n, capacity=cap, **kw)
 
-        hits_j = jax_cache.simulate_batch(spec, traces)  # compile
-        hits_j.block_until_ready()
-        t0 = time.perf_counter()
-        hits_j = jax_cache.simulate_batch(spec, traces)
-        hits_j.block_until_ready()
-        jax_sps = steps / (time.perf_counter() - t0)
-
+        tr_j = telemetry.measure(
+            jax_cache.simulate_batch, spec, traces, static=(0,), steps=steps
+        )
         args = dict(kind=kind, n_objects=n, capacity=cap, interpret=True, **kw)
-        hits_k, _, _ = cache_sim(traces, **args)  # compile
-        hits_k.block_until_ready()
-        t0 = time.perf_counter()
-        hits_k, _, _ = cache_sim(traces, **args)
-        hits_k.block_until_ready()
-        kern_sps = steps / (time.perf_counter() - t0)
+        tr_k = telemetry.measure(cache_sim, traces, steps=steps, repeats=1, **args)
 
+        hits_j = jax_cache.simulate_batch(spec, traces)
+        hits_k, _, _ = cache_sim(traces, **args)
         assert int(np.asarray(hits_k).sum()) == int(
             np.asarray(hits_j).sum()
         ), f"kernel/jax hit divergence for {kind}"
         rows.append(
             (
                 f"kernel_vs_jax/{kind}",
-                1e6 / kern_sps,
-                f"kernel={kern_sps:,.0f} steps/s jax={jax_sps:,.0f} steps/s "
-                f"ratio={kern_sps / jax_sps:.3f} (interpret mode off-TPU)",
+                tr_k.us_per_step,
+                f"kernel={tr_k.steps_per_s:,.0f} steps/s jax={tr_j.steps_per_s:,.0f} steps/s "
+                f"ratio={tr_k.steps_per_s / tr_j.steps_per_s:.3f} "
+                f"kernel_compile_s={tr_k.compile_s:.3f} jax_compile_s={tr_j.compile_s:.3f} "
+                f"(interpret mode off-TPU)",
             )
         )
     return rows

@@ -15,11 +15,9 @@ Groups:
 """
 from __future__ import annotations
 
-import time
-
 import numpy as np
 
-from repro import cdn, workloads
+from repro import cdn, telemetry, workloads
 from repro.core import registry
 
 #: every policy the jitted tier supports — the registry, not a hand list, so
@@ -45,14 +43,16 @@ def _mk(kind: str, n: int, *, n_edges=4, edge_cap: int, parent_cap: int, router=
 
 
 def _run(hspec, traces):
+    """Measured run: telemetry.measure gives the compile/execute split and the
+    warmed, blocked wall time; the extra call (jit-cached) yields the outputs
+    the reports need."""
     assign = hspec.assignment(traces)
-    out = cdn.simulate_hierarchy_batch(hspec, traces, assign)  # compile
-    out["edge_hit"].block_until_ready()
-    t0 = time.perf_counter()
+    tr = telemetry.measure(
+        cdn.simulate_hierarchy_batch, hspec, traces, assign,
+        static=(0,), steps=traces.size,
+    )
     out = cdn.simulate_hierarchy_batch(hspec, traces, assign)
-    out["edge_hit"].block_until_ready()
-    dt = time.perf_counter() - t0
-    return out, dt / traces.size * 1e6
+    return out, tr.us_per_step
 
 
 def cdn_hierarchy(full: bool = False):

@@ -1,0 +1,156 @@
+"""Bench regression gate (PR 6): compare a run against a recorded baseline.
+
+Both sides are ``--record`` JSON payloads (``{"config": ..., "rows": [...]}``).
+Rows are matched by ``name``; metrics are the ``key=value`` numbers parsed out
+of each row's ``derived`` string plus ``us_per_call`` itself. Two tolerance
+classes:
+
+* **quality** — keys ending in ``chr`` (``CHR``, ``total_chr``, ``edge_chr``,
+  ...; the signed deltas ``dchr``/``dCHR`` are excluded): a drop of more than
+  ``--chr-tol`` (absolute, default 0.02) is a regression.
+* **throughput** — ``steps_per_s`` (lower is worse) and ``us_per_call``
+  (higher is worse): a relative change past ``--perf-tol`` (default 0.5,
+  i.e. 50%) is a regression. Wall-clock on shared CI runners is noisy, which
+  is why the default is generous and why ``benchmarks.run --compare`` is
+  report-only unless ``--strict`` is passed.
+
+Usable standalone::
+
+    PYTHONPATH=src python -m benchmarks.compare BENCH_PR5.json BENCH_PR6.json
+
+or in-run via ``python -m benchmarks.run --compare BENCH_PR5.json [--strict]``.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import re
+import sys
+
+#: key=value pairs where value parses as a float (1e6, +0.4, 50%-free)
+_METRIC_RE = re.compile(r"\b([A-Za-z_][A-Za-z0-9_]*)=([-+]?[0-9][0-9_.,]*(?:[eE][-+]?[0-9]+)?)\b")
+
+CHR_TOL = 0.02
+PERF_TOL = 0.5
+
+
+def parse_metrics(derived: str) -> dict[str, float]:
+    """Extract the numeric ``key=value`` metrics from a derived string."""
+    out = {}
+    for key, val in _METRIC_RE.findall(derived or ""):
+        try:
+            out[key] = float(val.replace(",", "").replace("_", ""))
+        except ValueError:
+            continue
+    return out
+
+
+def _is_chr(key: str) -> bool:
+    k = key.lower()
+    return k.endswith("chr") and k != "dchr"
+
+
+def _rows_by_name(payload: dict) -> dict[str, dict]:
+    return {r["name"]: r for r in payload.get("rows", [])}
+
+
+def compare(
+    baseline: dict,
+    current: dict,
+    *,
+    chr_tol: float = CHR_TOL,
+    perf_tol: float = PERF_TOL,
+) -> tuple[list[str], list[str]]:
+    """Return ``(regressions, notes)`` — human-readable comparison lines.
+
+    Only rows (and metrics) present on *both* sides are compared, so adding
+    groups or derived fields never trips the gate; removed rows are listed in
+    notes so a silently-dropped benchmark is still visible.
+    """
+    base_rows, cur_rows = _rows_by_name(baseline), _rows_by_name(current)
+    regressions: list[str] = []
+    notes: list[str] = []
+    common = [n for n in base_rows if n in cur_rows]
+    missing = [n for n in base_rows if n not in cur_rows]
+    if missing:
+        notes.append(f"{len(missing)} baseline row(s) absent from current run: "
+                     + ", ".join(sorted(missing)[:8]) + ("..." if len(missing) > 8 else ""))
+    for name in common:
+        b, c = base_rows[name], cur_rows[name]
+        bm = parse_metrics(b.get("derived", ""))
+        cm = parse_metrics(c.get("derived", ""))
+        bm["us_per_call"], cm["us_per_call"] = b.get("us_per_call", 0), c.get("us_per_call", 0)
+        for key in bm:
+            if key not in cm:
+                continue
+            bv, cv = bm[key], cm[key]
+            if _is_chr(key):
+                if cv < bv - chr_tol:
+                    regressions.append(
+                        f"{name}: {key} {bv:.4f} -> {cv:.4f} "
+                        f"(drop {bv - cv:.4f} > tol {chr_tol})"
+                    )
+            elif key == "steps_per_s" and bv > 0:
+                if cv < bv * (1 - perf_tol):
+                    regressions.append(
+                        f"{name}: steps_per_s {bv:.0f} -> {cv:.0f} "
+                        f"({cv / bv:.2f}x < {1 - perf_tol:.2f}x)"
+                    )
+            elif key == "us_per_call" and bv > 0:
+                if cv > bv * (1 + perf_tol):
+                    regressions.append(
+                        f"{name}: us_per_call {bv:.3f} -> {cv:.3f} "
+                        f"({cv / bv:.2f}x > {1 + perf_tol:.2f}x)"
+                    )
+    notes.append(f"compared {len(common)} row(s) against baseline")
+    return regressions, notes
+
+
+def compare_files(
+    baseline_path: str,
+    current_path: str,
+    *,
+    chr_tol: float = CHR_TOL,
+    perf_tol: float = PERF_TOL,
+) -> tuple[list[str], list[str]]:
+    with open(baseline_path) as fh:
+        baseline = json.load(fh)
+    with open(current_path) as fh:
+        current = json.load(fh)
+    return compare(baseline, current, chr_tol=chr_tol, perf_tol=perf_tol)
+
+
+def report(regressions: list[str], notes: list[str], *, strict: bool, out=sys.stderr) -> int:
+    """Print the comparison; return the process exit code (0 unless strict
+    and regressed)."""
+    for note in notes:
+        print(f"# compare: {note}", file=out)
+    if not regressions:
+        print("# compare: no regressions", file=out)
+        return 0
+    for line in regressions:
+        print(f"# REGRESSION: {line}", file=out)
+    verdict = "failing (--strict)" if strict else "report-only (pass --strict to enforce)"
+    print(f"# compare: {len(regressions)} regression(s), {verdict}", file=out)
+    return 1 if strict else 0
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("baseline", help="recorded baseline JSON (benchmarks.run --record)")
+    ap.add_argument("current", help="recorded current-run JSON")
+    ap.add_argument("--chr-tol", type=float, default=CHR_TOL,
+                    help="absolute CHR-drop tolerance (default %(default)s)")
+    ap.add_argument("--perf-tol", type=float, default=PERF_TOL,
+                    help="relative throughput tolerance (default %(default)s)")
+    ap.add_argument("--strict", action="store_true",
+                    help="exit non-zero on regression (default: report-only)")
+    args = ap.parse_args()
+    regs, notes = compare_files(
+        args.baseline, args.current, chr_tol=args.chr_tol, perf_tol=args.perf_tol
+    )
+    sys.exit(report(regs, notes, strict=args.strict))
+
+
+if __name__ == "__main__":
+    main()

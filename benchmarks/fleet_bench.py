@@ -29,10 +29,9 @@ import json
 import os
 import subprocess
 import sys
-import time
 
 from benchmarks.cdn_bench import policy_window  # one window convention
-from repro import fleet, workloads
+from repro import fleet, telemetry, workloads
 from repro.core import registry
 
 FLEET_POLICIES = registry.names(jax=True)
@@ -51,14 +50,16 @@ def _three_tier(kind: str, n: int, *, edge_cap: int, router: str = "hash"):
 
 
 def _run(topo, traces):
+    """Measured run on the telemetry.measure harness (warmup + full
+    block_until_ready + compile/execute split); the extra call is jit-cached
+    and only exists to hand the outputs to fleet_report."""
     assign = topo.assignment(traces)
-    out = fleet.simulate_fleet_batch(topo, traces, assign)  # compile
-    out["hit"][0].block_until_ready()
-    t0 = time.perf_counter()
+    tr = telemetry.measure(
+        fleet.simulate_fleet_batch, topo, traces, assign,
+        static=(0,), steps=traces.size,
+    )
     out = fleet.simulate_fleet_batch(topo, traces, assign)
-    out["hit"][0].block_until_ready()
-    dt = time.perf_counter() - t0
-    return out, dt / traces.size * 1e6, traces.size / dt
+    return out, tr.us_per_step, tr.steps_per_s
 
 
 def fleet_policy_sweep(full: bool = False):

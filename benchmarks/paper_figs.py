@@ -284,6 +284,58 @@ def fig9_dynamic_admission(full: bool = False):
     return rows
 
 
+def fig10_chr_over_time(full: bool = False):
+    """Beyond-paper figure (PR 6): CHR trajectory over trace time from the
+    in-scan windowed telemetry, per policy, on the two non-stationary
+    workloads (churn, flash_crowd). The paper's tables are whole-trace
+    averages; this is the view that shows *when* a frozen hot set loses CHR
+    and how fast the adaptive policies recover. Also writes the full
+    per-(sample, window) series to ``telemetry_fig10.jsonl`` via
+    repro.telemetry.export — the CI bench-smoke telemetry artifact."""
+    from benchmarks.cdn_bench import policy_window
+    from repro import telemetry, workloads
+    from repro.core import jax_cache, registry
+    from repro.telemetry import export
+
+    n = 10_000 if full else 2_000
+    cap = n * 3 // 100
+    samples, tlen = (8, 100_000) if full else (2, 12_000)
+    tel = telemetry.TelemetrySpec(window=tlen // 16)
+    hit_col = telemetry.METRIC_INDEX["hits"]
+    req_col = telemetry.METRIC_INDEX["requests"]
+    rows, jsonl_rows = [], []
+    for scenario in ("churn", "flash_crowd"):
+        traces = workloads.make_traces(
+            scenario, n, n_samples=samples, trace_len=tlen, seed=10
+        )
+        for kind in registry.names(jax=True):
+            spec = jax_cache.PolicySpec(
+                kind=kind, n_objects=n, capacity=cap, window=policy_window(kind)
+            )
+            hits, series = jax_cache.simulate_batch(spec, traces, tel)
+            agg = np.asarray(series).sum(axis=0)  # (n_windows, N_METRICS)
+            chr_w = agg[:, hit_col] / np.maximum(1, agg[:, req_col])
+            jsonl_rows.extend(
+                export.series_rows(
+                    np.asarray(series), tel.window, scenario=scenario, kind=kind
+                )
+            )
+            rows.append(
+                (
+                    f"fig10/{scenario}/{kind}",
+                    0.0,
+                    f"chr_first={chr_w[0]:.4f} chr_min={chr_w.min():.4f} "
+                    f"chr_last={chr_w[-1]:.4f} windows={len(chr_w)} "
+                    f"CHR={float(np.asarray(hits).mean()):.4f}",
+                )
+            )
+    export.write_jsonl("telemetry_fig10.jsonl", jsonl_rows)
+    rows.append(
+        ("fig10/export", 0.0, f"rows={len(jsonl_rows)} -> telemetry_fig10.jsonl")
+    )
+    return rows
+
+
 ALL = {
     "fig2": fig2_red_columns,
     "fig3": fig3_chr_grid,
@@ -293,5 +345,6 @@ ALL = {
     "fig7": fig7_cpu_vs_plfua,
     "fig8": fig8_hierarchy,
     "fig9": fig9_dynamic_admission,
+    "fig10": fig10_chr_over_time,
     "metadata": metadata_table,
 }

@@ -6,9 +6,13 @@ serving-energy and fleet tables. Prints ``name,us_per_call,derived`` CSV.
     PYTHONPATH=src python -m benchmarks.run --only fig4
     PYTHONPATH=src python -m benchmarks.run --only fleet_policies,fleet_scale \
         --record BENCH_PR3.json                          # perf trajectory
+    PYTHONPATH=src python -m benchmarks.run --compare BENCH_PR5.json --strict
 
 ``--record`` additionally writes every produced row (plus the run
 configuration) to a JSON file — the regression trail benchmark PRs check in.
+``--compare BASELINE.json`` diffs the produced rows against a recorded
+baseline (benchmarks.compare: CHR drops and throughput cliffs); report-only
+unless ``--strict``.
 """
 from __future__ import annotations
 
@@ -24,10 +28,11 @@ def main() -> None:
     ap.add_argument(
         "--only",
         default=None,
-        help="comma-separated group list (fig2..fig9, metadata, cache_py, "
+        help="comma-separated group list (fig2..fig10, metadata, cache_py, "
         "cache_jax, cache_pallas, kernel_vs_jax, cdn, cdn_router, cdn_topo, "
         "fleet_policies, fleet_depth, fleet_placement, fleet_scale, "
-        "serving_energy, roofline, cache_roofline) — see docs/benchmarks.md",
+        "serving_energy, roofline, cache_roofline, telemetry_timing, "
+        "telemetry_overhead) — see docs/benchmarks.md",
     )
     ap.add_argument(
         "--record",
@@ -35,7 +40,30 @@ def main() -> None:
         metavar="PATH",
         help="also write the rows as JSON (perf-regression trail)",
     )
+    ap.add_argument(
+        "--compare",
+        default=None,
+        metavar="BASELINE",
+        help="diff produced rows against a recorded baseline JSON "
+        "(report-only unless --strict)",
+    )
+    ap.add_argument(
+        "--strict",
+        action="store_true",
+        help="with --compare: exit non-zero on regression",
+    )
+    ap.add_argument("--chr-tol", type=float, default=None,
+                    help="override compare's absolute CHR-drop tolerance")
+    ap.add_argument("--perf-tol", type=float, default=None,
+                    help="override compare's relative throughput tolerance")
     args = ap.parse_args()
+
+    baseline = None
+    if args.compare is not None:
+        # load before running: --record may legitimately overwrite the file
+        # being compared against (refreshing the trail in one invocation)
+        with open(args.compare) as fh:
+            baseline = json.load(fh)
 
     from benchmarks import (
         cache_bench,
@@ -44,6 +72,7 @@ def main() -> None:
         paper_figs,
         roofline_bench,
         serving_energy,
+        telemetry_bench,
     )
 
     groups: dict = {}
@@ -53,6 +82,7 @@ def main() -> None:
     groups.update(fleet_bench.ALL)
     groups.update(serving_energy.ALL)
     groups.update(roofline_bench.ALL)
+    groups.update(telemetry_bench.ALL)
 
     if args.only is None:
         selected = groups
@@ -100,6 +130,20 @@ def main() -> None:
             json.dump(payload, f, indent=1)
             f.write("\n")
         print(f"# recorded {len(recorded)} rows -> {args.record}", file=sys.stderr)
+    if baseline is not None:
+        from benchmarks import compare as bench_compare
+
+        tols = {}
+        if args.chr_tol is not None:
+            tols["chr_tol"] = args.chr_tol
+        if args.perf_tol is not None:
+            tols["perf_tol"] = args.perf_tol
+        regs, notes = bench_compare.compare(
+            baseline, {"rows": recorded}, **tols
+        )
+        code = bench_compare.report(regs, notes, strict=args.strict)
+        if code:
+            failed.append(f"compare vs {args.compare}")
     if failed:
         sys.exit(f"benchmark group(s) failed: {', '.join(failed)}")
 

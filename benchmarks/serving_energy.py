@@ -10,6 +10,7 @@ E_prefill/E_decode use the arch's active-parameter count (mistral-7b-class
 backbone by default, --full uses deepseek-v2's 21B active)."""
 from __future__ import annotations
 
+from repro import telemetry
 from repro.core import energy, registry, simulate, zipf
 from repro.configs import get_config
 from repro.models import build
@@ -43,6 +44,7 @@ def serving_energy_table(full: bool = False):
                 f"serving_energy/{name}",
                 r.mean_cpu_s / tlen * 1e6,
                 f"CHR={r.mean_chr:.4f} E_total={rep.e_total_j/1e3:.1f}kJ "
+                f"j_per_step={telemetry.j_per_step(r.mean_cpu_s, tlen):.3e} "
                 f"(recompute {rep.e_recompute_j/1e3:.1f}kJ, mgmt {rep.e_mgmt_j:.2f}J)",
             )
         )

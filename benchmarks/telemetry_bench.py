@@ -1,0 +1,84 @@
+"""Telemetry benchmarks (PR 6): the measured compile/execute-split rows.
+
+Groups:
+  * ``telemetry_timing``   — ``telemetry.measure`` on the jitted single-cache
+    scan for *every* registry policy kind: steps/sec, isolated compile time,
+    best-of-repeats execute time and measured J/request (the paper's §3
+    management-cost metric, now a wall-clock measurement instead of the
+    roofline estimate). These are the acceptance rows BENCH_PR6.json records.
+  * ``telemetry_overhead`` — the same simulation with the in-scan windowed
+    counters on vs off. The disabled path is bit-identical by construction
+    (tests/test_telemetry.py pins it); this group pins the *cost* of the
+    enabled path and fails the run if it ever exceeds 2x.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.cdn_bench import policy_window
+from repro import telemetry, workloads
+from repro.core import jax_cache, registry
+
+
+def _spec(kind: str, n: int, cap: int) -> "jax_cache.PolicySpec":
+    return jax_cache.PolicySpec(
+        kind=kind, n_objects=n, capacity=cap, window=policy_window(kind)
+    )
+
+
+def telemetry_timing(full: bool = False):
+    """Compile/execute split + measured J/request, every jax policy kind."""
+    n, cap = (10_000, 300) if full else (2_000, 60)
+    samples, tlen = (8, 100_000) if full else (2, 10_000)
+    traces = workloads.make_traces("churn", n, n_samples=samples, trace_len=tlen, seed=6)
+    rows = []
+    for kind in registry.names(jax=True):
+        spec = _spec(kind, n, cap)
+        tr = telemetry.measure(
+            jax_cache.simulate_batch, spec, traces, static=(0,), steps=traces.size
+        )
+        hits = jax_cache.simulate_batch(spec, traces)
+        rows.append(
+            (
+                f"telemetry_timing/{kind}",
+                tr.us_per_step,
+                tr.derived(CHR=f"{float(np.asarray(hits).mean()):.4f}"),
+            )
+        )
+    return rows
+
+
+def telemetry_overhead(full: bool = False):
+    """In-scan windowed counters: enabled-vs-disabled execute-time ratio."""
+    n, cap = (10_000, 300) if full else (2_000, 60)
+    samples, tlen = (4, 50_000) if full else (2, 10_000)
+    tel = telemetry.TelemetrySpec(window=tlen // 16)
+    traces = workloads.make_traces("churn", n, n_samples=samples, trace_len=tlen, seed=6)
+    rows = []
+    for kind in ("lru", "plfua", "tinylfu", "plfua_dyn"):
+        spec = _spec(kind, n, cap)
+        off = telemetry.measure(
+            jax_cache.simulate_batch, spec, traces, static=(0,), steps=traces.size
+        )
+        on = telemetry.measure(
+            jax_cache.simulate_batch, spec, traces, tel,
+            static=(0, 2), steps=traces.size,
+        )
+        ratio = on.execute_s / off.execute_s
+        suffix = "" if ratio < 2.0 else "/ERROR"
+        rows.append(
+            (
+                f"telemetry_overhead/{kind}{suffix}",
+                on.us_per_step,
+                f"overhead={ratio:.3f}x on_steps_per_s={on.steps_per_s:.0f} "
+                f"off_steps_per_s={off.steps_per_s:.0f} "
+                f"windows={tel.n_windows(tlen)}",
+            )
+        )
+    return rows
+
+
+ALL = {
+    "telemetry_timing": telemetry_timing,
+    "telemetry_overhead": telemetry_overhead,
+}

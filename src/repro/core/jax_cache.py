@@ -23,6 +23,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import registry, sketch
+from repro.telemetry import spec as telemetry_spec
 
 _I32_MAX = np.iinfo(np.int32).max
 
@@ -283,7 +284,21 @@ def refresh_hot(spec: PolicySpec, state: dict[str, jax.Array]) -> dict[str, jax.
     return {**state, "hot": hot, "sketch": sketch.rows_halve(state["sketch"])}
 
 
-def _chunked_scan(spec: PolicySpec, state, trace, active=None, cap=None):
+def _step_events(spec: PolicySpec, s, ns, hit, x, a):
+    """Derive the telemetry events of one applied step from the state
+    transition: a fill is a miss whose object ended up cached; an eviction is
+    a fill that did not grow the cache; a tinylfu aging event is the ``seen``
+    reset (the counter just incremented, so 0 means the window closed). All
+    masked by ``a`` so frozen (inactive / padded) steps emit nothing."""
+    fill = a & (~hit) & ns["in_cache"][x]
+    evict = fill & (ns["count"] == s["count"])
+    ev = {"fill": fill, "evict": evict, "count": ns["count"]}
+    if spec.kind == "tinylfu":
+        ev["aging"] = a & (ns["seen"] == 0)
+    return ev
+
+
+def _chunked_scan(spec: PolicySpec, state, trace, active=None, cap=None, instrument=False):
     """plfua_dyn driver: scan refresh-length chunks of ``step`` with the hot
     mask frozen, then :func:`refresh_hot` at every chunk boundary.
 
@@ -293,6 +308,10 @@ def _chunked_scan(spec: PolicySpec, state, trace, active=None, cap=None):
     expensive estimate-all + top-k run once per chunk instead of hiding inside
     a per-step ``cond`` that vmap would lower to always-on selects. ``active``
     masks out requests routed elsewhere (cdn) and the tail padding.
+
+    With ``instrument`` (static) the scan additionally emits the telemetry
+    event series — per-step fill/evict/count plus per-chunk refresh-fired and
+    hot-churn — and returns ``(state, hits, events)``.
     """
     L = spec.effective_refresh
     (T,) = trace.shape
@@ -312,39 +331,108 @@ def _chunked_scan(spec: PolicySpec, state, trace, active=None, cap=None):
         x, a = xa
         ns, hit = step(spec, s, x, cap)
         ns = jax.tree_util.tree_map(lambda o, n_: jnp.where(a, n_, o), s, ns)
+        if instrument:
+            return ns, (hit & a, _step_events(spec, s, ns, hit, x, a))
         return ns, hit & a
 
     def chunk(s, inp):
         xs, acts, fire_c = inp
-        s, hits = jax.lax.scan(f, s, (xs, acts))
+        s, out = jax.lax.scan(f, s, (xs, acts))
         refreshed = refresh_hot(spec, s)
+        if instrument:
+            churn = jnp.where(
+                fire_c, (s["hot"] != refreshed["hot"]).sum().astype(jnp.int32), 0
+            )
         s = jax.tree_util.tree_map(lambda o, r: jnp.where(fire_c, r, o), s, refreshed)
-        return s, hits
+        if instrument:
+            return s, (out, {"fired": fire_c, "churn": churn})
+        return s, out
 
-    state, hits = jax.lax.scan(
+    state, out = jax.lax.scan(
         chunk,
         state,
         (trace_p.reshape(n_chunks, L), active_p.reshape(n_chunks, L), fire),
     )
-    return state, hits.reshape(-1)[:T]
+    if not instrument:
+        return state, out.reshape(-1)[:T]
+    (hits, ev), chunk_ev = out
+    unpad = lambda arr: arr.reshape(-1)[:T]
+    events = {k: unpad(v) for k, v in ev.items()}
+    events.update(chunk_ev)  # (n_chunks,) fired/churn stay chunk-shaped
+    return state, unpad(hits), events
 
 
-@functools.partial(jax.jit, static_argnums=0)
-def simulate(spec: PolicySpec, trace: jax.Array):
-    """Run a full trace. Returns (hits: bool[T], final_state)."""
-    state = init_state(spec)
+def instrumented_scan(spec: PolicySpec, state, trace, active=None, cap=None):
+    """The telemetry-enabled twin of the plain ``lax.scan`` over ``step`` /
+    the masked fleet scan: identical state trajectory and hit series, plus
+    the per-step event series telemetry buckets (fill/evict/count, tinylfu
+    aging, plfua_dyn chunk refresh/churn). Only compiled when a
+    :class:`repro.telemetry.TelemetrySpec` is passed, so the disabled path
+    stays byte-for-byte the uninstrumented program."""
     if spec.kind == "plfua_dyn":
-        state, hits = _chunked_scan(spec, state, trace)
-    else:
-        state, hits = jax.lax.scan(lambda s, x: step(spec, s, x), state, trace)
-    return hits, state
+        return _chunked_scan(spec, state, trace, active, cap, instrument=True)
+    if active is None:
+        active = jnp.ones(trace.shape, jnp.bool_)
+
+    def f(s, xa):
+        x, a = xa
+        ns, hit = step(spec, s, x, cap)
+        ns = jax.tree_util.tree_map(lambda o, n_: jnp.where(a, n_, o), s, ns)
+        return ns, (hit & a, _step_events(spec, s, ns, hit, x, a))
+
+    state, (hits, events) = jax.lax.scan(f, state, (trace.astype(jnp.int32), active))
+    return state, hits, events
 
 
-@functools.partial(jax.jit, static_argnums=0)
-def simulate_batch(spec: PolicySpec, traces: jax.Array):
+def telemetry_series(
+    spec: PolicySpec, telemetry, trace_len: int, hits, events, active=None
+):
+    """Bucket one node's event series into [..., n_windows, N_METRICS]
+    (int32) under jit. ``active=None`` is the flat-cache convention (every
+    position is a request and every miss a fill offer)."""
+    return telemetry_spec.series_from_run(
+        telemetry.window,
+        trace_len,
+        hits=hits,
+        active=active,
+        fills=events["fill"],
+        evictions=events["evict"],
+        occupancy=events["count"],
+        aging=events.get("aging"),
+        fired=events.get("fired"),
+        churn=events.get("churn"),
+        chunk_len=spec.effective_refresh if spec.kind == "plfua_dyn" else None,
+        xp=jnp,
+    )
+
+
+@functools.partial(jax.jit, static_argnums=(0, 2))
+def simulate(spec: PolicySpec, trace: jax.Array, telemetry=None):
+    """Run a full trace. Returns (hits: bool[T], final_state), or with a
+    static :class:`repro.telemetry.TelemetrySpec` third argument
+    (hits, final_state, series[n_windows, N_METRICS]) — the windowed
+    telemetry accumulated inside the scan (docs/observability.md)."""
+    state = init_state(spec)
+    if telemetry is None:
+        if spec.kind == "plfua_dyn":
+            state, hits = _chunked_scan(spec, state, trace)
+        else:
+            state, hits = jax.lax.scan(lambda s, x: step(spec, s, x), state, trace)
+        return hits, state
+    state, hits, events = instrumented_scan(spec, state, trace)
+    series = telemetry_series(spec, telemetry, trace.shape[0], hits, events)
+    return hits, state, series
+
+
+@functools.partial(jax.jit, static_argnums=(0, 2))
+def simulate_batch(spec: PolicySpec, traces: jax.Array, telemetry=None):
     """vmap over samples: traces (S, T) -> hits (S, T). The paper's 12-sample
-    replication in one device launch."""
-    return jax.vmap(lambda tr: simulate(spec, tr)[0])(traces)
+    replication in one device launch. With ``telemetry`` set, returns
+    (hits (S, T), series (S, n_windows, N_METRICS))."""
+    if telemetry is None:
+        return jax.vmap(lambda tr: simulate(spec, tr)[0])(traces)
+    out = jax.vmap(lambda tr: simulate(spec, tr, telemetry))(traces)
+    return out[0], out[2]
 
 
 def chr_of(hits: jax.Array) -> jax.Array:

@@ -30,6 +30,10 @@ class PolicyInfo:
     #: in jax_cache.step / core.policies; see repro.fleet.placement) — every
     #: jax-capable kind does, asserted by the placement differential matrix
     placement: bool = True
+    #: kind emits the in-scan windowed telemetry series (repro.telemetry,
+    #: PR 6) on the jax tier, both fleet engines and the Pallas kernel —
+    #: asserted against the host-side oracle in tests/test_telemetry.py
+    telemetry: bool = True
     description: str = ""
     #: tunable knobs the PolicySpec/kernel accept for this kind (the docs
     #: policy-support matrix is generated from these — see
@@ -65,6 +69,7 @@ def names(
     jax: bool | None = None,
     pallas: bool | None = None,
     sketch: bool | None = None,
+    telemetry: bool | None = None,
 ) -> tuple[str, ...]:
     """Canonical-order names, filtered by tier support (None = don't care)."""
     out = []
@@ -76,6 +81,8 @@ def names(
         if pallas is not None and p.pallas != pallas:
             continue
         if sketch is not None and p.sketch != sketch:
+            continue
+        if telemetry is not None and p.telemetry != telemetry:
             continue
         out.append(p.name)
     return tuple(out)

@@ -43,12 +43,31 @@ from repro.fleet.topology import Topology
 __all__ = [
     "TierReport",
     "FleetReport",
+    "TIER_ROW_FIELDS",
     "aggregate_tiers",
     "mgmt_ops",
     "placement_ops",
     "fleet_report",
     "tier_report",
 ]
+
+#: the pinned TierReport.row() schema — key order and units are load-bearing
+#: (exporters, the CI bench artifacts and downstream spreadsheets key on
+#: them; tests/test_telemetry.py::test_report_row_schema pins this tuple).
+#: counts are totals over the report's scope (batch-summed), ``chr`` is a
+#: ratio in [0, 1], ``mgmt_cpu_s`` seconds, ``mgmt_energy_j`` Joules.
+TIER_ROW_FIELDS = (
+    "tier",
+    "policy",
+    "capacity",
+    "requests",
+    "hits",
+    "chr",
+    "evictions",
+    "mgmt_ops",
+    "mgmt_cpu_s",
+    "mgmt_energy_j",
+)
 
 #: dict/heap touches charged per processed request, by policy kind. Sketch
 #: kinds additionally pay core.sketch.DEPTH counter updates on every request
@@ -172,18 +191,10 @@ class TierReport:
         return self.hits / self.requests if self.requests else 0.0
 
     def row(self) -> dict:
-        return {
-            "tier": self.tier,
-            "policy": self.policy,
-            "capacity": self.capacity,
-            "requests": self.requests,
-            "hits": self.hits,
-            "chr": self.chr,
-            "evictions": self.evictions,
-            "mgmt_ops": self.mgmt_ops,
-            "mgmt_cpu_s": self.mgmt_cpu_s,
-            "mgmt_energy_j": self.mgmt_energy_j,
-        }
+        # built from TIER_ROW_FIELDS so the emitted keys cannot drift from
+        # the pinned schema (the bug class this replaced: ad-hoc dict
+        # literals growing per-call-site key variants)
+        return {f: getattr(self, f) for f in TIER_ROW_FIELDS}
 
 
 def tier_report(
@@ -244,6 +255,11 @@ class FleetReport:
     #: writes + decision cost; see placement_ops). ``requests`` on these
     #: rows counts placement decisions, ``hits``/``evictions`` are 0.
     per_level_placement: list[TierReport] = dataclasses.field(default_factory=list)
+    #: per-level windowed telemetry, batch-summed to ``(n_nodes, n_windows,
+    #: N_METRICS)`` per level — present when fleet_report was handed the run's
+    #: TelemetrySpec (see window_rows)
+    per_level_series: list[np.ndarray] | None = None
+    telemetry_window: int | None = None
 
     @property
     def level_chr(self) -> list[float]:
@@ -294,6 +310,32 @@ class FleetReport:
                 out.append(pl.row())
         return out
 
+    def window_rows(self) -> list[dict]:
+        """Per-(node, window) telemetry rows — repro.telemetry.export shape,
+        tagged with the level name and policy. Requires the report to have
+        been built with ``fleet_report(..., telemetry=spec)``."""
+        if self.per_level_series is None:
+            raise ValueError(
+                "no windowed telemetry on this report; run the fleet with a "
+                "TelemetrySpec and pass it to fleet_report(..., telemetry=...)"
+            )
+        from repro.telemetry import export
+
+        rows: list[dict] = []
+        for nodes, agg, series in zip(
+            self.per_node, self.per_level, self.per_level_series
+        ):
+            rows.extend(
+                export.series_rows(
+                    series,
+                    self.telemetry_window,
+                    labels=[t.tier for t in nodes],
+                    level=agg.tier,
+                    policy=agg.policy,
+                )
+            )
+        return rows
+
 
 def fleet_report(
     topo: Topology,
@@ -301,11 +343,17 @@ def fleet_report(
     *,
     cost_model: str = "heap",
     per_op_s: float = 1e-7,
+    telemetry=None,
 ) -> FleetReport:
     """Roll up one ``simulate_fleet`` result (host-side numpy).
 
     For batched results (leading sample axis from ``simulate_fleet_batch``)
     counters are summed over samples — i.e. the report covers the whole batch.
+
+    ``telemetry`` is the run's TelemetrySpec: when the result carries the
+    in-scan windowed series (``result["telemetry"]``, one array per level),
+    the report keeps them batch-summed per node and ``window_rows()`` exports
+    the per-(node, window) view.
     """
     names = topo.names
     # total trace steps across the batch: every request hits exactly one edge
@@ -357,10 +405,31 @@ def fleet_report(
         )
     n_requests = per_level[0].requests
     origin = n_requests - sum(t.hits for t in per_level)
+    per_level_series = None
+    if telemetry is not None:
+        if "telemetry" not in result:
+            raise ValueError(
+                "telemetry= given but the result carries no windowed series; "
+                "run simulate_fleet(..., telemetry=spec) first"
+            )
+        per_level_series = []
+        for l, arr in enumerate(result["telemetry"]):
+            a = np.asarray(arr)
+            # collapse any batch axes down to (n_nodes, n_windows, N_METRICS);
+            # counters sum over samples like the scalar tier counters above
+            a = a.reshape((-1,) + a.shape[-3:]).sum(axis=0)
+            if a.shape[0] != len(topo.levels[l]):
+                raise ValueError(
+                    f"level {l} series has {a.shape[0]} nodes, topology has "
+                    f"{len(topo.levels[l])}"
+                )
+            per_level_series.append(a)
     return FleetReport(
         per_node=per_node,
         per_level=per_level,
         n_requests=n_requests,
         origin_requests=origin,
         per_level_placement=per_level_placement,
+        per_level_series=per_level_series,
+        telemetry_window=None if telemetry is None else telemetry.window,
     )

@@ -47,6 +47,7 @@ from repro.core.jax_cache import PolicySpec
 from repro.fleet import placement as placement_mod
 from repro.fleet import topology as topo_mod
 from repro.fleet.topology import Topology
+from repro.telemetry import spec as telemetry_spec
 
 __all__ = [
     "masked_scan",
@@ -56,12 +57,18 @@ __all__ = [
 ]
 
 
-def masked_scan(spec: PolicySpec, state, trace, active, cap=None):
+def masked_scan(spec: PolicySpec, state, trace, active, cap=None, *, instrument=False):
     """Scan ``step`` over the trace, freezing state where ``active`` is False.
 
     plfua_dyn routes through the chunked scan so its global-time hot-set
     refresh fires at trace-position boundaries for every instance, active or
-    not (the reference oracle drives ``refresh_now`` on the same timer)."""
+    not (the reference oracle drives ``refresh_now`` on the same timer).
+
+    ``instrument`` (static) switches to the telemetry twin, which returns
+    ``(state, hits, events)`` with the per-step event series (identical
+    state/hit trajectory — asserted in tests/test_telemetry.py)."""
+    if instrument:
+        return jax_cache.instrumented_scan(spec, state, trace, active, cap)
     if spec.kind == "plfua_dyn":
         return jax_cache._chunked_scan(spec, state, trace, active, cap)
 
@@ -121,47 +128,67 @@ def stack_level_state(specs: tuple[PolicySpec, ...]):
     )
 
 
-def run_level(specs: tuple[PolicySpec, ...], trace, active):
+def run_level(specs: tuple[PolicySpec, ...], trace, active, *, instrument=False):
     """One level: vmap the masked scan over its nodes.
 
     ``active``: (K, T) bool — request t routed here and unserved below.
-    Returns (stacked final states, (K, T) hit series)."""
+    Returns (stacked final states, (K, T) hit series), plus the vmapped
+    per-node event series when ``instrument`` is set."""
     s0 = specs[0]
     states = stack_level_state(specs)
     caps = jnp.array([s.capacity for s in specs], jnp.int32)
     return jax.vmap(
-        lambda st, act, cap: masked_scan(s0, st, trace, act, cap)
+        lambda st, act, cap: masked_scan(s0, st, trace, act, cap, instrument=instrument)
     )(states, active, caps)
 
 
-def upper_levels(topo: Topology, trace, assigns, demand):
+def level_series(spec: PolicySpec, telemetry, trace_len, hits, active, events):
+    """Bucket one level's vmapped event series into (K, n_windows, N_METRICS)
+    — the level-major engine has no placement gate, so fill offers default to
+    the miss count (every miss of an active node is offered)."""
+    return jax_cache.telemetry_series(
+        spec, telemetry, trace_len, hits, events, active=active
+    )
+
+
+def upper_levels(topo: Topology, trace, assigns, demand, *, telemetry=None):
     """Run levels 1..L-1 given the edge tier's surviving ``demand`` stream.
 
     Shared by the single-device path and the shard_map path (which computes
     level 0 under a device mesh and the global miss stream via a collective).
-    Returns (per-level hit series list, counters list, states list, demand).
+    Returns (per-level hit series list, counters list, states list, demand[,
+    per-level telemetry series list when ``telemetry`` is set]).
     """
-    level_hits, counters, states_out = [], [], []
+    instrument = telemetry is not None
+    level_hits, counters, states_out, series_out = [], [], [], []
     for l in range(1, topo.n_levels):
         specs = topo.levels[l]
         K = len(specs)
         active = (
             assigns[l][None, :] == jnp.arange(K, dtype=jnp.int32)[:, None]
         ) & demand[None, :]
-        states, hits = run_level(specs, trace, active)
+        if instrument:
+            states, hits, events = run_level(specs, trace, active, instrument=True)
+            series_out.append(
+                level_series(specs[0], telemetry, trace.shape[0], hits, active, events)
+            )
+        else:
+            states, hits = run_level(specs, trace, active)
         hit_l = hits.any(axis=0)
         level_hits.append(hits)
         counters.append(tier_counters(specs[0], hits, active, trace, states))
         states_out.append(states)
         demand = demand & ~hit_l
+    if instrument:
+        return level_hits, counters, states_out, demand, series_out
     return level_hits, counters, states_out, demand
 
 
-def _simulate_fleet_impl(topo: Topology, trace, assignment):
+def _simulate_fleet_impl(topo: Topology, trace, assignment, telemetry=None):
     if topo.has_placement:
         # non-lce placement couples the levels at each trace position ->
         # the time-major engine (see module docstring)
-        return _simulate_placed_impl(topo, trace, assignment)
+        return _simulate_placed_impl(topo, trace, assignment, telemetry)
     trace = trace.astype(jnp.int32)
     assignment = assignment.astype(jnp.int32)
     assigns = level_assignments(topo, trace, assignment)
@@ -169,14 +196,25 @@ def _simulate_fleet_impl(topo: Topology, trace, assignment):
     specs0 = topo.levels[0]
     E = len(specs0)
     active0 = assigns[0][None, :] == jnp.arange(E, dtype=jnp.int32)[:, None]
-    edge_states, edge_hits = run_level(specs0, trace, active0)
-    demand = ~edge_hits.any(axis=0)
-
-    hits_up, counters_up, states_up, demand = upper_levels(
-        topo, trace, assigns, demand
-    )
+    if telemetry is not None:
+        edge_states, edge_hits, edge_events = run_level(
+            specs0, trace, active0, instrument=True
+        )
+        edge_series = level_series(
+            specs0[0], telemetry, trace.shape[0], edge_hits, active0, edge_events
+        )
+        demand = ~edge_hits.any(axis=0)
+        hits_up, counters_up, states_up, demand, series_up = upper_levels(
+            topo, trace, assigns, demand, telemetry=telemetry
+        )
+    else:
+        edge_states, edge_hits = run_level(specs0, trace, active0)
+        demand = ~edge_hits.any(axis=0)
+        hits_up, counters_up, states_up, demand = upper_levels(
+            topo, trace, assigns, demand
+        )
     all_hits = [edge_hits, *hits_up]
-    return {
+    out = {
         # (T,) bool per level: request served at this level
         "hit": tuple(h.any(axis=0) for h in all_hits),
         # (K_l, T) bool per level: which node served it
@@ -191,6 +229,10 @@ def _simulate_fleet_impl(topo: Topology, trace, assignment):
         # (T,) bool: missed every tier -> fetched from origin
         "origin_miss": demand,
     }
+    if telemetry is not None:
+        # (K_l, n_windows, N_METRICS) int32 per level (docs/observability.md)
+        out["telemetry"] = (edge_series, *series_up)
+    return out
 
 
 # ------------------------------------------------- time-major placed engine
@@ -235,6 +277,7 @@ def _placed_run(
     level0_states=None,
     level0_caps=None,
     edge_axis: str | None = None,
+    instrument: bool = False,
 ):
     """The time-major scan shared by the single-device and edge-sharded
     placed paths. ``trace`` (T,) int32, ``assigns`` one (T,) int32 per level.
@@ -250,7 +293,15 @@ def _placed_run(
     is one (T,) bool per level, ``fills``/``admitted`` one (K_l,) int32 per
     level (level 0 local in the sharded case), and ``pstates`` maps admit
     levels to their placement-sketch state.
+
+    ``instrument`` (static, single-device only) additionally emits the
+    per-level telemetry event series and extends the return to
+    ``(..., hit_lv, tel_lv, chunk_len)``; the placement gate makes
+    ``fill_offers`` engine-computed here (a consulted miss whose gate was
+    open), unlike the level-major engine where every miss is an offer.
     """
+    if instrument and edge_axis is not None:
+        raise NotImplementedError("telemetry is single-device (no edge mesh)")
     L = topo.n_levels
     (T,) = trace.shape
     specs = [lvl[0] for lvl in topo.levels]
@@ -315,7 +366,7 @@ def _placed_run(
         for l in reversed(range(L)):
             serve = jnp.where(hits[l], jnp.int32(l), serve)
         # ---- fill-gated update of the one consulted node per level
-        new_states, new_fills, new_admitted = [], [], []
+        new_states, new_fills, new_admitted, tel = [], [], [], []
         new_pstates = dict(pstates)
         for l in range(L):
             spec = specs[l]
@@ -364,6 +415,18 @@ def _placed_run(
                     ns,
                 )
             )
+            if instrument:
+                gate = jnp.bool_(True) if fill is None else fill
+                tel_l = {
+                    "fill": insert,
+                    "evict": insert & (ns["count"] == st["count"]),
+                    "offer": act & (~hit) & gate,
+                    # post-step occupancy snapshot of the whole node fleet
+                    "count": new_states[l]["count"],
+                }
+                if spec.kind == "tinylfu":
+                    tel_l["aging"] = act & (ns["seen"] == 0)
+                tel.append(tel_l)
             new_fills.append(fills[l].at[node].add(insert.astype(jnp.int32)))
             # same admitted_requests conventions as tier_counters
             if spec.kind == "plfua":
@@ -381,6 +444,8 @@ def _placed_run(
             tuple(new_fills),
             tuple(new_admitted),
         )
+        if instrument:
+            return carry, (tuple(hits), tuple(tel))
         return carry, tuple(hits)
 
     # chunked over the gcd of the plfua_dyn refresh periods so the
@@ -413,21 +478,34 @@ def _placed_run(
 
     def chunk_fn(carry, inp):
         xs, fire_c = inp
-        carry, hits = jax.lax.scan(step_t, carry, xs)
+        carry, out = jax.lax.scan(step_t, carry, xs)
         states, pstates, fills, admitted = carry
         states = list(states)
+        churns = []
         for j, l in enumerate(dyn_levels):
             refreshed = jax.vmap(
                 lambda s: jax_cache.refresh_hot(specs[l], s)
             )(states[l])
+            if instrument:
+                churns.append(
+                    jnp.where(
+                        fire_c[j],
+                        (states[l]["hot"] != refreshed["hot"]).sum(-1).astype(jnp.int32),
+                        0,
+                    )
+                )
             states[l] = jax.tree_util.tree_map(
                 lambda o, r: jnp.where(fire_c[j], r, o), states[l], refreshed
             )
-        return (tuple(states), pstates, fills, admitted), hits
+        carry = (tuple(states), pstates, fills, admitted)
+        if instrument:
+            hits, tel = out
+            return carry, (hits, tel, tuple(churns))
+        return carry, out
 
     chunk = lambda a: a.reshape(n_chunks, G, *a.shape[1:])
     carry0 = (tuple(states), pstates, tuple(fills), tuple(admitted))
-    (states, pstates, fills, admitted), hits = jax.lax.scan(
+    (states, pstates, fills, admitted), out = jax.lax.scan(
         chunk_fn,
         carry0,
         (
@@ -440,19 +518,55 @@ def _placed_run(
             jnp.asarray(fire),
         ),
     )
+    if not instrument:
+        hit_lv = [h.reshape(-1)[:T] for h in out]
+        return list(states), pstates, list(fills), list(admitted), hit_lv
+    hits, tel, churns = out
     hit_lv = [h.reshape(-1)[:T] for h in hits]
-    return list(states), pstates, list(fills), list(admitted), hit_lv
+    # un-chunk the event series: scalars (n_chunks, G) -> (T,); the per-step
+    # occupancy snapshot (n_chunks, G, K) -> (K, T)
+    tel_lv = []
+    for l in range(L):
+        d = {
+            k: (
+                v.reshape(-1)[:T]
+                if v.ndim == 2
+                else v.reshape(-1, v.shape[-1])[:T].T
+            )
+            for k, v in tel[l].items()
+        }
+        tel_lv.append(d)
+    for j, l in enumerate(dyn_levels):
+        K = churns[j].shape[-1]
+        # all nodes of a dyn level refresh on the same global-time schedule
+        tel_lv[l]["fired"] = jnp.broadcast_to(jnp.asarray(fire[:, j]), (K, n_chunks))
+        tel_lv[l]["churn"] = churns[j].T  # (n_chunks, K) -> (K, n_chunks)
+    return list(states), pstates, list(fills), list(admitted), hit_lv, tel_lv, G
 
 
-def assemble_placed(topo: Topology, assigns, states, pstates, fills, admitted, hit_lv):
+def assemble_placed(
+    topo: Topology,
+    assigns,
+    states,
+    pstates,
+    fills,
+    admitted,
+    hit_lv,
+    *,
+    telemetry=None,
+    tel_lv=None,
+    chunk_len=None,
+):
     """Fold a ``_placed_run`` result into the ``simulate_fleet`` pytree.
 
     Per-node activity is recomputed from the hit series (level ``l`` node
     ``k`` is active at ``t`` iff the request routed to it and no level below
-    served it) — identical to the level-major masks by construction."""
+    served it) — identical to the level-major masks by construction. With
+    ``telemetry``/``tel_lv`` the per-step events (which are consulted-node
+    scalars) are scattered to nodes through the same masks and bucketed."""
     T = hit_lv[0].shape[0]
     demand = jnp.ones((T,), jnp.bool_)
-    tiers, node_hits = [], []
+    tiers, node_hits, series = [], [], []
     for l in range(topo.n_levels):
         K = len(topo.levels[l])
         active = (
@@ -471,8 +585,29 @@ def assemble_placed(topo: Topology, assigns, states, pstates, fills, admitted, h
             }
         )
         node_hits.append(nh)
+        if telemetry is not None:
+            ev = tel_lv[l]
+            per_node = lambda s: active & s[None, :]
+            aging = ev.get("aging")
+            series.append(
+                telemetry_spec.series_from_run(
+                    telemetry.window,
+                    T,
+                    hits=nh,
+                    active=active,
+                    fills=per_node(ev["fill"]),
+                    evictions=per_node(ev["evict"]),
+                    occupancy=ev["count"],
+                    offers=per_node(ev["offer"]),
+                    aging=None if aging is None else per_node(aging),
+                    fired=ev.get("fired"),
+                    churn=ev.get("churn"),
+                    chunk_len=chunk_len,
+                    xp=jnp,
+                )
+            )
         demand = demand & ~hit_lv[l]
-    return {
+    out = {
         "hit": tuple(hit_lv),
         "node_hit": tuple(node_hits),
         "tiers": tuple(tiers),
@@ -481,18 +616,29 @@ def assemble_placed(topo: Topology, assigns, states, pstates, fills, admitted, h
         # admit levels' placement-sketch state (level index -> rows/seen)
         "placement_states": pstates,
     }
+    if telemetry is not None:
+        out["telemetry"] = tuple(series)
+    return out
 
 
-def _simulate_placed_impl(topo: Topology, trace, assignment):
+def _simulate_placed_impl(topo: Topology, trace, assignment, telemetry=None):
     trace = trace.astype(jnp.int32)
     assignment = assignment.astype(jnp.int32)
     assigns = level_assignments(topo, trace, assignment)
+    if telemetry is not None:
+        states, pstates, fills, admitted, hit_lv, tel_lv, G = _placed_run(
+            topo, trace, assigns, instrument=True
+        )
+        return assemble_placed(
+            topo, assigns, states, pstates, fills, admitted, hit_lv,
+            telemetry=telemetry, tel_lv=tel_lv, chunk_len=G,
+        )
     states, pstates, fills, admitted, hit_lv = _placed_run(topo, trace, assigns)
     return assemble_placed(topo, assigns, states, pstates, fills, admitted, hit_lv)
 
 
-@functools.partial(jax.jit, static_argnums=0)
-def simulate_fleet(topo: Topology, trace: jax.Array, assignment: jax.Array):
+@functools.partial(jax.jit, static_argnums=(0, 3))
+def simulate_fleet(topo: Topology, trace: jax.Array, assignment: jax.Array, telemetry=None):
     """Run one trace through an N-tier topology. See module docstring.
 
     Returns a dict of arrays:
@@ -502,13 +648,19 @@ def simulate_fleet(topo: Topology, trace: jax.Array, assignment: jax.Array):
                       admitted_requests/inserts/evictions/count), shape (K_l,)
       ``states``      tuple per level of stacked final policy states
       ``origin_miss`` (T,) bool — missed every tier
+
+    With a static :class:`repro.telemetry.TelemetrySpec` the dict gains
+    ``telemetry``: per level a (K_l, n_windows, N_METRICS) int32 windowed
+    series accumulated inside the scan (docs/observability.md).
     """
-    return _simulate_fleet_impl(topo, trace, assignment)
+    return _simulate_fleet_impl(topo, trace, assignment, telemetry)
 
 
-@functools.partial(jax.jit, static_argnums=0)
-def simulate_fleet_batch(topo: Topology, traces: jax.Array, assignments: jax.Array):
+@functools.partial(jax.jit, static_argnums=(0, 3))
+def simulate_fleet_batch(
+    topo: Topology, traces: jax.Array, assignments: jax.Array, telemetry=None
+):
     """vmap the fleet over (S, T) trace samples in one device launch."""
-    return jax.vmap(lambda tr, a: _simulate_fleet_impl(topo, tr, a))(
+    return jax.vmap(lambda tr, a: _simulate_fleet_impl(topo, tr, a, telemetry))(
         traces, assignments
     )

@@ -49,11 +49,16 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 from repro.core import registry, sketch
+from repro.telemetry import spec as telemetry_spec
 
 _I32_MAX = np.iinfo(np.int32).max
 
 KERNEL_KINDS = registry.names(pallas=True)
 _SKETCH_KINDS = registry.names(sketch=True)
+
+# telemetry output rows: METRICS padded up to a TPU-friendly sublane count
+_TEL_ROWS = 16
+assert telemetry_spec.N_METRICS <= _TEL_ROWS
 
 
 def _round_up(x: int, m: int) -> int:
@@ -144,7 +149,7 @@ def _cache_sim_kernel(
     hits_ref,  # (1, 1) int32 VMEM out
     freq_ref,  # (1, N_pad) int32 VMEM out (for lru: last-access stamps)
     cache_ref,  # (1, N_pad) int32 VMEM out (0/1 mask)
-    *,
+    *tel_refs,  # (1, _TEL_ROWS, n_w_pad) int32 VMEM out, iff telemetry_window
     kind: str,
     capacity: int,
     hot_size: int,
@@ -155,9 +160,41 @@ def _cache_sim_kernel(
     n_objects: int,
     n_pad: int,
     trace_len: int,
+    telemetry_window: int = 0,
+    n_w_pad: int = 0,
 ):
     iota = jax.lax.broadcasted_iota(jnp.int32, (1, n_pad), 1)
     iota_u32 = iota.astype(jnp.uint32)
+
+    TEL = telemetry_window > 0
+    if TEL:
+        W = telemetry_window
+        n_w = -(-trace_len // W)
+        m_iota = jax.lax.broadcasted_iota(jnp.int32, (_TEL_ROWS, 1), 0)
+        nw_iota = jax.lax.broadcasted_iota(jnp.int32, (1, n_w_pad), 1)
+        _row = lambda i: (m_iota == i).astype(jnp.int32)
+
+        def tel_update(tel, t, *, hit, fill, evict, count, aging=None, active=None):
+            """Scatter one step's events into the windowed accumulator via a
+            one-hot window column (metric row order = telemetry_spec.METRICS;
+            occupancy is a set-at-window-end, everything else an add)."""
+            act = jnp.bool_(True) if active is None else active
+            i32 = lambda b: (b & act).astype(jnp.int32)
+            won = nw_iota == jnp.minimum(t // W, n_w - 1)
+            inc = (
+                _row(0) * i32(jnp.bool_(True))  # requests
+                + _row(1) * i32(hit)  # hits
+                + _row(2) * i32(~hit)  # misses
+                + _row(3) * i32(fill)  # fills
+                + _row(4) * i32(evict)  # evictions
+                + _row(5) * i32(~hit)  # fill_offers: flat cache, every miss
+            )
+            if aging is not None:
+                inc = inc + _row(7) * i32(aging)  # refreshes (tinylfu aging)
+            tel = tel + inc * won.astype(jnp.int32)
+            is_end = act & (((t + 1) % W == 0) | (t == trace_len - 1))
+            tel = jnp.where((m_iota == 6) & won & is_end, count, tel)  # occupancy
+            return tel
 
     sketchy = kind in _SKETCH_KINDS
     if sketchy:
@@ -182,7 +219,11 @@ def _cache_sim_kernel(
     def base_step(t, carry, active=None):
         """lru / lfu / plfu / plfua / plfua_dyn one-hot step (plfua_dyn's
         carry additionally threads (rows, hot); ``active`` masks tail
-        padding of the chunked plfua_dyn walk)."""
+        padding of the chunked plfua_dyn walk). With telemetry the windowed
+        accumulator rides as the carry's last element in every driver."""
+        if TEL:
+            *carry, tel = carry
+            carry = tuple(carry)
         if kind == "plfua_dyn":
             freq, in_cache, count, hits, rows, hot = carry
         else:
@@ -219,6 +260,11 @@ def _cache_sim_kernel(
         insert = (~hit) & admitted
         new_in_cache = new_in_cache | (onehot & insert)
         new_count = count + insert.astype(jnp.int32) - need_evict.astype(jnp.int32)
+        if TEL:
+            tel = tel_update(
+                tel, t, hit=hit, fill=insert, evict=need_evict,
+                count=new_count, active=active,
+            )
         if active is not None:
             new_freq = jnp.where(active, new_freq, freq)
             new_in_cache = jnp.where(active, new_in_cache, in_cache)
@@ -230,10 +276,14 @@ def _cache_sim_kernel(
                 new_rows = [
                     jnp.where(active, nr, r) for nr, r in zip(new_rows, rows)
                 ]
-            return new_freq, new_in_cache, new_count, hits, new_rows, hot
-        return new_freq, new_in_cache, new_count, hits
+            out = (new_freq, new_in_cache, new_count, hits, new_rows, hot)
+        else:
+            out = (new_freq, new_in_cache, new_count, hits)
+        return out + (tel,) if TEL else out
 
     def wlfu_step(t, carry):
+        if TEL:
+            *carry, tel = carry
         freq, in_cache, count, hits, ring, ptr = carry
         x = trace_ref[0, t]
         onehot = iota == x
@@ -251,9 +301,14 @@ def _cache_sim_kernel(
         in_cache = (in_cache & ~(victim_onehot & need_evict)) | onehot
         count = count + (~hit).astype(jnp.int32) - need_evict.astype(jnp.int32)
         hits = hits + hit.astype(jnp.int32)
+        if TEL:
+            tel = tel_update(tel, t, hit=hit, fill=~hit, evict=need_evict, count=count)
+            return freq, in_cache, count, hits, ring, ptr, tel
         return freq, in_cache, count, hits, ring, ptr
 
     def tinylfu_step(t, carry):
+        if TEL:
+            *carry, tel = carry
         if doorkeeper:
             freq, in_cache, count, hits, rows, seen, bloom = carry
         else:
@@ -303,25 +358,33 @@ def _cache_sim_kernel(
         )
         count = count + insert.astype(jnp.int32) - need_evict.astype(jnp.int32)
         hits = hits + hit.astype(jnp.int32)
-        if doorkeeper:
-            return freq, in_cache, count, hits, rows, seen, bloom
-        return freq, in_cache, count, hits, rows, seen
+        if TEL:
+            tel = tel_update(
+                tel, t, hit=hit, fill=insert, evict=need_evict, count=count, aging=age
+            )
+        out = (
+            (freq, in_cache, count, hits, rows, seen, bloom)
+            if doorkeeper
+            else (freq, in_cache, count, hits, rows, seen)
+        )
+        return out + (tel,) if TEL else out
 
     # -------------------------------------------------------------- drivers
     freq0 = jnp.zeros((1, n_pad), jnp.int32)
     cache0 = jnp.zeros((1, n_pad), jnp.bool_)
     zero = jnp.int32(0)
+    tel0 = (jnp.zeros((_TEL_ROWS, n_w_pad), jnp.int32),) if TEL else ()
 
     if kind == "wlfu":
         ring0 = jnp.full((1, r_pad), -1, jnp.int32)
         carry = jax.lax.fori_loop(
-            0, trace_len, wlfu_step, (freq0, cache0, zero, zero, ring0, zero)
+            0, trace_len, wlfu_step, (freq0, cache0, zero, zero, ring0, zero) + tel0
         )
     elif kind == "tinylfu":
         carry = (freq0, cache0, zero, zero, rows0, zero)
         if doorkeeper:
             carry = carry + (jnp.zeros((1, b_pad), jnp.bool_),)
-        carry = jax.lax.fori_loop(0, trace_len, tinylfu_step, carry)
+        carry = jax.lax.fori_loop(0, trace_len, tinylfu_step, carry + tel0)
     elif kind == "plfua_dyn":
         # chunked walk, hot mask frozen inside each chunk; the refresh fires
         # only when its whole period lies within the real trace (global-time
@@ -338,27 +401,40 @@ def _cache_sim_kernel(
                 return base_step(t, cy, active=t < trace_len)
 
             carry = jax.lax.fori_loop(0, refresh, step_in_chunk, carry)
+            if TEL:
+                *carry, tel = carry
             freq, in_cache, count, hits, rows, hot = carry
             fire = (c + 1) * refresh <= trace_len
             new_hot, new_rows = _refresh_hot(
                 rows, tables, n_pad=n_pad, n_objects=n_objects, hot_k=hot_size
             )
+            if TEL:
+                # refresh + hot-churn land in the window of the request that
+                # completed the period (trace position (c+1)*refresh - 1)
+                pos = jnp.minimum((c + 1) * refresh - 1, trace_len - 1)
+                won = (nw_iota == pos // W).astype(jnp.int32)
+                fire_i = fire.astype(jnp.int32)
+                churn = jnp.sum((hot != new_hot).astype(jnp.int32))
+                tel = tel + (_row(7) * fire_i + _row(8) * (churn * fire_i)) * won
             hot = jnp.where(fire, new_hot, hot)
             rows = [jnp.where(fire, nr, r) for nr, r in zip(new_rows, rows)]
-            return freq, in_cache, count, hits, rows, hot
+            out = (freq, in_cache, count, hits, rows, hot)
+            return out + (tel,) if TEL else out
 
         carry = jax.lax.fori_loop(
-            0, n_chunks, chunk, (freq0, cache0, zero, zero, rows0, hot0)
+            0, n_chunks, chunk, (freq0, cache0, zero, zero, rows0, hot0) + tel0
         )
     else:
         carry = jax.lax.fori_loop(
-            0, trace_len, base_step, (freq0, cache0, zero, zero)
+            0, trace_len, base_step, (freq0, cache0, zero, zero) + tel0
         )
 
     freq, in_cache, _, hits = carry[0], carry[1], carry[2], carry[3]
     hits_ref[0, 0] = hits
     freq_ref[...] = freq
     cache_ref[...] = in_cache.astype(jnp.int32)
+    if TEL:
+        tel_refs[0][...] = carry[-1][None]
 
 
 def cache_sim_pallas(
@@ -372,6 +448,7 @@ def cache_sim_pallas(
     refresh: int = 0,
     sketch_width: int = 0,
     doorkeeper: int = 0,
+    telemetry_window: int = 0,
     interpret: bool = True,
 ):
     """Simulate S same-shape traces on the Pallas grid.
@@ -386,6 +463,10 @@ def cache_sim_pallas(
       sketch_width: count-min width for the sketch kinds
         (0 -> ``sketch.default_width``).
       doorkeeper: tinylfu bloom front size in bits (0 = off).
+      telemetry_window: windowed-telemetry bucket size W (0 = off). When set,
+        the kernel accumulates the :data:`repro.telemetry.METRICS` counters
+        per ceil(T/W) window inside the trace loop and a fourth output is
+        returned; the disabled kernel program is unchanged.
 
     The defaults mirror ``jax_cache.PolicySpec`` exactly, so identical
     arguments produce bit-identical state across the two tiers.
@@ -394,6 +475,8 @@ def cache_sim_pallas(
       hits:     (S,)      int32 — total hits per sample (CHR = hits / T).
       freq:     (S, N)    int32 — final frequency table (lru: last-access stamps).
       in_cache: (S, N)    bool  — final cache contents.
+      series:   (S, n_windows, N_METRICS) int32 — only with telemetry_window,
+                matching ``jax_cache.simulate(..., TelemetrySpec(W))`` exactly.
     """
     if kind not in KERNEL_KINDS:
         raise ValueError(f"kind={kind!r} not in {KERNEL_KINDS}")
@@ -403,6 +486,8 @@ def cache_sim_pallas(
         raise ValueError(f"doorkeeper must be >= 0, got {doorkeeper}")
     if doorkeeper and kind != "tinylfu":
         raise ValueError("doorkeeper is a tinylfu-only option")
+    if telemetry_window < 0:
+        raise ValueError(f"telemetry_window must be >= 0, got {telemetry_window}")
     s, t = traces.shape
     n_pad = _round_up(max(n_objects, 128), 128)
     if kind in ("plfua", "plfua_dyn"):
@@ -420,6 +505,8 @@ def cache_sim_pallas(
         else 0
     )
 
+    n_w = -(-t // telemetry_window) if telemetry_window else 0
+    n_w_pad = _round_up(max(n_w, 128), 128) if telemetry_window else 0
     kernel = functools.partial(
         _cache_sim_kernel,
         kind=kind,
@@ -432,21 +519,36 @@ def cache_sim_pallas(
         n_objects=n_objects,
         n_pad=n_pad,
         trace_len=t,
+        telemetry_window=telemetry_window,
+        n_w_pad=n_w_pad,
     )
-    hits, freq, cache = pl.pallas_call(
+    out_specs = [
+        pl.BlockSpec((1, 1), lambda i: (i, 0)),
+        pl.BlockSpec((1, n_pad), lambda i: (i, 0)),
+        pl.BlockSpec((1, n_pad), lambda i: (i, 0)),
+    ]
+    out_shape = [
+        jax.ShapeDtypeStruct((s, 1), jnp.int32),
+        jax.ShapeDtypeStruct((s, n_pad), jnp.int32),
+        jax.ShapeDtypeStruct((s, n_pad), jnp.int32),
+    ]
+    if telemetry_window:
+        out_specs.append(pl.BlockSpec((1, _TEL_ROWS, n_w_pad), lambda i: (i, 0, 0)))
+        out_shape.append(jax.ShapeDtypeStruct((s, _TEL_ROWS, n_w_pad), jnp.int32))
+    out = pl.pallas_call(
         kernel,
         grid=(s,),
         in_specs=[pl.BlockSpec((1, t), lambda i: (i, 0))],
-        out_specs=[
-            pl.BlockSpec((1, 1), lambda i: (i, 0)),
-            pl.BlockSpec((1, n_pad), lambda i: (i, 0)),
-            pl.BlockSpec((1, n_pad), lambda i: (i, 0)),
-        ],
-        out_shape=[
-            jax.ShapeDtypeStruct((s, 1), jnp.int32),
-            jax.ShapeDtypeStruct((s, n_pad), jnp.int32),
-            jax.ShapeDtypeStruct((s, n_pad), jnp.int32),
-        ],
+        out_specs=out_specs,
+        out_shape=out_shape,
         interpret=interpret,
     )(traces.astype(jnp.int32))
-    return hits[:, 0], freq[:, :n_objects], cache[:, :n_objects].astype(bool)
+    hits, freq, cache = out[0], out[1], out[2]
+    result = (hits[:, 0], freq[:, :n_objects], cache[:, :n_objects].astype(bool))
+    if telemetry_window:
+        # (S, rows, w_pad) -> (S, n_windows, N_METRICS) in METRICS order
+        series = jnp.transpose(
+            out[3][:, : telemetry_spec.N_METRICS, :n_w], (0, 2, 1)
+        )
+        result = result + (series,)
+    return result

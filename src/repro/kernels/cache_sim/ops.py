@@ -23,6 +23,7 @@ def _on_tpu() -> bool:
         "refresh",
         "sketch_width",
         "doorkeeper",
+        "telemetry_window",
         "interpret",
     ),
 )
@@ -37,12 +38,14 @@ def cache_sim(
     refresh: int = 0,
     sketch_width: int = 0,
     doorkeeper: int = 0,
+    telemetry_window: int = 0,
     interpret: bool | None = None,
 ):
     """Batched cache-policy simulation (see cache_sim_pallas for the contract).
 
     ``interpret`` defaults to True off-TPU so the same call validates on CPU
-    and compiles natively on TPU.
+    and compiles natively on TPU. ``telemetry_window=W`` adds a fourth output
+    — the (S, n_windows, N_METRICS) windowed series of docs/observability.md.
     """
     if interpret is None:
         interpret = not _on_tpu()
@@ -56,6 +59,7 @@ def cache_sim(
         refresh=refresh,
         sketch_width=sketch_width,
         doorkeeper=doorkeeper,
+        telemetry_window=telemetry_window,
         interpret=interpret,
     )
 

@@ -21,6 +21,7 @@ import numpy as np
 
 from repro.models.model import Model
 from repro.serving.content_cache import ContentCache
+from repro.telemetry import TelemetrySpec, spec as telemetry_spec
 
 
 @dataclasses.dataclass
@@ -55,11 +56,19 @@ class ServeEngine:
         params,
         cache_len: int,
         content_cache: ContentCache | None = None,
+        telemetry: TelemetrySpec | None = None,
     ):
+        if telemetry is not None and content_cache is None:
+            raise ValueError("telemetry requires a content cache to observe")
         self.model = model
         self.params = params
         self.cache_len = cache_len
         self.content = content_cache
+        self.telemetry = telemetry
+        #: per-request (hit, fill, evict, occupancy) outcomes, recorded when
+        #: telemetry is on; window_series() buckets them on the shared
+        #: repro.telemetry window semantics
+        self._outcomes: list[tuple[int, int, int, int]] = []
         self.stats = EngineStats()
         self._prefill = jax.jit(lambda p, b: model.prefill(p, b, cache_len))
         self._decode = jax.jit(model.decode_step)
@@ -82,7 +91,22 @@ class ServeEngine:
 
     def generate(self, req: Request) -> Result:
         """Greedy decode for one request (B=1 reference path)."""
+        pre = (
+            (self.content.stats.inserts, self.content.stats.evictions)
+            if self.telemetry is not None
+            else None
+        )
         (cache, pos, last_logits), skipped = self._prefill_state(req)
+        if pre is not None:
+            s = self.content.stats
+            self._outcomes.append(
+                (
+                    int(skipped),
+                    int(s.inserts > pre[0]),
+                    int(s.evictions > pre[1]),
+                    len(self.content),
+                )
+            )
         out = []
         logits = last_logits
         for t in range(req.max_new):
@@ -96,6 +120,26 @@ class ServeEngine:
 
     def run(self, requests: list[Request]) -> list[Result]:
         return [self.generate(r) for r in requests]
+
+    def window_series(self) -> np.ndarray:
+        """``(n_windows, N_METRICS)`` int32 over the requests served so far —
+        the same layout the simulator tiers emit, so the exporters and the
+        fleet-report rollups consume engine telemetry unchanged. fill_offers
+        equals misses (the engine offers every computed prefill back);
+        refresh/churn stay zero (host policies meter them separately)."""
+        if self.telemetry is None:
+            raise ValueError("engine was built without telemetry=TelemetrySpec(...)")
+        if not self._outcomes:
+            raise ValueError("no requests served yet")
+        ev = np.asarray(self._outcomes, np.int64).T  # (4, T)
+        return telemetry_spec.series_from_run(
+            self.telemetry.window,
+            ev.shape[1],
+            hits=ev[0],
+            fills=ev[1],
+            evictions=ev[2],
+            occupancy=ev[3],
+        )
 
     def report(self) -> dict:
         """Engine-level accounting incl. the paper's management-time metric.

@@ -1,0 +1,43 @@
+"""repro.telemetry — in-scan windowed metrics + measured CPU-time timing.
+
+Three pieces (see docs/observability.md):
+
+* :mod:`repro.telemetry.spec` — :class:`TelemetrySpec` and the xp-generic
+  window bucketing shared by the jitted scans, the Pallas kernel, and the
+  host-side oracle.
+* :mod:`repro.telemetry.timing` — warmup + ``block_until_ready`` measurement
+  harness with the AOT compile/execute split and measured J/op.
+* :mod:`repro.telemetry.export` — JSONL/CSV per-window row exporters.
+
+The host-side oracle lives in :mod:`repro.telemetry.oracle` (imported
+explicitly by the tests; it pulls the reference-policy stack in).
+"""
+from repro.telemetry.spec import (
+    METRIC_INDEX,
+    METRICS,
+    N_METRICS,
+    TelemetrySpec,
+    bucket_end,
+    bucket_sum,
+    chunk_window_matrix,
+    n_windows,
+    series_from_run,
+    window_sizes,
+)
+from repro.telemetry.timing import Timing, j_per_step, measure
+
+__all__ = [
+    "METRIC_INDEX",
+    "METRICS",
+    "N_METRICS",
+    "TelemetrySpec",
+    "Timing",
+    "bucket_end",
+    "bucket_sum",
+    "chunk_window_matrix",
+    "j_per_step",
+    "measure",
+    "n_windows",
+    "series_from_run",
+    "window_sizes",
+]

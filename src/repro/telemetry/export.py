@@ -1,0 +1,68 @@
+"""JSONL / CSV exporters for windowed telemetry series (PR 6).
+
+One row per (node, window) with the :data:`repro.telemetry.spec.METRICS`
+columns spelled out plus a derived ``chr`` — the operator-dashboard shape
+(arXiv:2005.11923's energy-vs-CHR panels) and what the CI bench-smoke lane
+uploads as an artifact. Both formats round-trip: ``read_jsonl`` returns the
+dict rows verbatim; CSV stringifies and is for spreadsheet import.
+"""
+from __future__ import annotations
+
+import csv
+import json
+
+import numpy as np
+
+from repro.telemetry.spec import METRICS, N_METRICS
+
+
+def series_rows(series, window: int, *, labels=None, **tags) -> list[dict]:
+    """Flatten a ``[..., n_windows, N_METRICS]`` series into per-window dicts.
+
+    Leading axes are flattened and enumerated as ``node`` (or named via
+    ``labels``); ``tags`` (policy, scenario, level, ...) are copied into
+    every row. ``t_start`` is the window's first trace position.
+    """
+    arr = np.asarray(series)
+    if arr.ndim < 2 or arr.shape[-1] != N_METRICS:
+        raise ValueError(
+            f"expected [..., n_windows, {N_METRICS}] series, got shape {arr.shape}"
+        )
+    flat = arr.reshape(-1, arr.shape[-2], N_METRICS)
+    rows = []
+    for node in range(flat.shape[0]):
+        for w in range(flat.shape[1]):
+            row = dict(tags)
+            row["node"] = int(node) if labels is None else labels[node]
+            row["window"] = w
+            row["t_start"] = w * window
+            for m, name in enumerate(METRICS):
+                row[name] = int(flat[node, w, m])
+            row["chr"] = row["hits"] / row["requests"] if row["requests"] else 0.0
+            rows.append(row)
+    return rows
+
+
+def write_jsonl(path, rows) -> None:
+    with open(path, "w") as fh:
+        for row in rows:
+            fh.write(json.dumps(row) + "\n")
+
+
+def read_jsonl(path) -> list[dict]:
+    with open(path) as fh:
+        return [json.loads(line) for line in fh if line.strip()]
+
+
+def write_csv(path, rows) -> None:
+    with open(path, "w", newline="") as fh:
+        if not rows:
+            return
+        writer = csv.DictWriter(fh, fieldnames=list(rows[0].keys()))
+        writer.writeheader()
+        writer.writerows(rows)
+
+
+def read_csv(path) -> list[dict]:
+    with open(path, newline="") as fh:
+        return list(csv.DictReader(fh))

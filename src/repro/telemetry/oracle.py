@@ -1,0 +1,54 @@
+"""Host-side telemetry oracle: re-bucket the Python reference's outcomes.
+
+Drives a paper-faithful policy object from :mod:`repro.core.policies`
+request by request and derives every windowed metric from observable state
+transitions (occupancy delta + eviction counter => fills; ``_seen`` reset =>
+tinylfu aging; the global-time timer + hot-mask snapshot => plfua_dyn
+refresh/churn). The jitted in-scan series must equal this array *exactly* —
+the acceptance criterion of tests/test_telemetry.py.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import policies
+from repro.fleet.reference import cache_count
+from repro.telemetry.spec import METRIC_INDEX, N_METRICS, n_windows
+
+
+def windowed_reference(policy: "policies.CachePolicy", trace, window: int) -> np.ndarray:
+    """(n_windows, N_METRICS) int32 ground-truth series for a flat cache.
+
+    Flat-cache conventions: every position is a request (``active`` all
+    true) and every miss is a fill offer (no placement gate).
+    """
+    trace = np.asarray(trace)
+    T = int(trace.shape[0])
+    nw = n_windows(T, window)
+    out = np.zeros((nw, N_METRICS), np.int64)
+    is_dyn = isinstance(policy, policies.DynamicPLFUACache)
+    is_tiny = isinstance(policy, policies.TinyLFUCache)
+    if is_dyn and policy.external_refresh:
+        raise ValueError("oracle drives the policy's own global-time timer")
+    for i, x in enumerate(trace):
+        w = i // window
+        pre_count = cache_count(policy)
+        pre_ev = policy.evictions
+        pre_hot = policy._hot.copy() if is_dyn else None
+        hit = policy.request(int(x))
+        post_count = cache_count(policy)
+        evicted = policy.evictions - pre_ev
+        out[w, METRIC_INDEX["requests"]] += 1
+        out[w, METRIC_INDEX["hits"]] += int(hit)
+        out[w, METRIC_INDEX["misses"]] += int(not hit)
+        out[w, METRIC_INDEX["fills"]] += post_count - pre_count + evicted
+        out[w, METRIC_INDEX["evictions"]] += evicted
+        out[w, METRIC_INDEX["fill_offers"]] += int(not hit)
+        out[w, METRIC_INDEX["occupancy"]] = post_count
+        if is_tiny and policy._seen == 0:
+            # the request() increment was reset -> the aging window closed
+            out[w, METRIC_INDEX["refreshes"]] += 1
+        if is_dyn and (i + 1) % policy.refresh == 0:
+            out[w, METRIC_INDEX["refreshes"]] += 1
+            out[w, METRIC_INDEX["hot_churn"]] += int((pre_hot != policy._hot).sum())
+    return out.astype(np.int32)

@@ -1,0 +1,182 @@
+"""Windowed-telemetry spec + series assembly (PR 6, DESIGN: observability).
+
+The in-scan telemetry contract shared by every simulator tier (``core.
+jax_cache``, both fleet engines, the Pallas ``cache_sim`` kernel) and the
+host-side oracle: a run instrumented with :class:`TelemetrySpec(window=W)`
+returns an int32 time-series shaped ``[..., n_windows, N_METRICS]`` where
+``n_windows = ceil(T / W)`` (the last window may be partial) and the metric
+axis is :data:`METRICS`, in order:
+
+``requests``     trace positions this node was active for in the window
+``hits``         requests served from this cache
+``misses``       ``requests - hits``
+``fills``        objects inserted (admitted misses that actually stored)
+``evictions``    objects evicted to make room for a fill
+``fill_offers``  misses whose placement gate was open (flat caches and lce
+                 tiers: every miss; lcd/prob/admit tiers: gate-dependent)
+``occupancy``    cached-object count at the *end* of the window (a level
+                 snapshot, not a sum; the partial tail window reports the
+                 value after the last real request)
+``refreshes``    sketch-maintenance events: tinylfu aging resets and
+                 plfua_dyn hot-set refreshes, attributed to the window of
+                 the request that completed the period
+``hot_churn``    plfua_dyn only — size of the symmetric difference between
+                 the hot masks before/after each refresh (joiners + leavers)
+
+Everything here is xp-generic (``xp=np`` for the oracle and exporters,
+``xp=jnp`` inside the jitted scans) and shape-static, so the assembly folds
+into the jit at trace length known at compile time.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+METRICS = (
+    "requests",
+    "hits",
+    "misses",
+    "fills",
+    "evictions",
+    "fill_offers",
+    "occupancy",
+    "refreshes",
+    "hot_churn",
+)
+N_METRICS = len(METRICS)
+METRIC_INDEX = {name: i for i, name in enumerate(METRICS)}
+
+
+@dataclasses.dataclass(frozen=True)
+class TelemetrySpec:
+    """Static (hashable) telemetry configuration, folded into the jit as a
+    static argument — one compiled program per (policy, window) pair, and
+    *zero* overhead when the telemetry argument is None (the uninstrumented
+    scan is emitted verbatim, asserted bit-identical in tests)."""
+
+    window: int
+
+    def __post_init__(self):
+        if self.window < 1:
+            raise ValueError(f"telemetry window must be >= 1, got {self.window}")
+
+    def n_windows(self, trace_len: int) -> int:
+        return n_windows(trace_len, self.window)
+
+
+def n_windows(trace_len: int, window: int) -> int:
+    """ceil(T / W) — the fixed window count of a run."""
+    if trace_len < 1:
+        raise ValueError(f"trace_len must be >= 1, got {trace_len}")
+    if window < 1:
+        raise ValueError(f"window must be >= 1, got {window}")
+    return -(-trace_len // window)
+
+
+def window_sizes(trace_len: int, window: int) -> np.ndarray:
+    """(n_windows,) int32 — trace positions per window (tail may be partial)."""
+    nw = n_windows(trace_len, window)
+    sizes = np.full((nw,), window, np.int32)
+    sizes[-1] = trace_len - (nw - 1) * window
+    return sizes
+
+
+def bucket_sum(series, window: int, xp=np):
+    """(..., T) -> (..., n_windows) int32 per-window sums (zero-padded tail)."""
+    s = xp.asarray(series)
+    T = s.shape[-1]
+    nw = n_windows(T, window)
+    pad = nw * window - T
+    if pad:
+        zeros = xp.zeros(s.shape[:-1] + (pad,), dtype=s.dtype)
+        s = xp.concatenate([s, zeros], axis=-1)
+    return s.reshape(s.shape[:-1] + (nw, window)).sum(axis=-1).astype(xp.int32)
+
+
+def bucket_end(series, window: int, xp=np):
+    """(..., T) -> (..., n_windows) int32 end-of-window values. The tail is
+    edge-padded so a partial last window reports the value at the last real
+    step — the occupancy convention."""
+    s = xp.asarray(series)
+    T = s.shape[-1]
+    nw = n_windows(T, window)
+    pad = nw * window - T
+    if pad:
+        edge = xp.repeat(s[..., -1:], pad, axis=-1)
+        s = xp.concatenate([s, edge], axis=-1)
+    return s.reshape(s.shape[:-1] + (nw, window))[..., -1].astype(xp.int32)
+
+
+def chunk_window_matrix(
+    n_chunks: int, chunk_len: int, trace_len: int, window: int
+) -> np.ndarray:
+    """(n_chunks, n_windows) int32 scatter constant mapping chunk-boundary
+    events (plfua_dyn hot-set refreshes) to windows: a refresh that fires at
+    the end of chunk ``c`` is attributed to the window of trace position
+    ``(c+1)*chunk_len - 1`` — the request that completed the period. The
+    clamp only keeps padded tail chunks (which never fire) in range."""
+    nw = n_windows(trace_len, window)
+    m = np.zeros((n_chunks, nw), np.int32)
+    for c in range(n_chunks):
+        pos = min((c + 1) * chunk_len - 1, trace_len - 1)
+        m[c, pos // window] = 1
+    return m
+
+
+def series_from_run(
+    window: int,
+    trace_len: int,
+    *,
+    hits,
+    fills,
+    evictions,
+    occupancy,
+    active=None,
+    offers=None,
+    aging=None,
+    fired=None,
+    churn=None,
+    chunk_len: int | None = None,
+    xp=np,
+):
+    """Bucket per-step event series into the ``[..., n_windows, N_METRICS]``
+    layout. Leading axes (node fleets) pass through unchanged.
+
+    ``hits``/``fills``/``evictions``/``offers``/``active``/``aging`` are
+    per-step bool series (..., T); ``occupancy`` the per-step cached-object
+    count; ``active=None`` means every position counts (flat cache).
+    ``fired``/``churn`` are per-chunk (..., n_chunks) refresh events for the
+    chunked plfua_dyn scans, scattered to windows via the static
+    :func:`chunk_window_matrix` (``chunk_len`` required with them).
+    """
+    W = window
+    hits_w = bucket_sum(hits, W, xp)
+    if active is None:
+        req_w = xp.broadcast_to(
+            xp.asarray(window_sizes(trace_len, W)), hits_w.shape
+        ).astype(xp.int32)
+    else:
+        req_w = bucket_sum(active, W, xp)
+    miss_w = req_w - hits_w
+    fill_w = bucket_sum(fills, W, xp)
+    evict_w = bucket_sum(evictions, W, xp)
+    offer_w = miss_w if offers is None else bucket_sum(offers, W, xp)
+    occ_w = bucket_end(occupancy, W, xp)
+    zeros = xp.zeros(hits_w.shape, xp.int32)
+    refr_w = zeros
+    churn_w = zeros
+    if aging is not None:
+        refr_w = refr_w + bucket_sum(aging, W, xp)
+    if fired is not None:
+        if chunk_len is None:
+            raise ValueError("chunk_len is required with fired/churn")
+        m = xp.asarray(
+            chunk_window_matrix(fired.shape[-1], chunk_len, trace_len, W)
+        )
+        refr_w = refr_w + fired.astype(xp.int32) @ m
+        churn_w = churn_w + churn.astype(xp.int32) @ m
+    return xp.stack(
+        [req_w, hits_w, miss_w, fill_w, evict_w, offer_w, occ_w, refr_w, churn_w],
+        axis=-1,
+    )

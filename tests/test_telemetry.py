@@ -1,0 +1,407 @@
+"""repro.telemetry acceptance suite (PR 6).
+
+The contract under test, per docs/observability.md:
+
+* the in-scan windowed series of every simulator tier (core scan, both fleet
+  engines, the Pallas kernel) equals the host-side oracle — which re-buckets
+  the *Python reference policy's* observable outcomes — **exactly**, for
+  every policy kind, including the partial-tail / W=1 / W=T window edge
+  cases;
+* telemetry is observational: enabling it changes no simulation output
+  (hits, states, counters) bit-for-bit;
+* the exporters, the FleetReport windowed rollup (and its pinned row
+  schema), the timing harness and the bench regression gate hold their
+  documented shapes.
+"""
+import importlib.util
+import pathlib
+
+import numpy as np
+import pytest
+
+from repro import fleet, telemetry, workloads
+from repro.core import jax_cache, policies, registry
+from repro.fleet.report import TIER_ROW_FIELDS
+from repro.kernels.cache_sim.ops import cache_sim
+from repro.telemetry import TelemetrySpec, export, oracle
+from repro.telemetry.spec import METRIC_INDEX, METRICS, N_METRICS, bucket_end, bucket_sum
+
+ALL_KINDS = registry.names(jax=True)
+N, CAP, T = 128, 12, 900
+W = 128  # 900 = 7*128 + 4 -> the partial tail window is always exercised
+
+#: explicit sketch knobs so aging / hot-set refresh fire mid-trace (and the
+#: same kwargs build both the PolicySpec and the reference policy)
+_KNOBS = {
+    "wlfu": {"window": 64},
+    "tinylfu": {"window": 200, "doorkeeper": 64},
+    "plfua_dyn": {"refresh": 250},
+}
+
+
+def _pair(kind, n=N, cap=CAP):
+    kw = _KNOBS.get(kind, {})
+    spec = jax_cache.PolicySpec(kind=kind, n_objects=n, capacity=cap, **kw)
+    pol = policies.make_policy(kind, cap, n_objects=n, **kw)
+    return spec, pol
+
+
+def _trace(scenario, seed, n=N, t=T):
+    return workloads.make_traces(scenario, n, n_samples=1, trace_len=t, seed=seed)[0]
+
+
+# ------------------------------------------------------- core scan vs oracle
+@pytest.mark.parametrize("scenario", ("stationary", "churn"))
+@pytest.mark.parametrize("kind", ALL_KINDS)
+def test_core_series_matches_oracle(kind, scenario):
+    spec, pol = _pair(kind)
+    trace = _trace(scenario, seed=23)
+    _, _, series = jax_cache.simulate(spec, trace, TelemetrySpec(W))
+    ref = oracle.windowed_reference(pol, trace, W)
+    np.testing.assert_array_equal(
+        np.asarray(series), ref,
+        err_msg=f"windowed series diverges for {kind}/{scenario} "
+        f"(metric axis: {METRICS})",
+    )
+
+
+@pytest.mark.parametrize("window", (1, T))
+@pytest.mark.parametrize("kind", ("lru", "tinylfu", "plfua_dyn"))
+def test_core_series_window_edges(kind, window):
+    """W=1 (one window per request) and W=T (one window total)."""
+    spec, pol = _pair(kind)
+    trace = _trace("churn", seed=31)
+    _, _, series = jax_cache.simulate(spec, trace, TelemetrySpec(window))
+    ref = oracle.windowed_reference(pol, trace, window)
+    np.testing.assert_array_equal(np.asarray(series), ref)
+
+
+@pytest.mark.parametrize("kind", ALL_KINDS)
+def test_telemetry_is_observational_core(kind):
+    """Enabling telemetry must not perturb the simulation: hits and the full
+    final state are bit-identical to the uninstrumented run."""
+    spec, _ = _pair(kind)
+    trace = _trace("flash_crowd", seed=5)
+    hits0, state0 = jax_cache.simulate(spec, trace)
+    hits1, state1, series = jax_cache.simulate(spec, trace, TelemetrySpec(W))
+    np.testing.assert_array_equal(np.asarray(hits0), np.asarray(hits1))
+    assert state0.keys() == state1.keys()
+    for k in state0:
+        np.testing.assert_array_equal(
+            np.asarray(state0[k]), np.asarray(state1[k]), err_msg=f"state[{k}]"
+        )
+    # and the series is self-consistent with the hit sequence it rode on
+    hits_w = bucket_sum(np.asarray(hits0).astype(np.int32), W)
+    np.testing.assert_array_equal(
+        np.asarray(series)[:, METRIC_INDEX["hits"]], hits_w
+    )
+
+
+def test_simulate_batch_series_matches_single():
+    spec, _ = _pair("plfua")
+    traces = workloads.make_traces("churn", N, n_samples=3, trace_len=T, seed=9)
+    hits_b, series_b = jax_cache.simulate_batch(spec, traces, TelemetrySpec(W))
+    assert np.asarray(series_b).shape == (3, -(-T // W), N_METRICS)
+    for s in range(3):
+        h1, _, s1 = jax_cache.simulate(spec, traces[s], TelemetrySpec(W))
+        np.testing.assert_array_equal(np.asarray(series_b)[s], np.asarray(s1))
+        np.testing.assert_array_equal(np.asarray(hits_b)[s], np.asarray(h1))
+
+
+# ------------------------------------------------------------- bucket helpers
+def test_bucket_helpers_edges():
+    import jax.numpy as jnp
+
+    x = np.arange(1, 11, dtype=np.int32)  # T=10
+    for w, exp_sum in ((3, [6, 15, 24, 10]), (1, list(x)), (10, [55])):
+        np.testing.assert_array_equal(bucket_sum(x, w), exp_sum)
+        np.testing.assert_array_equal(  # np / jnp parity
+            np.asarray(bucket_sum(jnp.asarray(x), w, xp=jnp)), exp_sum
+        )
+    # bucket_end edge-pads the tail: the partial window reports the value at
+    # the last real step, not a padded zero
+    np.testing.assert_array_equal(bucket_end(x, 3), [3, 6, 9, 10])
+    np.testing.assert_array_equal(
+        np.asarray(bucket_end(jnp.asarray(x), 3, xp=jnp)), [3, 6, 9, 10]
+    )
+    with pytest.raises(ValueError):
+        TelemetrySpec(0)
+
+
+# ---------------------------------------------------------------- fleet tiers
+def _topo3(kind, **kw):
+    return fleet.tree(
+        n_objects=N,
+        widths=(4, 2, 1),
+        kinds=kind,
+        capacities=(4, 9, 23),
+        window=48 if kind == "wlfu" else 0,
+        **kw,
+    )
+
+
+def _pytree_equal(a, b, path=""):
+    if isinstance(a, dict):
+        assert a.keys() == b.keys(), path
+        for k in a:
+            _pytree_equal(a[k], b[k], f"{path}.{k}")
+    elif isinstance(a, (tuple, list)):
+        assert len(a) == len(b), path
+        for i, (x, y) in enumerate(zip(a, b)):
+            _pytree_equal(x, y, f"{path}[{i}]")
+    else:
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b), err_msg=path)
+
+
+@pytest.mark.parametrize("kind", ("lru", "tinylfu", "plfua_dyn"))
+def test_fleet_telemetry_observational_and_consistent(kind):
+    """Level-major engine: the instrumented run's non-telemetry outputs are
+    bit-identical to the plain run, and every level's window sums reproduce
+    the scalar tier counters."""
+    topo = _topo3(kind)
+    trace = _trace("churn", seed=17, t=700)
+    assign = topo.assignment(trace)
+    out0 = fleet.simulate_fleet(topo, trace, assign)
+    out1 = fleet.simulate_fleet(topo, trace, assign, TelemetrySpec(96))
+    tel = out1.pop("telemetry")
+    _pytree_equal(out0, out1)
+    assert len(tel) == topo.n_levels
+    for l in range(topo.n_levels):
+        series = np.asarray(tel[l])  # (K_l, n_windows, N_METRICS)
+        assert series.shape == (len(topo.levels[l]), -(-700 // 96), N_METRICS)
+        c = out0["tiers"][l]
+        np.testing.assert_array_equal(
+            series[:, :, METRIC_INDEX["requests"]].sum(1), np.asarray(c["requests"])
+        )
+        np.testing.assert_array_equal(
+            series[:, :, METRIC_INDEX["hits"]].sum(1), np.asarray(c["hits"])
+        )
+        np.testing.assert_array_equal(
+            series[:, :, METRIC_INDEX["evictions"]].sum(1), np.asarray(c["evictions"])
+        )
+        # final-window occupancy == final state's cached-object count
+        np.testing.assert_array_equal(
+            series[:, -1, METRIC_INDEX["occupancy"]],
+            np.asarray(out0["states"][l]["count"]),
+        )
+
+
+@pytest.mark.parametrize("kind", ("plfua", "plfua_dyn"))
+def test_placed_engine_telemetry_matches_level_major(kind):
+    """prob(1.0) placement always fills — behaviourally lce — so the
+    time-major placed engine must emit the level-major engine's exact
+    series (the cross-engine differential of docs/observability.md)."""
+    trace = _trace("churn", seed=41, t=700)
+    tel = TelemetrySpec(96)
+    t_lce = _topo3(kind)
+    t_prob = _topo3(kind, placements="prob(1.0)")
+    assign = t_lce.assignment(trace)
+    out_lce = fleet.simulate_fleet(t_lce, trace, assign, tel)
+    out_prob = fleet.simulate_fleet(t_prob, trace, assign, tel)
+    for l in range(t_lce.n_levels):
+        np.testing.assert_array_equal(
+            np.asarray(out_lce["telemetry"][l]),
+            np.asarray(out_prob["telemetry"][l]),
+            err_msg=f"engine series diverge at level {l}",
+        )
+
+
+def test_placed_engine_gated_fill_offers():
+    """lcd gates fills above the hit level: offered >= filled, and the edge
+    level (always offered under lcd-down semantics) keeps offers == misses
+    only where the gate was open — totals must stay internally consistent."""
+    topo = _topo3("plfu", placements=("lcd", "lcd", "lce"))
+    trace = _trace("stationary", seed=47, t=700)
+    assign = topo.assignment(trace)
+    out = fleet.simulate_fleet(topo, trace, assign, TelemetrySpec(96))
+    for l in range(topo.n_levels):
+        s = np.asarray(out["telemetry"][l])
+        assert (s[:, :, METRIC_INDEX["fills"]] <= s[:, :, METRIC_INDEX["fill_offers"]]).all()
+        assert (s[:, :, METRIC_INDEX["fill_offers"]] <= s[:, :, METRIC_INDEX["misses"]]).all()
+
+
+# -------------------------------------------------------------- Pallas kernel
+@pytest.mark.parametrize("kind", ("lru", "wlfu", "tinylfu", "plfua_dyn"))
+def test_kernel_series_matches_jax(kind):
+    n, cap, tlen = 64, 8, 300
+    kw = {}
+    if kind == "wlfu":
+        kw["window"] = 32
+    if kind == "tinylfu":
+        kw["window"] = 80
+    if kind == "plfua_dyn":
+        kw["refresh"] = 90
+    traces = workloads.make_traces("churn", n, n_samples=2, trace_len=tlen, seed=3)
+    spec = jax_cache.PolicySpec(kind=kind, n_objects=n, capacity=cap, **kw)
+    _, series_jax = jax_cache.simulate_batch(spec, traces, TelemetrySpec(64))
+    args = dict(kind=kind, n_objects=n, capacity=cap, interpret=True, **kw)
+    h0, f0, c0 = cache_sim(traces, **args)
+    h1, f1, c1, series_k = cache_sim(traces, telemetry_window=64, **args)
+    # telemetry must not perturb the kernel's simulation outputs ...
+    np.testing.assert_array_equal(np.asarray(h0), np.asarray(h1))
+    np.testing.assert_array_equal(np.asarray(f0), np.asarray(f1))
+    np.testing.assert_array_equal(np.asarray(c0), np.asarray(c1))
+    # ... and its series must equal the jax scan's (itself oracle-pinned)
+    np.testing.assert_array_equal(np.asarray(series_k), np.asarray(series_jax))
+
+
+# -------------------------------------------------- report rollup + exporters
+def test_report_row_schema_pinned():
+    """The TierReport.row() schema is load-bearing (exporters, CI artifacts):
+    key *order and spelling* are pinned here, literally — update both this
+    test and TIER_ROW_FIELDS deliberately if the schema must change."""
+    expected = (
+        "tier", "policy", "capacity", "requests", "hits", "chr",
+        "evictions", "mgmt_ops", "mgmt_cpu_s", "mgmt_energy_j",
+    )
+    assert TIER_ROW_FIELDS == expected
+    topo = _topo3("plfu")
+    trace = _trace("stationary", seed=2, t=400)
+    out = fleet.simulate_fleet(topo, trace, topo.assignment(trace))
+    rep = fleet.fleet_report(topo, out)
+    for row in rep.rows():
+        assert tuple(row.keys()) == expected, row["tier"]
+
+
+def test_fleet_report_window_rows(tmp_path):
+    topo = _topo3("plfua")
+    tel = TelemetrySpec(96)
+    traces = workloads.make_traces("churn", N, n_samples=2, trace_len=700, seed=13)
+    assigns = np.stack([topo.assignment(t) for t in traces])
+    out = fleet.simulate_fleet_batch(topo, traces, assigns, tel)
+    rep = fleet.fleet_report(topo, out, telemetry=tel)
+    nw = -(-700 // 96)
+    rows = rep.window_rows()
+    assert len(rows) == sum(len(lv) for lv in topo.levels) * nw
+    # batch-summed node series must agree with the scalar tier counters
+    for l, series in enumerate(rep.per_level_series):
+        np.testing.assert_array_equal(
+            series[:, :, METRIC_INDEX["hits"]].sum(),
+            rep.per_level[l].hits,
+        )
+    # rows carry the pinned tags + every metric column; JSONL round-trips
+    r0 = rows[0]
+    assert {"node", "window", "t_start", "level", "policy", "chr"} <= set(r0)
+    assert all(m in r0 for m in METRICS)
+    path = tmp_path / "series.jsonl"
+    export.write_jsonl(path, rows)
+    assert export.read_jsonl(path) == rows
+    csv_path = tmp_path / "series.csv"
+    export.write_csv(csv_path, rows)
+    assert len(export.read_csv(csv_path)) == len(rows)
+    # a report built without telemetry refuses window_rows loudly
+    with pytest.raises(ValueError):
+        fleet.fleet_report(topo, out).window_rows()
+
+
+def test_export_series_rows_shape_checks():
+    with pytest.raises(ValueError):
+        export.series_rows(np.zeros((4, 3)), 10)  # wrong metric axis
+    rows = export.series_rows(
+        np.zeros((2, 3, N_METRICS), np.int32), 10, labels=["a", "b"], kind="lru"
+    )
+    assert len(rows) == 6
+    assert rows[0]["node"] == "a" and rows[0]["kind"] == "lru"
+    assert rows[-1]["t_start"] == 20
+
+
+# ------------------------------------------------------------- timing harness
+def test_measure_jitted_compile_execute_split():
+    import jax
+    import jax.numpy as jnp
+
+    calls = {"n": 0}
+
+    @jax.jit
+    def f(x):
+        return (x * 2).sum()
+
+    tr = telemetry.measure(f, jnp.arange(64.0), steps=64, repeats=2)
+    assert tr.compile_s > 0 and tr.execute_s > 0
+    assert tr.steps == 64 and tr.repeats == 2
+    assert tr.steps_per_s == pytest.approx(64 / tr.execute_s)
+    assert tr.j_per_step > 0
+    d = tr.derived(CHR="0.5")
+    for key in ("steps_per_s=", "compile_s=", "execute_s=", "j_per_step=", "CHR=0.5"):
+        assert key in d
+
+    def plain(x):
+        calls["n"] += 1
+        return x + 1
+
+    tr2 = telemetry.measure(plain, 1, steps=1, repeats=2, warmup=1)
+    assert tr2.compile_s == 0.0
+    assert calls["n"] == 3  # 1 warmup + 2 timed
+
+    with pytest.raises(ValueError):
+        telemetry.measure(plain, 1, steps=0)
+
+
+def test_measure_static_args_dropped():
+    """AOT-compiled executables take only the dynamic args: the static
+    positional indices must be dropped from the timed call."""
+    import jax.numpy as jnp
+
+    spec, _ = _pair("lru")
+    traces = workloads.make_traces("stationary", N, n_samples=2, trace_len=200, seed=1)
+    tr = telemetry.measure(
+        jax_cache.simulate_batch, spec, traces, static=(0,), steps=traces.size
+    )
+    assert tr.execute_s > 0 and tr.compile_s > 0
+
+
+# -------------------------------------------------------- serving engine view
+def test_engine_requires_cache_for_telemetry():
+    from repro.serving.engine import ServeEngine
+
+    with pytest.raises(ValueError):
+        ServeEngine(None, None, 8, content_cache=None, telemetry=TelemetrySpec(4))
+
+
+# ------------------------------------------------------------ regression gate
+def _load_compare():
+    root = pathlib.Path(__file__).resolve().parents[1]
+    spec_ = importlib.util.spec_from_file_location(
+        "bench_compare", root / "benchmarks" / "compare.py"
+    )
+    mod = importlib.util.module_from_spec(spec_)
+    spec_.loader.exec_module(mod)
+    return mod
+
+
+def test_compare_gate():
+    cmp_ = _load_compare()
+    m = cmp_.parse_metrics(
+        "steps_per_s=1.2e+04 total_chr=0.8433 dchr=+0.0100 mgmt_J=0.0902 note=(x)"
+    )
+    assert m == {
+        "steps_per_s": 12000.0, "total_chr": 0.8433, "dchr": 0.01, "mgmt_J": 0.0902
+    }
+
+    def payload(chr_v, sps, us):
+        return {
+            "rows": [
+                {
+                    "name": "fleet/stationary/plfu",
+                    "us_per_call": us,
+                    "derived": f"steps_per_s={sps} total_chr={chr_v}",
+                }
+            ]
+        }
+
+    base = payload(0.84, 20000, 50.0)
+    # within tolerance: small CHR dip + small slowdown
+    regs, _ = cmp_.compare(base, payload(0.83, 15000, 60.0))
+    assert regs == []
+    # CHR cliff is a regression; dchr-style signed deltas are ignored
+    regs, _ = cmp_.compare(base, payload(0.70, 20000, 50.0))
+    assert len(regs) == 1 and "total_chr" in regs[0]
+    # throughput cliff (both directions of the same measurement)
+    regs, _ = cmp_.compare(base, payload(0.84, 5000, 200.0))
+    assert len(regs) == 2
+    # report-only unless strict
+    assert cmp_.report(regs, [], strict=False) == 0
+    assert cmp_.report(regs, [], strict=True) == 1
+    # disjoint rows compare vacuously
+    regs, notes = cmp_.compare(base, {"rows": []})
+    assert regs == [] and any("absent" in n for n in notes)
