@@ -1,0 +1,117 @@
+"""Byte-capacity benchmarks (PR 7): size-aware eviction priced in traffic.
+
+Object-count CHR is the paper's axis; once objects have sizes the operator's
+bill is *bytes* — origin egress and byte hit ratio. These groups put the new
+byte-capacity machinery on the perf trail:
+
+  * ``cache_sizes`` — flat byte-capacity cache, every policy kind x
+    {lognormal, pareto} catalogues with positive size-popularity correlation:
+    steps/sec on the jitted scan plus object-CHR vs byte-CHR side by side
+    (gdsf's reason to exist: it trades object hits for byte hits by evicting
+    large-low-frequency objects first).
+  * ``fleet_bytes``  — 3-tier byte-capacity fleet under the correlation
+    knob sweep: total/byte CHR, origin egress GB and management energy per
+    catalogue (recorded into BENCH_PR7.json).
+
+Rows follow the repo convention ``name,us_per_call,derived``.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.cdn_bench import policy_window  # one window convention
+from repro import fleet, telemetry, workloads
+from repro.core import jax_cache, registry
+
+BYTE_POLICIES = registry.names(jax=True)
+
+
+def _catalogue(n, dist, corr, *, median=64, seed=11):
+    return workloads.object_sizes(n, dist=dist, corr=corr, seed=seed, median=median)
+
+
+def cache_sizes_sweep(full: bool = False):
+    """Flat byte-capacity cache: every kind x size distribution."""
+    n, cap = (10_000, 300) if full else (2_000, 60)
+    samples, tlen = (8, 100_000) if full else (2, 10_000)
+    traces = workloads.make_traces(
+        "stationary", n, n_samples=samples, trace_len=tlen, seed=5
+    )
+    rows = []
+    for dist in workloads.SIZE_DISTS:
+        sizes = _catalogue(n, dist, corr=0.5)
+        sizes_j = jnp.asarray(sizes)
+        # the byte budget prices the same pressure as `cap` objects of mean size
+        cap_b = int(cap * sizes.mean())
+        req_bytes = float(sizes[np.asarray(traces)].sum())
+        for kind in BYTE_POLICIES:
+            spec = jax_cache.PolicySpec(
+                kind=kind, n_objects=n, capacity=cap,
+                window=policy_window(kind), capacity_bytes=cap_b,
+            )
+            tr = telemetry.measure(
+                jax_cache.simulate_batch, spec, traces, None, sizes_j,
+                static=(0, 2), steps=traces.size,
+            )
+            hits = np.asarray(jax_cache.simulate_batch(spec, traces, None, sizes_j))
+            chr_ = hits.mean()
+            byte_chr = float(sizes[np.asarray(traces)][hits].sum()) / req_bytes
+            rows.append(
+                (
+                    f"cache_sizes/{dist}/{kind}",
+                    tr.us_per_step,
+                    f"steps_per_s={tr.steps_per_s:.0f} chr={chr_:.4f} "
+                    f"byte_chr={byte_chr:.4f} cap_bytes={cap_b}",
+                )
+            )
+    return rows
+
+
+def fleet_bytes_sweep(full: bool = False):
+    """3-tier byte-capacity fleet across the size-popularity correlation knob."""
+    n, edge_cap = (10_000, 300) if full else (2_000, 60)
+    samples, tlen = (8, 100_000) if full else (2, 10_000)
+    traces = workloads.make_traces(
+        "stationary", n, n_samples=samples, trace_len=tlen, seed=5
+    )
+    rows = []
+    for corr in (-0.5, 0.0, 0.5):
+        sizes = _catalogue(n, "lognormal", corr=corr)
+        mean = int(sizes.mean())
+        for kind in ("lfu", "gdsf"):
+            topo = fleet.tree(
+                n_objects=n,
+                widths=(8, 2, 1),
+                kinds=kind,
+                capacities=(edge_cap, 4 * edge_cap, 8 * edge_cap),
+                capacity_bytes=(
+                    edge_cap * mean, 4 * edge_cap * mean, 8 * edge_cap * mean
+                ),
+            )
+            assign = topo.assignment(traces)
+            tr = telemetry.measure(
+                fleet.simulate_fleet_batch, topo, traces, assign, None,
+                jnp.asarray(sizes), static=(0, 3), steps=traces.size,
+            )
+            out = fleet.simulate_fleet_batch(
+                topo, traces, assign, sizes=jnp.asarray(sizes)
+            )
+            rep = fleet.fleet_report(topo, out)
+            rows.append(
+                (
+                    f"fleet_bytes/corr{corr:+.1f}/{kind}",
+                    tr.us_per_step,
+                    f"steps_per_s={tr.steps_per_s:.0f} "
+                    f"total_chr={rep.total_chr:.4f} byte_chr={rep.byte_chr:.4f} "
+                    f"origin_egress_gb={rep.origin_egress_gb:.4f} "
+                    f"mgmt_J={rep.mgmt_energy_j:.4f}",
+                )
+            )
+    return rows
+
+
+ALL = {
+    "cache_sizes": cache_sizes_sweep,
+    "fleet_bytes": fleet_bytes_sweep,
+}

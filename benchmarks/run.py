@@ -31,8 +31,8 @@ def main() -> None:
         help="comma-separated group list (fig2..fig10, metadata, cache_py, "
         "cache_jax, cache_pallas, kernel_vs_jax, cdn, cdn_router, cdn_topo, "
         "fleet_policies, fleet_depth, fleet_placement, fleet_scale, "
-        "serving_energy, roofline, cache_roofline, telemetry_timing, "
-        "telemetry_overhead) — see docs/benchmarks.md",
+        "cache_sizes, fleet_bytes, serving_energy, roofline, cache_roofline, "
+        "telemetry_timing, telemetry_overhead) — see docs/benchmarks.md",
     )
     ap.add_argument(
         "--record",
@@ -66,6 +66,7 @@ def main() -> None:
             baseline = json.load(fh)
 
     from benchmarks import (
+        bytes_bench,
         cache_bench,
         cdn_bench,
         fleet_bench,
@@ -80,6 +81,7 @@ def main() -> None:
     groups.update(cache_bench.ALL)
     groups.update(cdn_bench.ALL)
     groups.update(fleet_bench.ALL)
+    groups.update(bytes_bench.ALL)
     groups.update(serving_energy.ALL)
     groups.update(roofline_bench.ALL)
     groups.update(telemetry_bench.ALL)

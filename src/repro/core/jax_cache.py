@@ -11,6 +11,18 @@ argmin — ties break to the lowest id, matching the reference implementation in
 ``simulate_batch`` vmaps over the paper's 12 samples; the Pallas kernel in
 ``repro.kernels.cache_sim`` runs the same step out of VMEM with a grid over
 (case, sample) and is validated against :func:`simulate` as its oracle.
+
+PR 7 adds *byte-capacity* mode (``PolicySpec.capacity_bytes > 0``): the limit
+becomes a byte budget over a per-object ``sizes`` array (a traced argument,
+unit when omitted) and one insertion may evict several victims — a bounded
+``lax.fori_loop`` of at most ``effective_max_victims`` masked argmins, after
+which an object that still does not fit is simply not inserted (an object
+larger than the whole budget evicts nothing). With unit sizes and
+``capacity_bytes == capacity`` the trajectory is bit-identical to
+object-count mode. The ``gdsf`` kind (GreedyDual-Size-Frequency) scores
+``L + (freq << GDSF_SHIFT) // size`` with the global aging credit ``L``
+ratcheted to each evicted victim's score — all int32, so the Python
+reference, this scan, and the Pallas kernel agree bit for bit.
 """
 from __future__ import annotations
 
@@ -30,6 +42,9 @@ _I32_MAX = np.iinfo(np.int32).max
 JAX_POLICY_KINDS = registry.names(jax=True)
 SKETCH_POLICY_KINDS = registry.names(sketch=True)
 
+GDSF_SHIFT = registry.GDSF_SHIFT
+DEFAULT_MAX_VICTIMS = registry.DEFAULT_MAX_VICTIMS
+
 
 @dataclasses.dataclass(frozen=True)
 class PolicySpec:
@@ -43,6 +58,8 @@ class PolicySpec:
     refresh: int = 0  # plfua_dyn hot-set period (0 -> sketch.default_refresh)
     sketch_width: int = 0  # sketch kinds (0 -> sketch.default_width)
     doorkeeper: int = 0  # tinylfu bloom front, in bits (0 = off, the default)
+    capacity_bytes: int = 0  # >0 switches the limit to a byte budget (PR 7)
+    max_victims: int = 0  # byte mode eviction bound (0 -> DEFAULT_MAX_VICTIMS)
 
     def __post_init__(self):
         if self.kind not in JAX_POLICY_KINDS:
@@ -53,6 +70,22 @@ class PolicySpec:
             raise ValueError(f"doorkeeper must be >= 0, got {self.doorkeeper}")
         if self.doorkeeper and self.kind != "tinylfu":
             raise ValueError("doorkeeper is a tinylfu-only option")
+        if self.capacity_bytes < 0:
+            raise ValueError(f"capacity_bytes must be >= 0, got {self.capacity_bytes}")
+        if self.max_victims < 0:
+            raise ValueError(f"max_victims must be >= 0, got {self.max_victims}")
+        if self.max_victims and not self.capacity_bytes:
+            raise ValueError("max_victims is a byte-capacity (capacity_bytes) option")
+
+    @property
+    def size_aware(self) -> bool:
+        """Whether the step consults per-object sizes at all (gdsf always
+        scores by size; every kind does under a byte budget)."""
+        return self.capacity_bytes > 0 or self.kind == "gdsf"
+
+    @property
+    def effective_max_victims(self) -> int:
+        return self.max_victims or DEFAULT_MAX_VICTIMS
 
     @property
     def effective_hot(self) -> int:
@@ -114,6 +147,15 @@ def init_state(spec: PolicySpec) -> dict[str, jax.Array]:
         state["seen"] = jnp.zeros((), jnp.int32)  # aging-window position
         if spec.doorkeeper:
             state["bloom"] = jnp.zeros((spec.doorkeeper,), jnp.bool_)
+    if spec.kind == "gdsf":
+        state["score"] = jnp.zeros((n,), jnp.int32)  # cached priority H
+        state["L"] = jnp.zeros((), jnp.int32)  # global aging credit
+    if spec.capacity_bytes:
+        state["bytes"] = jnp.zeros((), jnp.int32)  # resident bytes
+        if spec.kind not in SKETCH_POLICY_KINDS:
+            # in byte mode insertion success is data-dependent for every kind
+            # (the object may not fit), so the insert count joins the state
+            state["inserts"] = jnp.zeros((), jnp.int32)
     return state
 
 
@@ -122,12 +164,52 @@ def _masked_argmin(values: jax.Array, mask: jax.Array) -> jax.Array:
     return jnp.argmin(jnp.where(mask, values, _I32_MAX)).astype(jnp.int32)
 
 
+def _sz(sizes: jax.Array | None, i: jax.Array) -> jax.Array:
+    """Per-object size lookup; ``sizes=None`` is the unit-size convention."""
+    return jnp.int32(1) if sizes is None else sizes[i]
+
+
+def _evict_bytes_loop(spec, key, in_cache, count, nbytes, size_x, want, cap_b, sizes, L=None):
+    """Byte mode's bounded multi-victim eviction (the reference's
+    ``CachePolicy._room_for``, iteration for iteration): evict the masked
+    argmin of ``key`` until ``size_x`` more bytes fit, the cache is empty,
+    or ``effective_max_victims`` victims are gone. An object larger than the
+    whole budget evicts nothing. Returns ``(in_cache, count, nbytes, key,
+    L)`` — ``key`` is mutated only for the metadata-destroying kinds
+    (lfu/tinylfu zero the victim's frequency) and ``L`` only for gdsf (the
+    aging credit ratchets to each victim's score)."""
+    destroy = spec.kind in ("lfu", "tinylfu")
+    fits_ever = size_x <= cap_b
+
+    def body(_, carry):
+        ic, cnt, nb, keyarr, credit = carry
+        need = want & fits_ever & (nb + size_x > cap_b) & (cnt > 0)
+        v = _masked_argmin(keyarr, ic)
+        if spec.kind == "gdsf":
+            credit = jnp.where(need, keyarr[v], credit)
+        ic = ic.at[v].set(ic[v] & ~need)
+        cnt = cnt - need.astype(jnp.int32)
+        nb = nb - jnp.where(need, _sz(sizes, v), 0)
+        if destroy:
+            keyarr = keyarr.at[v].set(jnp.where(need, 0, keyarr[v]))
+        return ic, cnt, nb, keyarr, credit
+
+    return jax.lax.fori_loop(
+        0,
+        spec.effective_max_victims,
+        body,
+        (in_cache, count, nbytes, key, jnp.int32(0) if L is None else L),
+    )
+
+
 def step(
     spec: PolicySpec,
     state: dict[str, jax.Array],
     x: jax.Array,
     cap: jax.Array | None = None,
     fill: jax.Array | None = None,
+    sizes: jax.Array | None = None,
+    cap_bytes: jax.Array | None = None,
 ):
     """One request. Returns (new_state, hit: bool). Order of operations matches
     the Python reference exactly (see tests/test_jax_cache.py).
@@ -139,15 +221,25 @@ def step(
     ``fill`` optionally gates *insertion* (and the eviction that makes room
     for it) — the fleet's cross-tier placement hook (repro.fleet.placement):
     with ``fill`` False a miss still updates policy metadata (window slide,
-    sketch feed, parked-frequency bump — the tier saw the demand) but the
-    object is not stored. In-memory LFU is the exception: its metadata only
-    exists while cached, so an unfilled miss leaves no trace. ``fill=None``
-    means unconditional insertion (the flat-cache behaviour)."""
+    sketch feed, parked-frequency bump — since PR 7 in-memory LFU parks too;
+    only its *eviction* still destroys metadata) but the object is not
+    stored. ``fill=None`` means unconditional insertion (flat-cache).
+
+    ``sizes`` is the per-object byte-size array (traced, ``None`` = unit
+    sizes); ``cap_bytes`` optionally overrides ``spec.capacity_bytes`` with a
+    traced per-node budget, mirroring ``cap``. Both are only consulted when
+    ``spec.size_aware``."""
     x = x.astype(jnp.int32)
     in_cache = state["in_cache"]
     count = state["count"]
     cap = jnp.int32(spec.capacity) if cap is None else jnp.asarray(cap, jnp.int32)
     fill = jnp.bool_(True) if fill is None else jnp.asarray(fill, jnp.bool_)
+    if spec.capacity_bytes:
+        cap_b = (
+            jnp.int32(spec.capacity_bytes)
+            if cap_bytes is None
+            else jnp.asarray(cap_bytes, jnp.int32)
+        )
 
     if spec.kind == "wlfu":
         # Slide the window *before* the hit test, as the reference does.
@@ -159,6 +251,19 @@ def step(
         freq = freq.at[x].add(1)
         hit = in_cache[x]
         insert = (~hit) & fill
+        if spec.capacity_bytes:
+            size_x = _sz(sizes, x)
+            in_cache, count, nbytes, _, _ = _evict_bytes_loop(
+                spec, freq, in_cache, count, state["bytes"], size_x, insert, cap_b, sizes
+            )
+            insert = insert & (nbytes + size_x <= cap_b)
+            in_cache = in_cache.at[x].set(in_cache[x] | insert)
+            count = count + insert.astype(jnp.int32)
+            nbytes = nbytes + jnp.where(insert, size_x, 0)
+            return dict(
+                in_cache=in_cache, count=count, freq=freq, ring=ring, ptr=ptr,
+                bytes=nbytes, inserts=state["inserts"] + insert.astype(jnp.int32),
+            ), hit
         need_evict = insert & (count >= cap)
         victim = _masked_argmin(freq, in_cache)
         in_cache = in_cache.at[victim].set(in_cache[victim] & ~need_evict)
@@ -170,6 +275,20 @@ def step(
         last, t = state["last"], state["t"]
         hit = in_cache[x]
         insert = (~hit) & fill
+        if spec.capacity_bytes:
+            size_x = _sz(sizes, x)
+            in_cache, count, nbytes, _, _ = _evict_bytes_loop(
+                spec, last, in_cache, count, state["bytes"], size_x, insert, cap_b, sizes
+            )
+            insert = insert & (nbytes + size_x <= cap_b)
+            in_cache = in_cache.at[x].set(in_cache[x] | insert)
+            last = last.at[x].set(t)
+            count = count + insert.astype(jnp.int32)
+            nbytes = nbytes + jnp.where(insert, size_x, 0)
+            return dict(
+                in_cache=in_cache, count=count, last=last, t=t + 1,
+                bytes=nbytes, inserts=state["inserts"] + insert.astype(jnp.int32),
+            ), hit
         need_evict = insert & (count >= cap)
         victim = _masked_argmin(last, in_cache)
         in_cache = in_cache.at[victim].set(in_cache[victim] & ~need_evict)
@@ -202,7 +321,14 @@ def step(
             bloom = jnp.where(age, jnp.zeros_like(bloom), bloom)
 
         hit = in_cache[x]
-        full = count >= cap
+        if spec.capacity_bytes:
+            # byte mode: "full" means the object does not fit as-is; a full
+            # duel win frees room via the bounded loop (empty cache = no
+            # victim to duel, so an over-budget object is simply rejected)
+            size_x = _sz(sizes, x)
+            full = state["bytes"] + size_x > cap_b
+        else:
+            full = count >= cap
         victim = _masked_argmin(freq, in_cache)
         # admission duel: incoming vs victim, by (post-aging) sketch estimate,
         # with the doorkeeper'd occurrence added back when the front is on
@@ -212,6 +338,25 @@ def step(
             est_x = est_x + sketch.bloom_contains(bloom, bidx).astype(jnp.int32)
             est_v = est_v + sketch.bloom_contains(bloom, btab[victim]).astype(jnp.int32)
         admit = est_x > est_v
+        if spec.capacity_bytes:
+            want = (~hit) & ((~full) | ((count > 0) & admit)) & fill
+            in_cache, count, nbytes, freq, _ = _evict_bytes_loop(
+                spec, freq, in_cache, count, state["bytes"], size_x, want, cap_b, sizes
+            )
+            insert = want & (nbytes + size_x <= cap_b)
+            freq = freq.at[x].set(
+                jnp.where(hit, freq[x] + 1, jnp.where(insert, 1, freq[x]))
+            )
+            in_cache = in_cache.at[x].set(in_cache[x] | insert)
+            count = count + insert.astype(jnp.int32)
+            nbytes = nbytes + jnp.where(insert, size_x, 0)
+            out = dict(
+                in_cache=in_cache, count=count, freq=freq, sketch=rows, seen=seen,
+                inserts=state["inserts"] + insert.astype(jnp.int32), bytes=nbytes,
+            )
+            if spec.doorkeeper:
+                out["bloom"] = bloom
+            return out, hit
         insert = (~hit) & ((~full) | admit) & fill
         need_evict = (~hit) & full & admit & fill
         in_cache = in_cache.at[victim].set(in_cache[victim] & ~need_evict)
@@ -231,7 +376,7 @@ def step(
             out["bloom"] = bloom
         return out, hit
 
-    # frequency family: lfu / plfu / plfua / plfua_dyn
+    # frequency family: lfu / plfu / plfua / plfua_dyn / gdsf
     freq = state["freq"]
     hit = in_cache[x]
     if spec.kind == "plfua_dyn":
@@ -246,30 +391,61 @@ def step(
         admitted = state["hot"][x]
     else:
         admitted = jnp.bool_(True)
-    insert = (~hit) & admitted & fill
+    want = (~hit) & admitted & fill
     # an unfilled admitted miss still bumps the parked frequency (demand
-    # evidence for the tier) — except in-memory LFU, whose metadata exists
-    # only while cached, so its touch is gated on the actual insert
-    touch = hit | (insert if spec.kind == "lfu" else admitted)
-    need_evict = insert & (count >= cap)
-    victim = _masked_argmin(freq, in_cache)
-    in_cache = in_cache.at[victim].set(in_cache[victim] & ~need_evict)
-    if spec.kind == "lfu":
-        # in-memory LFU: eviction destroys the metadata -> restart from 1
-        freq = freq.at[victim].set(jnp.where(need_evict, 0, freq[victim]))
-    # PLFU/PLFUA: freq[x] of a non-cached object *is* the parked-list entry,
-    # so `freq[x] + 1` resumes from it; for LFU it is guaranteed zero.
+    # evidence for the tier); since PR 7 in-memory LFU parks too — only its
+    # *eviction* destroys metadata (the PR 5 carve-out is gone, so `lcd`
+    # promotes LFU objects with their accumulated counts)
+    touch = hit | admitted
+    if spec.kind == "gdsf":
+        score, L = state["score"], state["L"]
+    key = score if spec.kind == "gdsf" else freq
+    if spec.capacity_bytes:
+        size_x = _sz(sizes, x)
+        in_cache, count, nbytes, key, credit = _evict_bytes_loop(
+            spec, key, in_cache, count, state["bytes"], size_x, want, cap_b, sizes,
+            L=state["L"] if spec.kind == "gdsf" else None,
+        )
+        if spec.kind == "lfu":
+            freq = key  # the loop zeroed the evicted victims' metadata
+        if spec.kind == "gdsf":
+            L = credit
+        insert = want & (nbytes + size_x <= cap_b)
+        count = count + insert.astype(jnp.int32)
+        nbytes = nbytes + jnp.where(insert, size_x, 0)
+    else:
+        need_evict = want & (count >= cap)
+        victim = _masked_argmin(key, in_cache)
+        if spec.kind == "gdsf":
+            # the aging credit ratchets to the evicted victim's priority
+            L = jnp.where(need_evict, score[victim], L)
+        in_cache = in_cache.at[victim].set(in_cache[victim] & ~need_evict)
+        if spec.kind == "lfu":
+            # in-memory LFU: eviction destroys the metadata -> restart from 1
+            freq = freq.at[victim].set(jnp.where(need_evict, 0, freq[victim]))
+        insert = want
+        count = count + insert.astype(jnp.int32) - need_evict.astype(jnp.int32)
+    # PLFU/PLFUA/GDSF: freq[x] of a non-cached object *is* the parked-list
+    # entry, so `freq[x] + 1` resumes from it; for LFU eviction zeroed it.
     freq = freq.at[x].set(jnp.where(touch, freq[x] + 1, freq[x]))
+    if spec.kind == "gdsf":
+        # re-price under the post-eviction L; a merely-parked touch writes a
+        # score the next insert overwrites, so cached lanes never see it
+        score = score.at[x].set(
+            jnp.where(touch, L + ((freq[x] << GDSF_SHIFT) // _sz(sizes, x)), score[x])
+        )
     in_cache = in_cache.at[x].set(in_cache[x] | insert)
-    count = count + insert.astype(jnp.int32) - need_evict.astype(jnp.int32)
     out = dict(in_cache=in_cache, count=count, freq=freq)
+    if spec.kind == "gdsf":
+        out.update(score=score, L=L)
     if spec.kind == "plfua":
         out["hot"] = state["hot"]
     if spec.kind == "plfua_dyn":
-        out.update(
-            hot=state["hot"], sketch=rows,
-            inserts=state["inserts"] + insert.astype(jnp.int32),
-        )
+        out.update(hot=state["hot"], sketch=rows)
+    if spec.kind == "plfua_dyn" or spec.capacity_bytes:
+        out["inserts"] = state["inserts"] + insert.astype(jnp.int32)
+    if spec.capacity_bytes:
+        out["bytes"] = nbytes
     return out, hit
 
 
@@ -284,21 +460,31 @@ def refresh_hot(spec: PolicySpec, state: dict[str, jax.Array]) -> dict[str, jax.
     return {**state, "hot": hot, "sketch": sketch.rows_halve(state["sketch"])}
 
 
-def _step_events(spec: PolicySpec, s, ns, hit, x, a):
+def _step_events(spec: PolicySpec, s, ns, hit, x, a, sizes=None):
     """Derive the telemetry events of one applied step from the state
-    transition: a fill is a miss whose object ended up cached; an eviction is
-    a fill that did not grow the cache; a tinylfu aging event is the ``seen``
+    transition: a fill is a miss whose object ended up cached; the eviction
+    *count* falls out of the occupancy delta (int32 — a byte-capacity step
+    can evict several victims for one insert; in object-count mode this
+    equals the old boolean event); a tinylfu aging event is the ``seen``
     reset (the counter just incremented, so 0 means the window closed). All
-    masked by ``a`` so frozen (inactive / padded) steps emit nothing."""
+    masked by ``a`` so frozen (inactive / padded) steps emit nothing. With
+    ``sizes`` the request's bytes are bucketed into hit/miss byte events."""
     fill = a & (~hit) & ns["in_cache"][x]
-    evict = fill & (ns["count"] == s["count"])
+    evict = (s["count"] - ns["count"]) + fill.astype(jnp.int32)
     ev = {"fill": fill, "evict": evict, "count": ns["count"]}
+    if sizes is not None:
+        sz = sizes[x]
+        ev["hit_bytes"] = jnp.where(a & hit, sz, 0)
+        ev["miss_bytes"] = jnp.where(a & (~hit), sz, 0)
     if spec.kind == "tinylfu":
         ev["aging"] = a & (ns["seen"] == 0)
     return ev
 
 
-def _chunked_scan(spec: PolicySpec, state, trace, active=None, cap=None, instrument=False):
+def _chunked_scan(
+    spec: PolicySpec, state, trace, active=None, cap=None, instrument=False,
+    sizes=None, cap_bytes=None,
+):
     """plfua_dyn driver: scan refresh-length chunks of ``step`` with the hot
     mask frozen, then :func:`refresh_hot` at every chunk boundary.
 
@@ -329,10 +515,10 @@ def _chunked_scan(spec: PolicySpec, state, trace, active=None, cap=None, instrum
 
     def f(s, xa):
         x, a = xa
-        ns, hit = step(spec, s, x, cap)
+        ns, hit = step(spec, s, x, cap, sizes=sizes, cap_bytes=cap_bytes)
         ns = jax.tree_util.tree_map(lambda o, n_: jnp.where(a, n_, o), s, ns)
         if instrument:
-            return ns, (hit & a, _step_events(spec, s, ns, hit, x, a))
+            return ns, (hit & a, _step_events(spec, s, ns, hit, x, a, sizes))
         return ns, hit & a
 
     def chunk(s, inp):
@@ -362,23 +548,28 @@ def _chunked_scan(spec: PolicySpec, state, trace, active=None, cap=None, instrum
     return state, unpad(hits), events
 
 
-def instrumented_scan(spec: PolicySpec, state, trace, active=None, cap=None):
+def instrumented_scan(
+    spec: PolicySpec, state, trace, active=None, cap=None, sizes=None, cap_bytes=None
+):
     """The telemetry-enabled twin of the plain ``lax.scan`` over ``step`` /
     the masked fleet scan: identical state trajectory and hit series, plus
     the per-step event series telemetry buckets (fill/evict/count, tinylfu
-    aging, plfua_dyn chunk refresh/churn). Only compiled when a
-    :class:`repro.telemetry.TelemetrySpec` is passed, so the disabled path
-    stays byte-for-byte the uninstrumented program."""
+    aging, plfua_dyn chunk refresh/churn, hit/miss bytes when sized). Only
+    compiled when a :class:`repro.telemetry.TelemetrySpec` is passed, so the
+    disabled path stays byte-for-byte the uninstrumented program."""
     if spec.kind == "plfua_dyn":
-        return _chunked_scan(spec, state, trace, active, cap, instrument=True)
+        return _chunked_scan(
+            spec, state, trace, active, cap, instrument=True,
+            sizes=sizes, cap_bytes=cap_bytes,
+        )
     if active is None:
         active = jnp.ones(trace.shape, jnp.bool_)
 
     def f(s, xa):
         x, a = xa
-        ns, hit = step(spec, s, x, cap)
+        ns, hit = step(spec, s, x, cap, sizes=sizes, cap_bytes=cap_bytes)
         ns = jax.tree_util.tree_map(lambda o, n_: jnp.where(a, n_, o), s, ns)
-        return ns, (hit & a, _step_events(spec, s, ns, hit, x, a))
+        return ns, (hit & a, _step_events(spec, s, ns, hit, x, a, sizes))
 
     state, (hits, events) = jax.lax.scan(f, state, (trace.astype(jnp.int32), active))
     return state, hits, events
@@ -401,37 +592,46 @@ def telemetry_series(
         aging=events.get("aging"),
         fired=events.get("fired"),
         churn=events.get("churn"),
+        hit_bytes=events.get("hit_bytes"),
+        miss_bytes=events.get("miss_bytes"),
         chunk_len=spec.effective_refresh if spec.kind == "plfua_dyn" else None,
         xp=jnp,
     )
 
 
 @functools.partial(jax.jit, static_argnums=(0, 2))
-def simulate(spec: PolicySpec, trace: jax.Array, telemetry=None):
+def simulate(spec: PolicySpec, trace: jax.Array, telemetry=None, sizes=None):
     """Run a full trace. Returns (hits: bool[T], final_state), or with a
     static :class:`repro.telemetry.TelemetrySpec` third argument
     (hits, final_state, series[n_windows, N_METRICS]) — the windowed
-    telemetry accumulated inside the scan (docs/observability.md)."""
+    telemetry accumulated inside the scan (docs/observability.md).
+    ``sizes`` is the per-object byte-size array (``None`` = unit sizes),
+    consulted when ``spec.size_aware``."""
     state = init_state(spec)
+    if sizes is not None:
+        sizes = jnp.asarray(sizes, jnp.int32)
     if telemetry is None:
         if spec.kind == "plfua_dyn":
-            state, hits = _chunked_scan(spec, state, trace)
+            state, hits = _chunked_scan(spec, state, trace, sizes=sizes)
         else:
-            state, hits = jax.lax.scan(lambda s, x: step(spec, s, x), state, trace)
+            state, hits = jax.lax.scan(
+                lambda s, x: step(spec, s, x, sizes=sizes), state, trace
+            )
         return hits, state
-    state, hits, events = instrumented_scan(spec, state, trace)
+    state, hits, events = instrumented_scan(spec, state, trace, sizes=sizes)
     series = telemetry_series(spec, telemetry, trace.shape[0], hits, events)
     return hits, state, series
 
 
 @functools.partial(jax.jit, static_argnums=(0, 2))
-def simulate_batch(spec: PolicySpec, traces: jax.Array, telemetry=None):
+def simulate_batch(spec: PolicySpec, traces: jax.Array, telemetry=None, sizes=None):
     """vmap over samples: traces (S, T) -> hits (S, T). The paper's 12-sample
     replication in one device launch. With ``telemetry`` set, returns
-    (hits (S, T), series (S, n_windows, N_METRICS))."""
+    (hits (S, T), series (S, n_windows, N_METRICS)). ``sizes`` is shared
+    across samples (one object universe)."""
     if telemetry is None:
-        return jax.vmap(lambda tr: simulate(spec, tr)[0])(traces)
-    out = jax.vmap(lambda tr: simulate(spec, tr, telemetry))(traces)
+        return jax.vmap(lambda tr: simulate(spec, tr, None, sizes)[0])(traces)
+    out = jax.vmap(lambda tr: simulate(spec, tr, telemetry, sizes))(traces)
     return out[0], out[2]
 
 
@@ -446,10 +646,13 @@ def metadata_entries(spec: PolicySpec, state: dict[str, jax.Array]) -> jax.Array
     if spec.kind == "wlfu":
         return (state["freq"] > 0).sum() + state["count"]
     if spec.kind == "lfu":
-        return state["count"]
+        # since PR 7 LFU parks demand from unfilled/unfit misses (eviction
+        # still zeroes the victim, so flat runs keep metadata == occupancy)
+        parked = ((state["freq"] > 0) & ~state["in_cache"]).sum()
+        return state["count"] + parked
     if spec.kind == "tinylfu":
         return state["count"] + state["sketch"].size + spec.doorkeeper
-    # plfu / plfua / plfua_dyn: cached entries + parked entries (+ sketch)
+    # plfu / plfua / plfua_dyn / gdsf: cached + parked entries (+ sketch)
     parked = ((state["freq"] > 0) & ~state["in_cache"]).sum()
     meta = state["count"] + parked
     if spec.kind == "plfua_dyn":
@@ -461,11 +664,12 @@ def eviction_count(spec: PolicySpec, hits, trace, state) -> int:
     """Total evictions implied by one ``simulate`` run (host-side).
 
     Every admitted miss inserts, so evictions = inserts - final occupancy.
-    Sketch kinds carry the insert count in state (admission is data-dependent);
-    for the others it is derivable from the hit sequence alone.
+    Sketch kinds and byte-capacity runs carry the insert count in state
+    (admission / fitting is data-dependent); for the others it is derivable
+    from the hit sequence alone.
     """
     count = int(np.asarray(state["count"]))
-    if spec.kind in SKETCH_POLICY_KINDS:
+    if spec.kind in SKETCH_POLICY_KINDS or spec.capacity_bytes:
         return int(np.asarray(state["inserts"])) - count
     hits = np.asarray(hits)
     if spec.kind == "plfua":

@@ -22,11 +22,26 @@ Implemented policies:
                ``refresh`` requests from count-min-sketch top-k estimates,
                fixing the static hot set's collapse under popularity churn.
 
+  * GDSF     — GreedyDual-Size-Frequency [Cherkasova 1998]: priority
+               H(x) = L + freq(x)/size(x) with a global aging credit L that
+               ratchets to each evicted victim's priority; evicted objects
+               park their frequency (ghost entries), like PLFU.
+
 All frequency policies break eviction ties by lowest object id, and all are
 "implemented in the same manner" (paper §1.1): dict metadata + a lazy min-heap
 for eviction, so CPU-time comparisons between them are apples-to-apples.
 The vectorised JAX/Pallas implementations are validated against these
 references decision-for-decision (same hits, same evictions).
+
+Byte-capacity mode (PR 7): every policy accepts ``sizes`` (per-object int
+sizes, unit when omitted) plus ``capacity_bytes``; when ``capacity_bytes > 0``
+the object-count limit is replaced by a byte budget and an insertion evicts
+up to ``max_victims`` victims (bounded, mirrored exactly by the jitted
+step's ``lax.fori_loop``) until the incoming object fits — if it still does
+not fit (or is larger than the whole budget, in which case nothing is
+evicted) the object is not stored, though demand metadata still updates.
+With unit sizes and ``capacity_bytes == capacity`` this reproduces the
+object-capacity decisions bit for bit (tests/test_bytes.py).
 """
 from __future__ import annotations
 
@@ -47,23 +62,75 @@ __all__ = [
     "WLFUCache",
     "TinyLFUCache",
     "DynamicPLFUACache",
+    "GDSFCache",
     "make_policy",
     "POLICY_NAMES",
+    "GDSF_SHIFT",
+    "DEFAULT_MAX_VICTIMS",
 ]
+
+# Shared fixed-point / eviction-bound constants live in the registry (the one
+# import-cycle-free module) so the JAX scan and Pallas kernel use the same
+# values; re-exported here because this module is the reference semantics.
+GDSF_SHIFT = registry.GDSF_SHIFT
+DEFAULT_MAX_VICTIMS = registry.DEFAULT_MAX_VICTIMS
 
 
 class CachePolicy:
-    """Base: fixed-capacity cache over integer object ids."""
+    """Base: fixed-capacity cache over integer object ids.
+
+    ``capacity`` counts objects. ``capacity_bytes > 0`` switches the limit to
+    a byte budget over per-object ``sizes`` (unit when omitted): insertions
+    evict up to ``max_victims`` victims until the object fits — see the
+    module docstring for the exact (bounded) semantics shared with
+    ``core.jax_cache.step``.
+    """
 
     name = "base"
 
-    def __init__(self, capacity: int):
+    def __init__(
+        self,
+        capacity: int,
+        *,
+        sizes=None,
+        capacity_bytes: int = 0,
+        max_victims: int = 0,
+    ):
         if capacity < 1:
             raise ValueError(f"capacity must be >= 1, got {capacity}")
         self.capacity = int(capacity)
+        self.capacity_bytes = int(capacity_bytes)
+        if self.capacity_bytes < 0:
+            raise ValueError(f"capacity_bytes must be >= 0, got {capacity_bytes}")
+        self.max_victims = int(max_victims) or DEFAULT_MAX_VICTIMS
+        if self.max_victims < 1:
+            raise ValueError(f"max_victims must be >= 1, got {max_victims}")
+        self.sizes = None if sizes is None else np.asarray(sizes, np.int64)
+        if self.sizes is not None and self.sizes.size and self.sizes.min() < 1:
+            raise ValueError("object sizes must be >= 1")
+        self.bytes = 0  # resident bytes (byte mode; unit sizes otherwise)
         self.hits = 0
         self.misses = 0
         self.evictions = 0
+
+    # -- byte-capacity shared machinery --------------------------------------
+    def _size(self, x: int) -> int:
+        return 1 if self.sizes is None else int(self.sizes[x])
+
+    def _room_for(self, x: int, count_fn, evict_one) -> bool:
+        """Byte mode: evict (bounded) until ``x`` fits; True iff it does.
+
+        Mirrors the jitted step's ``lax.fori_loop`` iteration for iteration:
+        an object larger than the whole budget evicts nothing, and once
+        ``max_victims`` victims are gone the insertion is abandoned even if
+        more eviction would have made room."""
+        sx = self._size(x)
+        if sx <= self.capacity_bytes:
+            for _ in range(self.max_victims):
+                if self.bytes + sx <= self.capacity_bytes or count_fn() == 0:
+                    break
+                evict_one()
+        return self.bytes + sx <= self.capacity_bytes
 
     # -- interface -----------------------------------------------------------
     def request(self, x: int, fill: bool = True) -> bool:
@@ -72,10 +139,10 @@ class CachePolicy:
         ``fill`` gates *insertion only* (the fleet's cross-tier placement
         hook, :mod:`repro.fleet.placement`): with ``fill=False`` a miss still
         updates the policy's demand metadata (window slide, sketch feed,
-        parked-frequency bump) but the object is not stored — except
-        in-memory LFU, whose metadata dies with the object, so an unfilled
-        miss leaves no trace. Mirrors the ``fill`` argument of
-        ``core.jax_cache.step`` decision-for-decision."""
+        parked-frequency bump — since PR 7 in-memory LFU parks too; only its
+        *eviction* still destroys metadata) but the object is not stored.
+        Mirrors the ``fill`` argument of ``core.jax_cache.step``
+        decision-for-decision."""
         raise NotImplementedError
 
     def contains(self, x: int) -> bool:
@@ -101,9 +168,14 @@ class CachePolicy:
 class LRUCache(CachePolicy):
     name = "lru"
 
-    def __init__(self, capacity: int):
-        super().__init__(capacity)
+    def __init__(self, capacity: int, **kw):
+        super().__init__(capacity, **kw)
         self._od: OrderedDict[int, None] = OrderedDict()
+
+    def _evict_lru(self) -> None:
+        victim, _ = self._od.popitem(last=False)
+        self.bytes -= self._size(victim)
+        self.evictions += 1
 
     def request(self, x: int, fill: bool = True) -> bool:
         od = self._od
@@ -114,10 +186,13 @@ class LRUCache(CachePolicy):
         self.misses += 1
         if not fill:
             return False
-        if len(od) >= self.capacity:
-            od.popitem(last=False)
-            self.evictions += 1
+        if self.capacity_bytes:
+            if not self._room_for(x, lambda: len(od), self._evict_lru):
+                return False
+        elif len(od) >= self.capacity:
+            self._evict_lru()
         od[x] = None
+        self.bytes += self._size(x)
         return False
 
     def contains(self, x: int) -> bool:
@@ -142,8 +217,8 @@ class _HeapLFUBase(CachePolicy):
         (EXPERIMENTS.md §Paper reproduction).
     """
 
-    def __init__(self, capacity: int, evict: str = "heap"):
-        super().__init__(capacity)
+    def __init__(self, capacity: int, evict: str = "heap", **kw):
+        super().__init__(capacity, **kw)
         self._freq: dict[int, int] = {}  # cached object -> frequency
         self._heap: list[tuple[int, int]] = []
         self._scan = evict == "scan"
@@ -161,21 +236,34 @@ class _HeapLFUBase(CachePolicy):
         if self._scan:
             victim = min(freq, key=lambda o: (freq[o], o))
             del freq[victim]
-            self.evictions += 1
-            return victim
-        heap = self._heap
-        while True:
-            f, victim = heapq.heappop(heap)
-            if freq.get(victim) == f:
-                del freq[victim]
-                self.evictions += 1
-                return victim
+        else:
+            heap = self._heap
+            while True:
+                f, victim = heapq.heappop(heap)
+                if freq.get(victim) == f:
+                    del freq[victim]
+                    break
+        self.bytes -= self._size(victim)
+        self.evictions += 1
+        return victim
 
 
 class LFUCache(_HeapLFUBase):
-    """In-memory LFU: frequency restarts at 1 after every (re-)admission."""
+    """In-memory LFU: frequency restarts at 1 after every (re-)admission.
+
+    *Eviction* still destroys the cached frequency (the paper's Fig. 2(a)
+    red-column pathology is preserved), but *placement-gated* misses park
+    demand evidence exactly like PLFU: an unfilled miss bumps a parked
+    counter and a later admission resumes from it, so ``lcd`` promotes LFU
+    objects with their accumulated counts instead of resetting them (PR 7
+    fix of the PR 5 carve-out; ``jax_cache.step`` mirrors this with
+    ``touch = hit | admitted`` for every frequency kind)."""
 
     name = "lfu"
+
+    def __init__(self, capacity: int, evict: str = "heap", **kw):
+        super().__init__(capacity, evict=evict, **kw)
+        self._parked: dict[int, int] = {}  # unfilled-miss demand evidence
 
     def request(self, x: int, fill: bool = True) -> bool:
         freq = self._freq
@@ -186,15 +274,22 @@ class LFUCache(_HeapLFUBase):
             return True
         self.misses += 1
         if not fill:
-            return False  # in-memory LFU: no metadata without the object
-        if len(freq) >= self.capacity:
+            self._parked[x] = self._parked.get(x, 0) + 1
+            return False
+        fnew = self._parked.pop(x, 0) + 1  # resume parked demand (PR 7)
+        if self.capacity_bytes:
+            if not self._room_for(x, lambda: len(freq), self._evict_min):
+                self._parked[x] = fnew  # did not fit: evidence stays parked
+                return False
+        elif len(freq) >= self.capacity:
             self._evict_min()
-        self._bump(x, 1)  # frequency recommences from 1 (paper §2.1)
+        self._bump(x, fnew)  # frequency recommences on (re-)admission (§2.1)
+        self.bytes += self._size(x)
         return False
 
     @property
     def metadata_entries(self) -> int:
-        return len(self._freq)
+        return len(self._freq) + len(self._parked)
 
 
 class PLFUCache(_HeapLFUBase):
@@ -202,9 +297,15 @@ class PLFUCache(_HeapLFUBase):
 
     name = "plfu"
 
-    def __init__(self, capacity: int, evict: str = "heap"):
-        super().__init__(capacity, evict=evict)
+    def __init__(self, capacity: int, evict: str = "heap", **kw):
+        super().__init__(capacity, evict=evict, **kw)
         self._parked: dict[int, int] = {}  # evicted object -> last frequency
+
+    def _evict_park(self) -> int:
+        victim_f = self._freq_of_min()
+        victim = self._evict_min()
+        self._parked[victim] = victim_f
+        return victim
 
     def request(self, x: int, fill: bool = True) -> bool:
         freq = self._freq
@@ -219,12 +320,16 @@ class PLFUCache(_HeapLFUBase):
             # placement withholds the copy — promotion resumes from it
             self._parked[x] = self._parked.get(x, 0) + 1
             return False
-        if len(freq) >= self.capacity:
-            victim_f = self._freq_of_min()
-            victim = self._evict_min()
-            self._parked[victim] = victim_f
         # resume from the parked frequency rather than restarting at 1
-        self._bump(x, self._parked.pop(x, 0) + 1)
+        fnew = self._parked.pop(x, 0) + 1
+        if self.capacity_bytes:
+            if not self._room_for(x, lambda: len(freq), self._evict_park):
+                self._parked[x] = fnew  # did not fit: demand stays parked
+                return False
+        elif len(freq) >= self.capacity:
+            self._evict_park()
+        self._bump(x, fnew)
+        self.bytes += self._size(x)
         return False
 
     def _freq_of_min(self) -> int:
@@ -254,10 +359,10 @@ class PLFUACache(CachePolicy):
 
     name = "plfua"
 
-    def __init__(self, capacity: int, hot: Iterable[int]):
-        super().__init__(capacity)
+    def __init__(self, capacity: int, hot: Iterable[int], **kw):
+        super().__init__(capacity, **kw)
         self._hot = frozenset(int(h) for h in hot)
-        self._plfu = PLFUCache(capacity)
+        self._plfu = PLFUCache(capacity, **kw)
 
     def request(self, x: int, fill: bool = True) -> bool:
         if x in self._hot:
@@ -268,6 +373,7 @@ class PLFUACache(CachePolicy):
         self.hits = self._plfu.hits
         self.misses = self._plfu.misses
         self.evictions = self._plfu.evictions
+        self.bytes = self._plfu.bytes
         return hit
 
     def contains(self, x: int) -> bool:
@@ -291,13 +397,20 @@ class WLFUCache(CachePolicy):
 
     name = "wlfu"
 
-    def __init__(self, capacity: int, window: int = 10_000):
-        super().__init__(capacity)
+    def __init__(self, capacity: int, window: int = 10_000, **kw):
+        super().__init__(capacity, **kw)
         self.window = int(window)
         self._wfreq: dict[int, int] = {}  # windowed frequency, all objects seen
         self._ring: list[int] = [-1] * self.window
         self._ptr = 0
         self._cache: set[int] = set()
+
+    def _evict_wlfu(self) -> None:
+        wfreq = self._wfreq
+        victim = min(self._cache, key=lambda o: (wfreq.get(o, 0), o))
+        self._cache.remove(victim)
+        self.bytes -= self._size(victim)
+        self.evictions += 1
 
     def request(self, x: int, fill: bool = True) -> bool:
         wfreq = self._wfreq
@@ -319,11 +432,13 @@ class WLFUCache(CachePolicy):
         self.misses += 1
         if not fill:
             return False
-        if len(self._cache) >= self.capacity:
-            victim = min(self._cache, key=lambda o: (wfreq.get(o, 0), o))
-            self._cache.remove(victim)
-            self.evictions += 1
+        if self.capacity_bytes:
+            if not self._room_for(x, lambda: len(self._cache), self._evict_wlfu):
+                return False
+        elif len(self._cache) >= self.capacity:
+            self._evict_wlfu()
         self._cache.add(x)
+        self.bytes += self._size(x)
         return False
 
     def contains(self, x: int) -> bool:
@@ -358,8 +473,9 @@ class TinyLFUCache(_HeapLFUBase):
         window: int | None = None,
         sketch_width: int | None = None,
         doorkeeper: int = 0,
+        **kw,
     ):
-        super().__init__(capacity)
+        super().__init__(capacity, **kw)
         self.window = int(window or sketch.default_window(capacity))
         self._sketch = sketch.CountMinSketch(sketch_width or sketch.default_width(capacity))
         self.doorkeeper = int(doorkeeper)
@@ -393,14 +509,28 @@ class TinyLFUCache(_HeapLFUBase):
         self.misses += 1
         if not fill:
             return False
+        if self.capacity_bytes:
+            # byte mode: "full" means the object does not fit as-is; a full
+            # duel win frees room via the bounded loop (empty cache = no
+            # victim to duel, so an over-budget object is simply rejected)
+            full = self.bytes + self._size(x) > self.capacity_bytes
+            if full and not (freq and self._estimate(x) > self._estimate(self._peek_min()[1])):
+                return False
+            if not self._room_for(x, lambda: len(freq), self._evict_min):
+                return False
+            self._bump(x, 1)
+            self.bytes += self._size(x)
+            return False
         if len(freq) < self.capacity:
             self._bump(x, 1)
+            self.bytes += self._size(x)
             return False
         # admission duel: incoming vs victim, by (bloom-augmented) estimate
         vf, victim = self._peek_min()
         if self._estimate(x) > self._estimate(victim):
             self._evict_min()
             self._bump(x, 1)
+            self.bytes += self._size(x)
         return False
 
     def _peek_min(self) -> tuple[int, int]:
@@ -448,8 +578,9 @@ class DynamicPLFUACache(CachePolicy):
         hot_size: int = 0,
         refresh: int = 0,
         sketch_width: int = 0,
+        **kw,
     ):
-        super().__init__(capacity)
+        super().__init__(capacity, **kw)
         self.n_objects = int(n_objects)
         self.hot_size = min(self.n_objects, int(hot_size) or 2 * capacity)
         self.refresh = int(refresh) or sketch.default_refresh(capacity)
@@ -460,7 +591,7 @@ class DynamicPLFUACache(CachePolicy):
         self._seen = 0
         self._hot = np.zeros(self.n_objects, dtype=bool)
         self._hot[: self.hot_size] = True
-        self._plfu = PLFUCache(capacity)
+        self._plfu = PLFUCache(capacity, **kw)
 
     def refresh_now(self) -> None:
         """Recompute the hot set from the sketch, then age the sketch."""
@@ -481,6 +612,7 @@ class DynamicPLFUACache(CachePolicy):
         self.hits = self._plfu.hits
         self.misses = self._plfu.misses
         self.evictions = self._plfu.evictions
+        self.bytes = self._plfu.bytes
         if not self.external_refresh:
             self._seen += 1
             if self._seen >= self.refresh:
@@ -499,6 +631,89 @@ class DynamicPLFUACache(CachePolicy):
         return self._plfu.metadata_entries + self._sketch.rows.size
 
 
+class GDSFCache(CachePolicy):
+    """GreedyDual-Size-Frequency [Cherkasova 1998], integer fixed-point.
+
+    Priority of a cached object: ``H(x) = L + (freq(x) << GDSF_SHIFT) //
+    size(x)`` — all int arithmetic so the JAX scan and the Pallas kernel
+    reproduce it bit for bit. The global aging credit ``L`` starts at 0 and
+    ratchets to each evicted victim's priority, so long-resident objects
+    decay relative to fresh insertions without any per-step aging pass.
+    Eviction takes the minimum priority, ties to the lowest id.
+
+    Frequencies survive eviction in a parked-list (ghost entries), exactly
+    like PLFU — and like PLFU, *every* miss (unfilled, unfit, or admitted)
+    bumps the demand evidence, so ``lcd`` promotions resume with their
+    accumulated counts. With unit sizes GDSF degenerates to PLFU-with-aging.
+
+    Works in both capacity modes: object-count (``capacity``) or byte budget
+    (``capacity_bytes`` + the bounded ``max_victims`` loop from the base
+    class). The priority heap is lazy: priorities are non-decreasing per
+    object while cached (L and freq only grow), so stale snapshots are
+    simply skipped.
+    """
+
+    name = "gdsf"
+
+    def __init__(self, capacity: int, *, n_objects: int | None = None, **kw):
+        super().__init__(capacity, **kw)
+        del n_objects  # accepted for factory uniformity; ids need no universe
+        self._freq: dict[int, int] = {}  # cached object -> frequency
+        self._score: dict[int, int] = {}  # cached object -> priority H
+        self._parked: dict[int, int] = {}  # evicted/unfilled -> frequency
+        self._heap: list[tuple[int, int]] = []  # lazy (H, id) snapshots
+        self.L = 0  # global aging credit
+
+    def _priority(self, x: int, f: int) -> int:
+        return self.L + ((f << GDSF_SHIFT) // self._size(x))
+
+    def _bump(self, x: int, f: int) -> None:
+        self._freq[x] = f
+        h = self._priority(x, f)
+        self._score[x] = h
+        heapq.heappush(self._heap, (h, x))
+
+    def _evict_min(self) -> int:
+        freq, score, heap = self._freq, self._score, self._heap
+        while True:
+            h, victim = heapq.heappop(heap)
+            if score.get(victim) == h:
+                self.L = h  # the aging credit ratchets to the victim's H
+                self._parked[victim] = freq.pop(victim)
+                del score[victim]
+                self.bytes -= self._size(victim)
+                self.evictions += 1
+                return victim
+
+    def request(self, x: int, fill: bool = True) -> bool:
+        f = self._freq.get(x)
+        if f is not None:
+            self.hits += 1
+            self._bump(x, f + 1)  # re-priced under the current L
+            return True
+        self.misses += 1
+        if not fill:
+            self._parked[x] = self._parked.get(x, 0) + 1
+            return False
+        fnew = self._parked.pop(x, 0) + 1
+        if self.capacity_bytes:
+            if not self._room_for(x, lambda: len(self._freq), self._evict_min):
+                self._parked[x] = fnew  # did not fit: demand stays parked
+                return False
+        elif len(self._freq) >= self.capacity:
+            self._evict_min()
+        self._bump(x, fnew)  # priced under the post-eviction L
+        self.bytes += self._size(x)
+        return False
+
+    def contains(self, x: int) -> bool:
+        return x in self._freq
+
+    @property
+    def metadata_entries(self) -> int:
+        return len(self._freq) + len(self._parked)
+
+
 POLICY_NAMES = registry.names(reference=True)
 
 
@@ -513,31 +728,39 @@ def make_policy(
     sketch_width: int = 0,
     doorkeeper: int = 0,
     evict: str = "heap",
+    sizes=None,
+    capacity_bytes: int = 0,
+    max_victims: int = 0,
 ) -> CachePolicy:
     """Factory. PLFUA needs a hot set: explicit ``hot`` ids, or the rank prefix
     [0, 2*capacity) when ids are popularity ranks (our Zipf traces); plfua_dyn
     needs ``n_objects`` (the id universe its sketch ranks over).
-    ``evict``: "heap" (optimised) or "scan" (the paper's O(C) cost profile)."""
+    ``evict``: "heap" (optimised) or "scan" (the paper's O(C) cost profile).
+    ``sizes``/``capacity_bytes``/``max_victims`` enable byte-capacity mode on
+    any kind (see the module docstring)."""
     name = name.lower()
+    bkw = dict(sizes=sizes, capacity_bytes=capacity_bytes, max_victims=max_victims)
     if name == "lru":
-        return LRUCache(capacity)
+        return LRUCache(capacity, **bkw)
     if name == "lfu":
-        return LFUCache(capacity, evict=evict)
+        return LFUCache(capacity, evict=evict, **bkw)
     if name == "plfu":
-        return PLFUCache(capacity, evict=evict)
+        return PLFUCache(capacity, evict=evict, **bkw)
     if name == "plfua":
         if hot is None:
             hi = 2 * capacity if n_objects is None else min(n_objects, 2 * capacity)
             hot = range(hi)
-        return PLFUACache(capacity, hot)
+        return PLFUACache(capacity, hot, **bkw)
     if name == "wlfu":
-        return WLFUCache(capacity, window or 10_000)
+        return WLFUCache(capacity, window or 10_000, **bkw)
     if name == "tinylfu":
-        return TinyLFUCache(capacity, window, sketch_width or None, doorkeeper)
+        return TinyLFUCache(capacity, window, sketch_width or None, doorkeeper, **bkw)
     if name == "plfua_dyn":
         if n_objects is None:
             raise ValueError("plfua_dyn requires n_objects (sketch id universe)")
         return DynamicPLFUACache(
-            capacity, n_objects, refresh=refresh, sketch_width=sketch_width
+            capacity, n_objects, refresh=refresh, sketch_width=sketch_width, **bkw
         )
+    if name == "gdsf":
+        return GDSFCache(capacity, n_objects=n_objects, **bkw)
     raise ValueError(f"unknown policy {name!r}; expected one of {POLICY_NAMES}")

@@ -14,7 +14,24 @@ from __future__ import annotations
 
 import dataclasses
 
-__all__ = ["PolicyInfo", "POLICIES", "names", "info"]
+__all__ = [
+    "PolicyInfo",
+    "POLICIES",
+    "names",
+    "info",
+    "GDSF_SHIFT",
+    "DEFAULT_MAX_VICTIMS",
+]
+
+#: fixed-point scale of the GDSF priority H = L + (freq << GDSF_SHIFT) // size
+#: — integer arithmetic keeps the reference / JAX / Pallas tiers bit-identical
+#: (shared here because the registry is the one import-cycle-free module).
+GDSF_SHIFT = 8
+
+#: byte-capacity eviction bound when ``max_victims`` is 0: at most this many
+#: victims per insertion (the static ``lax.fori_loop`` bound in
+#: jax_cache.step; the reference and kernel loops mirror it exactly).
+DEFAULT_MAX_VICTIMS = 8
 
 
 @dataclasses.dataclass(frozen=True)
@@ -34,6 +51,11 @@ class PolicyInfo:
     #: PR 6) on the jax tier, both fleet engines and the Pallas kernel —
     #: asserted against the host-side oracle in tests/test_telemetry.py
     telemetry: bool = True
+    #: eviction *score* consults the per-object size (GDSF family). Every
+    #: kind runs under byte-capacity tiers (``PolicySpec.capacity_bytes``,
+    #: the bounded multi-victim eviction loop in jax_cache.step); this flag
+    #: marks the kinds whose victim choice itself is size-weighted.
+    size_aware: bool = False
     description: str = ""
     #: tunable knobs the PolicySpec/kernel accept for this kind (the docs
     #: policy-support matrix is generated from these — see
@@ -49,6 +71,7 @@ POLICIES: tuple[PolicyInfo, ...] = (
     PolicyInfo("wlfu", True, True, True, description="Window-LFU over the last W requests", options=("window",)),
     PolicyInfo("tinylfu", True, True, True, sketch=True, description="sketch-vs-victim admission over LFU eviction (optional doorkeeper bloom front)", options=("window", "sketch_width", "doorkeeper")),
     PolicyInfo("plfua_dyn", True, True, True, sketch=True, description="PLFUA with sketch-refreshed hot set", options=("hot_size", "refresh", "sketch_width")),
+    PolicyInfo("gdsf", True, True, True, size_aware=True, description="GreedyDual-Size-Frequency: score = L + freq/size with a global aging credit L ratcheted to each evicted victim's score", options=("capacity_bytes", "max_victims")),
 )
 
 _BY_NAME = {p.name: p for p in POLICIES}
@@ -70,6 +93,7 @@ def names(
     pallas: bool | None = None,
     sketch: bool | None = None,
     telemetry: bool | None = None,
+    size_aware: bool | None = None,
 ) -> tuple[str, ...]:
     """Canonical-order names, filtered by tier support (None = don't care)."""
     out = []
@@ -83,6 +107,8 @@ def names(
         if sketch is not None and p.sketch != sketch:
             continue
         if telemetry is not None and p.telemetry != telemetry:
+            continue
+        if size_aware is not None and p.size_aware != size_aware:
             continue
         out.append(p.name)
     return tuple(out)

@@ -29,12 +29,13 @@ CPU-time-vs-CHR axis extended to a hierarchy:
                    beats the current eviction victim's — TinyLFU's duel
                    applied as a *placement* layer over any eviction kind.
 
-Placement gates **insertion only**. Metadata bookkeeping (PLFU parked
-frequencies, wlfu's window, tinylfu's sketch/bloom, LRU stamps) still runs
-on every consulted request, so a tier accumulates demand evidence for
-objects it has not yet stored — which is exactly what lets ``lcd`` promote
-an object with its accumulated parked frequency. Exception: in-memory LFU
-destroys metadata with the object, so an unfilled miss leaves no trace
+Placement gates **insertion only**. Metadata bookkeeping (the frequency
+family's parked counters, wlfu's window, tinylfu's sketch/bloom, LRU
+stamps) still runs on every consulted request, so a tier accumulates
+demand evidence for objects it has not yet stored — which is exactly what
+lets ``lcd`` promote an object with its accumulated parked frequency.
+In-memory LFU follows the same parked-frequency convention as PLFU: an
+unfilled miss still bumps the object's counter, only eviction destroys it
 (``jax_cache.step`` and ``core.policies`` agree on this, see the ``fill``
 gate in both).
 

@@ -37,24 +37,32 @@ __all__ = [
 ]
 
 
-def build_policy(spec: PolicySpec) -> policies.CachePolicy:
-    """PolicySpec -> the equivalent reference policy object."""
+def build_policy(spec: PolicySpec, sizes=None) -> policies.CachePolicy:
+    """PolicySpec -> the equivalent reference policy object. ``sizes`` is the
+    shared per-object byte catalogue (None = unit sizes), paired with the
+    spec's ``capacity_bytes``/``max_victims`` byte-mode options."""
+    bkw = dict(
+        sizes=None if sizes is None else np.asarray(sizes),
+        capacity_bytes=spec.capacity_bytes,
+        max_victims=spec.max_victims,
+    )
     if spec.kind == "lru":
-        return policies.LRUCache(spec.capacity)
+        return policies.LRUCache(spec.capacity, **bkw)
     if spec.kind == "lfu":
-        return policies.LFUCache(spec.capacity)
+        return policies.LFUCache(spec.capacity, **bkw)
     if spec.kind == "plfu":
-        return policies.PLFUCache(spec.capacity)
+        return policies.PLFUCache(spec.capacity, **bkw)
     if spec.kind == "plfua":
-        return policies.PLFUACache(spec.capacity, hot=range(spec.effective_hot))
+        return policies.PLFUACache(spec.capacity, hot=range(spec.effective_hot), **bkw)
     if spec.kind == "wlfu":
-        return policies.WLFUCache(spec.capacity, window=spec.window)
+        return policies.WLFUCache(spec.capacity, window=spec.window, **bkw)
     if spec.kind == "tinylfu":
         return policies.TinyLFUCache(
             spec.capacity,
             window=spec.effective_window,
             sketch_width=spec.effective_sketch_width,
             doorkeeper=spec.doorkeeper,
+            **bkw,
         )
     if spec.kind == "plfua_dyn":
         return policies.DynamicPLFUACache(
@@ -63,7 +71,10 @@ def build_policy(spec: PolicySpec) -> policies.CachePolicy:
             hot_size=spec.effective_hot,
             refresh=spec.effective_refresh,
             sketch_width=spec.effective_sketch_width,
+            **bkw,
         )
+    if spec.kind == "gdsf":
+        return policies.GDSFCache(spec.capacity, n_objects=spec.n_objects, **bkw)
     raise ValueError(f"no reference policy for kind {spec.kind!r}")
 
 
@@ -103,14 +114,17 @@ def peek_victim(pol: policies.CachePolicy) -> int:
     if isinstance(pol, policies.WLFUCache):
         wf = pol._wfreq
         return min(pol._cache, key=lambda o: (wf.get(o, 0), o))
+    if isinstance(pol, policies.GDSFCache):
+        s = pol._score
+        return min(s, key=lambda o: (s[o], o))
     f = pol._freq
     return min(f, key=lambda o: (f[o], o))
 
 
 def simulate_fleet_reference(
-    topo: Topology, trace: np.ndarray, assignment: np.ndarray
+    topo: Topology, trace: np.ndarray, assignment: np.ndarray, sizes=None
 ) -> FleetReferenceResult:
-    pols = [[build_policy(s) for s in lvl] for lvl in topo.levels]
+    pols = [[build_policy(s, sizes) for s in lvl] for lvl in topo.levels]
     # dynamic-PLFUA refreshes run on *global* time in a fleet (one timer per
     # node), matching the jitted simulator's chunked scan — switch the policy
     # objects to externally-driven refresh and fire them on the tier cadence.
@@ -162,7 +176,13 @@ def simulate_fleet_reference(
                 if a["seen"] >= a["window"]:
                     a["sk"].halve()
                     a["seen"] = 0
-                if l < serve and cache_count(pol) >= topo.levels[l][node].capacity:
+                spec = topo.levels[l][node]
+                if spec.capacity_bytes:
+                    # byte mode: "full" = does not fit as-is (cf. tinylfu)
+                    full = pol.bytes + pol._size(x) > spec.capacity_bytes
+                else:
+                    full = cache_count(pol) >= spec.capacity
+                if l < serve and full:
                     v = peek_victim(pol)
                     fill = a["sk"].estimate(x) > a["sk"].estimate(v)
             elif l < serve:

@@ -63,6 +63,9 @@ TIER_ROW_FIELDS = (
     "requests",
     "hits",
     "chr",
+    "req_bytes",
+    "hit_bytes",
+    "byte_chr",
     "evictions",
     "mgmt_ops",
     "mgmt_cpu_s",
@@ -80,6 +83,9 @@ _REQ_OPS = {
     "wlfu": 5.0,
     "tinylfu": 3.0,
     "plfua_dyn": 1.0,
+    # GDSF touches freq + score dicts and pushes the recomputed priority on
+    # every request (the L + freq/size ratchet), one touch more than plain lfu
+    "gdsf": 4.0,
 }
 #: extra touches per *admitted* request (the PLFUA family meters metadata work
 #: only for the hot set — that asymmetry is the paper's §4 energy argument).
@@ -185,10 +191,19 @@ class TierReport:
     mgmt_ops: float
     mgmt_cpu_s: float
     mgmt_energy_j: float
+    #: traffic weighted by object size; unit fallback (no size catalogue on
+    #: the run) keeps req_bytes == requests and hit_bytes == hits, so byte_chr
+    #: degenerates to chr and the row schema never forks on sizedness
+    req_bytes: int = 0
+    hit_bytes: int = 0
 
     @property
     def chr(self) -> float:
         return self.hits / self.requests if self.requests else 0.0
+
+    @property
+    def byte_chr(self) -> float:
+        return self.hit_bytes / self.req_bytes if self.req_bytes else 0.0
 
     def row(self) -> dict:
         # built from TIER_ROW_FIELDS so the emitted keys cannot drift from
@@ -225,6 +240,8 @@ def tier_report(
         mgmt_ops=ops,
         mgmt_cpu_s=cpu_s,
         mgmt_energy_j=energy.mgmt_energy_j(cpu_s),
+        req_bytes=int(c.get("req_bytes", c["requests"])),
+        hit_bytes=int(c.get("hit_bytes", c["hits"])),
     )
 
 
@@ -240,6 +257,8 @@ def aggregate_tiers(name: str, policy: str, capacity: int, nodes: list[TierRepor
         mgmt_ops=sum(t.mgmt_ops for t in nodes),
         mgmt_cpu_s=sum(t.mgmt_cpu_s for t in nodes),
         mgmt_energy_j=sum(t.mgmt_energy_j for t in nodes),
+        req_bytes=sum(t.req_bytes for t in nodes),
+        hit_bytes=sum(t.hit_bytes for t in nodes),
     )
 
 
@@ -251,6 +270,9 @@ class FleetReport:
     per_level: list[TierReport]  # aggregate per level
     n_requests: int
     origin_requests: int  # missed every tier -> fetched from origin
+    #: bytes fetched from origin (edge request bytes minus every tier's hit
+    #: bytes); unit fallback makes this == origin_requests
+    origin_egress_bytes: int = 0
     #: one row per level pricing the cross-tier placement machinery (fill
     #: writes + decision cost; see placement_ops). ``requests`` on these
     #: rows counts placement decisions, ``hits``/``evictions`` are 0.
@@ -300,6 +322,19 @@ class FleetReport:
     def placement_energy_j(self) -> float:
         return sum(t.mgmt_energy_j for t in self.per_level_placement)
 
+    @property
+    def byte_chr(self) -> float:
+        """Fleet-wide byte hit ratio: bytes served from *some* cache tier."""
+        rb = self.per_level[0].req_bytes if self.per_level else 0
+        if not rb:
+            return 0.0
+        return sum(t.hit_bytes for t in self.per_level) / rb
+
+    @property
+    def origin_egress_gb(self) -> float:
+        """GB pulled over the origin link (the paper's traffic-cost axis)."""
+        return self.origin_egress_bytes / 1e9
+
     def rows(self) -> list[dict]:
         out = []
         pls = self.per_level_placement or [None] * len(self.per_level)
@@ -308,6 +343,24 @@ class FleetReport:
             out.append(agg.row())
             if pl is not None:
                 out.append(pl.row())
+        # the origin summary row: what the cache fleet did NOT absorb. Keyed
+        # on the pinned schema plus one extra column (the exporter takes the
+        # ordered union across rows, so the extra key is safe).
+        origin = TierReport(
+            tier="origin",
+            policy="-",
+            capacity=0,
+            requests=self.origin_requests,
+            hits=0,
+            evictions=0,
+            mgmt_ops=0.0,
+            mgmt_cpu_s=0.0,
+            mgmt_energy_j=0.0,
+            req_bytes=self.origin_egress_bytes,
+            hit_bytes=0,
+        ).row()
+        origin["origin_egress_gb"] = self.origin_egress_gb
+        out.append(origin)
         return out
 
     def window_rows(self) -> list[dict]:
@@ -401,10 +454,13 @@ def fleet_report(
                 mgmt_ops=p_ops,
                 mgmt_cpu_s=p_cpu,
                 mgmt_energy_j=energy.mgmt_energy_j(p_cpu),
+                req_bytes=int(requests - hits),  # unit fallback: 1 per decision
+                hit_bytes=0,
             )
         )
     n_requests = per_level[0].requests
     origin = n_requests - sum(t.hits for t in per_level)
+    origin_bytes = per_level[0].req_bytes - sum(t.hit_bytes for t in per_level)
     per_level_series = None
     if telemetry is not None:
         if "telemetry" not in result:
@@ -429,6 +485,7 @@ def fleet_report(
         per_level=per_level,
         n_requests=n_requests,
         origin_requests=origin,
+        origin_egress_bytes=origin_bytes,
         per_level_placement=per_level_placement,
         per_level_series=per_level_series,
         telemetry_window=None if telemetry is None else telemetry.window,

@@ -57,7 +57,17 @@ __all__ = [
 ]
 
 
-def masked_scan(spec: PolicySpec, state, trace, active, cap=None, *, instrument=False):
+def masked_scan(
+    spec: PolicySpec,
+    state,
+    trace,
+    active,
+    cap=None,
+    *,
+    instrument=False,
+    sizes=None,
+    cap_bytes=None,
+):
     """Scan ``step`` over the trace, freezing state where ``active`` is False.
 
     plfua_dyn routes through the chunked scan so its global-time hot-set
@@ -66,43 +76,53 @@ def masked_scan(spec: PolicySpec, state, trace, active, cap=None, *, instrument=
 
     ``instrument`` (static) switches to the telemetry twin, which returns
     ``(state, hits, events)`` with the per-step event series (identical
-    state/hit trajectory — asserted in tests/test_telemetry.py)."""
+    state/hit trajectory — asserted in tests/test_telemetry.py). ``sizes``/
+    ``cap_bytes`` are the byte-capacity inputs of ``jax_cache.step``."""
     if instrument:
-        return jax_cache.instrumented_scan(spec, state, trace, active, cap)
+        return jax_cache.instrumented_scan(
+            spec, state, trace, active, cap, sizes=sizes, cap_bytes=cap_bytes
+        )
     if spec.kind == "plfua_dyn":
-        return jax_cache._chunked_scan(spec, state, trace, active, cap)
+        return jax_cache._chunked_scan(
+            spec, state, trace, active, cap, sizes=sizes, cap_bytes=cap_bytes
+        )
 
     def f(s, inp):
         x, a = inp
-        ns, hit = jax_cache.step(spec, s, x, cap)
+        ns, hit = jax_cache.step(spec, s, x, cap, sizes=sizes, cap_bytes=cap_bytes)
         ns = jax.tree_util.tree_map(lambda o, n: jnp.where(a, n, o), s, ns)
         return ns, hit & a
 
     return jax.lax.scan(f, state, (trace, active))
 
 
-def tier_counters(spec: PolicySpec, hits, active, trace, state):
+def tier_counters(spec: PolicySpec, hits, active, trace, state, sizes=None):
     """Derived per-node accounting, all from the hit/active series + final state.
 
     Inserts are implied by the policy semantics (every admitted miss inserts),
     so evictions = inserts - final occupancy. Sketch kinds carry the insert
     count in state (admission there is data-dependent, and plfua_dyn's hot
-    mask changes over time, so neither can be derived from the final state).
+    mask changes over time, so neither can be derived from the final state);
+    in byte mode *every* kind carries it (an admitted object may not fit).
+    With ``sizes`` the dict gains per-node byte accounting: ``req_bytes`` /
+    ``hit_bytes`` traffic sums and, in byte mode, the resident ``bytes``.
     """
     miss = active & ~hits
     count = state["count"]
     if spec.kind == "plfua":
         admitted = jnp.take(state["hot"], trace, axis=-1)  # hot mask gathered at x_t
-        inserts = (miss & admitted).sum(-1)
+        inserts = (
+            state["inserts"] if spec.capacity_bytes else (miss & admitted).sum(-1)
+        )
         admitted_requests = (active & admitted).sum(-1)
     elif spec.kind in jax_cache.SKETCH_POLICY_KINDS:
         inserts = state["inserts"]
         # every hit touches policy metadata; every insert is an admitted miss
         admitted_requests = hits.sum(-1) + inserts
     else:
-        inserts = miss.sum(-1)
+        inserts = state["inserts"] if spec.capacity_bytes else miss.sum(-1)
         admitted_requests = active.sum(-1)
-    return {
+    out = {
         "requests": active.sum(-1),
         "hits": hits.sum(-1),
         "admitted_requests": admitted_requests,
@@ -110,6 +130,13 @@ def tier_counters(spec: PolicySpec, hits, active, trace, state):
         "evictions": inserts - count,
         "count": count,
     }
+    if sizes is not None:
+        sz_t = jnp.take(sizes, trace, axis=-1).astype(jnp.int32)  # (T,)
+        out["req_bytes"] = (active * sz_t).sum(-1)
+        out["hit_bytes"] = (hits * sz_t).sum(-1)
+    if spec.capacity_bytes:
+        out["bytes"] = state["bytes"]
+    return out
 
 
 def level_assignments(topo: Topology, trace: jax.Array, assignment: jax.Array) -> list[jax.Array]:
@@ -128,17 +155,28 @@ def stack_level_state(specs: tuple[PolicySpec, ...]):
     )
 
 
-def run_level(specs: tuple[PolicySpec, ...], trace, active, *, instrument=False):
+def run_level(specs: tuple[PolicySpec, ...], trace, active, *, instrument=False, sizes=None):
     """One level: vmap the masked scan over its nodes.
 
     ``active``: (K, T) bool — request t routed here and unserved below.
     Returns (stacked final states, (K, T) hit series), plus the vmapped
-    per-node event series when ``instrument`` is set."""
+    per-node event series when ``instrument`` is set. ``sizes`` is the
+    global per-object byte array, shared by every node."""
     s0 = specs[0]
     states = stack_level_state(specs)
     caps = jnp.array([s.capacity for s in specs], jnp.int32)
+    if s0.capacity_bytes:
+        caps_b = jnp.array([s.capacity_bytes for s in specs], jnp.int32)
+        return jax.vmap(
+            lambda st, act, cap, capb: masked_scan(
+                s0, st, trace, act, cap,
+                instrument=instrument, sizes=sizes, cap_bytes=capb,
+            )
+        )(states, active, caps, caps_b)
     return jax.vmap(
-        lambda st, act, cap: masked_scan(s0, st, trace, act, cap, instrument=instrument)
+        lambda st, act, cap: masked_scan(
+            s0, st, trace, act, cap, instrument=instrument, sizes=sizes
+        )
     )(states, active, caps)
 
 
@@ -151,7 +189,7 @@ def level_series(spec: PolicySpec, telemetry, trace_len, hits, active, events):
     )
 
 
-def upper_levels(topo: Topology, trace, assigns, demand, *, telemetry=None):
+def upper_levels(topo: Topology, trace, assigns, demand, *, telemetry=None, sizes=None):
     """Run levels 1..L-1 given the edge tier's surviving ``demand`` stream.
 
     Shared by the single-device path and the shard_map path (which computes
@@ -168,15 +206,17 @@ def upper_levels(topo: Topology, trace, assigns, demand, *, telemetry=None):
             assigns[l][None, :] == jnp.arange(K, dtype=jnp.int32)[:, None]
         ) & demand[None, :]
         if instrument:
-            states, hits, events = run_level(specs, trace, active, instrument=True)
+            states, hits, events = run_level(
+                specs, trace, active, instrument=True, sizes=sizes
+            )
             series_out.append(
                 level_series(specs[0], telemetry, trace.shape[0], hits, active, events)
             )
         else:
-            states, hits = run_level(specs, trace, active)
+            states, hits = run_level(specs, trace, active, sizes=sizes)
         hit_l = hits.any(axis=0)
         level_hits.append(hits)
-        counters.append(tier_counters(specs[0], hits, active, trace, states))
+        counters.append(tier_counters(specs[0], hits, active, trace, states, sizes))
         states_out.append(states)
         demand = demand & ~hit_l
     if instrument:
@@ -184,13 +224,15 @@ def upper_levels(topo: Topology, trace, assigns, demand, *, telemetry=None):
     return level_hits, counters, states_out, demand
 
 
-def _simulate_fleet_impl(topo: Topology, trace, assignment, telemetry=None):
+def _simulate_fleet_impl(topo: Topology, trace, assignment, telemetry=None, sizes=None):
     if topo.has_placement:
         # non-lce placement couples the levels at each trace position ->
         # the time-major engine (see module docstring)
-        return _simulate_placed_impl(topo, trace, assignment, telemetry)
+        return _simulate_placed_impl(topo, trace, assignment, telemetry, sizes)
     trace = trace.astype(jnp.int32)
     assignment = assignment.astype(jnp.int32)
+    if sizes is not None:
+        sizes = jnp.asarray(sizes, jnp.int32)
     assigns = level_assignments(topo, trace, assignment)
 
     specs0 = topo.levels[0]
@@ -198,20 +240,20 @@ def _simulate_fleet_impl(topo: Topology, trace, assignment, telemetry=None):
     active0 = assigns[0][None, :] == jnp.arange(E, dtype=jnp.int32)[:, None]
     if telemetry is not None:
         edge_states, edge_hits, edge_events = run_level(
-            specs0, trace, active0, instrument=True
+            specs0, trace, active0, instrument=True, sizes=sizes
         )
         edge_series = level_series(
             specs0[0], telemetry, trace.shape[0], edge_hits, active0, edge_events
         )
         demand = ~edge_hits.any(axis=0)
         hits_up, counters_up, states_up, demand, series_up = upper_levels(
-            topo, trace, assigns, demand, telemetry=telemetry
+            topo, trace, assigns, demand, telemetry=telemetry, sizes=sizes
         )
     else:
-        edge_states, edge_hits = run_level(specs0, trace, active0)
+        edge_states, edge_hits = run_level(specs0, trace, active0, sizes=sizes)
         demand = ~edge_hits.any(axis=0)
         hits_up, counters_up, states_up, demand = upper_levels(
-            topo, trace, assigns, demand
+            topo, trace, assigns, demand, sizes=sizes
         )
     all_hits = [edge_hits, *hits_up]
     out = {
@@ -221,7 +263,7 @@ def _simulate_fleet_impl(topo: Topology, trace, assignment, telemetry=None):
         "node_hit": tuple(all_hits),
         # per-level counter dicts, arrays of shape (K_l,)
         "tiers": (
-            tier_counters(specs0[0], edge_hits, active0, trace, edge_states),
+            tier_counters(specs0[0], edge_hits, active0, trace, edge_states, sizes),
             *counters_up,
         ),
         # per-level stacked final policy states
@@ -238,7 +280,8 @@ def _simulate_fleet_impl(topo: Topology, trace, assignment, telemetry=None):
 # ------------------------------------------------- time-major placed engine
 def _victim_key(spec: PolicySpec, state):
     """The array whose masked argmin is the node's eviction candidate —
-    recency stamps for LRU, (windowed/parked) frequency for everyone else.
+    recency stamps for LRU, the cached GDSF priority for gdsf, (windowed/
+    parked) frequency for everyone else.
 
     The admit placement duels against the candidate of the *pre-request*
     state (the reference oracle's ``peek_victim`` reads the same snapshot).
@@ -249,7 +292,11 @@ def _victim_key(spec: PolicySpec, state):
     pick (duelling pre-state keeps the gate computable without replaying
     the slide), identical across the jitted engine and the oracle.
     """
-    return state["last"] if spec.kind == "lru" else state["freq"]
+    if spec.kind == "lru":
+        return state["last"]
+    if spec.kind == "gdsf":
+        return state["score"]
+    return state["freq"]
 
 
 def _dyn_chunk(topo: Topology) -> int | None:
@@ -278,6 +325,7 @@ def _placed_run(
     level0_caps=None,
     edge_axis: str | None = None,
     instrument: bool = False,
+    sizes=None,
 ):
     """The time-major scan shared by the single-device and edge-sharded
     placed paths. ``trace`` (T,) int32, ``assigns`` one (T,) int32 per level.
@@ -302,6 +350,10 @@ def _placed_run(
     """
     if instrument and edge_axis is not None:
         raise NotImplementedError("telemetry is single-device (no edge mesh)")
+    if edge_axis is not None and any(
+        lvl[0].capacity_bytes for lvl in topo.levels
+    ):
+        raise NotImplementedError("byte-capacity placement is single-device")
     L = topo.n_levels
     (T,) = trace.shape
     specs = [lvl[0] for lvl in topo.levels]
@@ -309,6 +361,9 @@ def _placed_run(
 
     states = [stack_level_state(lvl) for lvl in topo.levels]
     caps = [jnp.array([s.capacity for s in lvl], jnp.int32) for lvl in topo.levels]
+    caps_b = [
+        jnp.array([s.capacity_bytes for s in lvl], jnp.int32) for lvl in topo.levels
+    ]
     if level0_states is not None:
         states[0] = level0_states
     if level0_caps is not None:
@@ -374,6 +429,7 @@ def _placed_run(
             act = consulted[l] & (own0 if l == 0 else True)
             st = jax.tree_util.tree_map(lambda a: a[node], states[l])
             cap = caps[l][node]
+            cap_b = caps_b[l][node] if spec.capacity_bytes else None
             pk, pp = parsed[l]
             if pk == "lce":
                 fill = None
@@ -392,7 +448,12 @@ def _placed_run(
                 victim = jax_cache._masked_argmin(
                     _victim_key(spec, st), st["in_cache"]
                 )
-                full = st["count"] >= cap
+                if spec.capacity_bytes:
+                    # byte mode: "full" = does not fit as-is (cf. tinylfu)
+                    size_x = jnp.int32(1) if sizes is None else sizes[x]
+                    full = st["bytes"] + size_x > cap_b
+                else:
+                    full = st["count"] >= cap
                 est_x = sketch.rows_estimate(rows, idx)
                 est_v = sketch.rows_estimate(rows, admit_tables[l][victim])
                 fill = (~full) | (est_x > est_v)
@@ -404,7 +465,9 @@ def _placed_run(
                         jnp.where(act, seen, ps["seen"][node])
                     ),
                 )
-            ns, hit = jax_cache.step(spec, st, x, cap, fill=fill)
+            ns, hit = jax_cache.step(
+                spec, st, x, cap, fill=fill, sizes=sizes, cap_bytes=cap_b
+            )
             insert = act & (~hit) & ns["in_cache"][x]
             new_states.append(
                 jax.tree_util.tree_map(
@@ -419,7 +482,10 @@ def _placed_run(
                 gate = jnp.bool_(True) if fill is None else fill
                 tel_l = {
                     "fill": insert,
-                    "evict": insert & (ns["count"] == st["count"]),
+                    # int32 victim count: byte mode can evict several per
+                    # insert; in object mode this is the old 0/1 event
+                    "evict": jnp.where(act, st["count"] - ns["count"], 0)
+                    + insert.astype(jnp.int32),
                     "offer": act & (~hit) & gate,
                     # post-step occupancy snapshot of the whole node fleet
                     "count": new_states[l]["count"],
@@ -556,6 +622,8 @@ def assemble_placed(
     telemetry=None,
     tel_lv=None,
     chunk_len=None,
+    trace=None,
+    sizes=None,
 ):
     """Fold a ``_placed_run`` result into the ``simulate_fleet`` pytree.
 
@@ -563,9 +631,15 @@ def assemble_placed(
     ``k`` is active at ``t`` iff the request routed to it and no level below
     served it) — identical to the level-major masks by construction. With
     ``telemetry``/``tel_lv`` the per-step events (which are consulted-node
-    scalars) are scattered to nodes through the same masks and bucketed."""
+    scalars) are scattered to nodes through the same masks and bucketed;
+    ``trace``/``sizes`` add the per-node byte accounting."""
     T = hit_lv[0].shape[0]
     demand = jnp.ones((T,), jnp.bool_)
+    sz_t = (
+        None
+        if sizes is None
+        else jnp.take(jnp.asarray(sizes, jnp.int32), trace, axis=-1)
+    )
     tiers, node_hits, series = [], [], []
     for l in range(topo.n_levels):
         K = len(topo.levels[l])
@@ -574,16 +648,20 @@ def assemble_placed(
         ) & demand[None, :]
         nh = active & hit_lv[l][None, :]
         count = states[l]["count"]
-        tiers.append(
-            {
-                "requests": active.sum(-1),
-                "hits": nh.sum(-1),
-                "admitted_requests": admitted[l],
-                "inserts": fills[l],
-                "evictions": fills[l] - count,
-                "count": count,
-            }
-        )
+        tier = {
+            "requests": active.sum(-1),
+            "hits": nh.sum(-1),
+            "admitted_requests": admitted[l],
+            "inserts": fills[l],
+            "evictions": fills[l] - count,
+            "count": count,
+        }
+        if sz_t is not None:
+            tier["req_bytes"] = (active * sz_t[None, :]).sum(-1)
+            tier["hit_bytes"] = (nh * sz_t[None, :]).sum(-1)
+        if topo.levels[l][0].capacity_bytes:
+            tier["bytes"] = states[l]["bytes"]
+        tiers.append(tier)
         node_hits.append(nh)
         if telemetry is not None:
             ev = tel_lv[l]
@@ -596,12 +674,19 @@ def assemble_placed(
                     hits=nh,
                     active=active,
                     fills=per_node(ev["fill"]),
-                    evictions=per_node(ev["evict"]),
+                    # int32 victim counts, scattered to the consulted node
+                    evictions=active * ev["evict"][None, :],
                     occupancy=ev["count"],
                     offers=per_node(ev["offer"]),
                     aging=None if aging is None else per_node(aging),
                     fired=ev.get("fired"),
                     churn=ev.get("churn"),
+                    hit_bytes=None if sz_t is None else nh * sz_t[None, :],
+                    miss_bytes=(
+                        None
+                        if sz_t is None
+                        else (active & ~nh) * sz_t[None, :]
+                    ),
                     chunk_len=chunk_len,
                     xp=jnp,
                 )
@@ -621,46 +706,63 @@ def assemble_placed(
     return out
 
 
-def _simulate_placed_impl(topo: Topology, trace, assignment, telemetry=None):
+def _simulate_placed_impl(topo: Topology, trace, assignment, telemetry=None, sizes=None):
     trace = trace.astype(jnp.int32)
     assignment = assignment.astype(jnp.int32)
+    if sizes is not None:
+        sizes = jnp.asarray(sizes, jnp.int32)
     assigns = level_assignments(topo, trace, assignment)
     if telemetry is not None:
         states, pstates, fills, admitted, hit_lv, tel_lv, G = _placed_run(
-            topo, trace, assigns, instrument=True
+            topo, trace, assigns, instrument=True, sizes=sizes
         )
         return assemble_placed(
             topo, assigns, states, pstates, fills, admitted, hit_lv,
             telemetry=telemetry, tel_lv=tel_lv, chunk_len=G,
+            trace=trace, sizes=sizes,
         )
-    states, pstates, fills, admitted, hit_lv = _placed_run(topo, trace, assigns)
-    return assemble_placed(topo, assigns, states, pstates, fills, admitted, hit_lv)
+    states, pstates, fills, admitted, hit_lv = _placed_run(
+        topo, trace, assigns, sizes=sizes
+    )
+    return assemble_placed(
+        topo, assigns, states, pstates, fills, admitted, hit_lv,
+        trace=trace, sizes=sizes,
+    )
 
 
 @functools.partial(jax.jit, static_argnums=(0, 3))
-def simulate_fleet(topo: Topology, trace: jax.Array, assignment: jax.Array, telemetry=None):
+def simulate_fleet(
+    topo: Topology, trace: jax.Array, assignment: jax.Array, telemetry=None, sizes=None
+):
     """Run one trace through an N-tier topology. See module docstring.
 
     Returns a dict of arrays:
       ``hit``         tuple per level, (T,) bool — served at this level
       ``node_hit``    tuple per level, (K_l, T) bool — per-node hit series
       ``tiers``       tuple per level of counter dicts (requests/hits/
-                      admitted_requests/inserts/evictions/count), shape (K_l,)
+                      admitted_requests/inserts/evictions/count, shape (K_l,);
+                      plus req_bytes/hit_bytes when ``sizes`` is given and
+                      resident ``bytes`` for byte-capacity levels)
       ``states``      tuple per level of stacked final policy states
       ``origin_miss`` (T,) bool — missed every tier
+
+    ``sizes`` is the shared (n_objects,) int32 byte catalogue (traced;
+    ``workloads.object_sizes``) — required for byte-capacity levels to be
+    meaningful, optional byte accounting otherwise.
 
     With a static :class:`repro.telemetry.TelemetrySpec` the dict gains
     ``telemetry``: per level a (K_l, n_windows, N_METRICS) int32 windowed
     series accumulated inside the scan (docs/observability.md).
     """
-    return _simulate_fleet_impl(topo, trace, assignment, telemetry)
+    return _simulate_fleet_impl(topo, trace, assignment, telemetry, sizes)
 
 
 @functools.partial(jax.jit, static_argnums=(0, 3))
 def simulate_fleet_batch(
-    topo: Topology, traces: jax.Array, assignments: jax.Array, telemetry=None
+    topo: Topology, traces: jax.Array, assignments: jax.Array, telemetry=None, sizes=None
 ):
-    """vmap the fleet over (S, T) trace samples in one device launch."""
-    return jax.vmap(lambda tr, a: _simulate_fleet_impl(topo, tr, a, telemetry))(
+    """vmap the fleet over (S, T) trace samples in one device launch
+    (``sizes`` is shared across samples — one object universe)."""
+    return jax.vmap(lambda tr, a: _simulate_fleet_impl(topo, tr, a, telemetry, sizes))(
         traces, assignments
     )

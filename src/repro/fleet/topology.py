@@ -277,6 +277,8 @@ def tree(
     sketch_width: int | Sequence[int] = 0,
     hot_size: int | Sequence[int] = 0,
     doorkeeper: int | Sequence[int] = 0,
+    capacity_bytes: int | Sequence[int] = 0,
+    max_victims: int | Sequence[int] = 0,
     level_names: Sequence[str] = (),
     placements: str | Sequence[str] = (),
     routers: Sequence[str] = (),
@@ -300,6 +302,8 @@ def tree(
     ref_l = _per_level(refresh, L, "refresh")
     sw_l = _per_level(sketch_width, L, "sketch_width")
     hot_l = _per_level(hot_size, L, "hot_size")
+    cb_l = _per_level(capacity_bytes, L, "capacity_bytes")
+    mv_l = _per_level(max_victims, L, "max_victims")
     # a broadcast scalar doorkeeper applies only to the tinylfu levels of a
     # mixed-kind tree (same filter as cdn.two_tier); an explicit per-level
     # sequence is passed through, so PolicySpec still rejects a doorkeeper
@@ -315,6 +319,7 @@ def tree(
                 kind=kinds_l[l], n_objects=n_objects, capacity=caps_l[l],
                 hot_size=hot_l[l], window=win_l[l], refresh=ref_l[l],
                 sketch_width=sw_l[l], doorkeeper=dk_l[l],
+                capacity_bytes=cb_l[l], max_victims=mv_l[l],
             )
             for _ in range(widths[l])
         )

@@ -28,10 +28,20 @@ bloom front) over LFU eviction; ``plfua_dyn`` hoists the hot-mask refresh out
 of the inner step exactly like ``jax_cache._chunked_scan`` does: the trace is
 walked in ``refresh``-length chunks with the hot mask frozen, and the
 estimate-all + top-k rank selection runs once per chunk boundary (global-time
-cadence — a partial tail chunk never fires). The rank selection is a pairwise
-comparison matrix (O(N^2) transient per refresh), cheap at fleet-node scale
-(N up to a few thousand) and amortised over ``refresh`` steps; it reproduces
-``lax.top_k``'s ordering (estimate desc, ties to the lowest id) bit for bit.
+cadence — a partial tail chunk never fires). The rank selection is a double
+stable argsort over the estimate row (PR 7; it replaced the O(N^2) pairwise
+comparison matrix flagged as the roofline-dominating term in BENCH_PR4),
+reproducing ``lax.top_k``'s ordering (estimate desc, ties to the lowest id)
+bit for bit.
+
+PR 7 additions: the ``gdsf`` kind (score row ``L + (freq << GDSF_SHIFT) //
+size`` with the aging credit ``L`` as a scalar carry) and *byte-capacity*
+mode for the base-step family (lru/lfu/plfu/plfua/plfua_dyn/gdsf): per-object
+sizes arrive as a second, grid-shared ``(1, n_pad)`` input (padding lanes are
+size 1) and one insertion runs a bounded multi-victim eviction loop — at most
+``max_victims`` masked argmins — mirroring ``jax_cache.step`` decision for
+decision. ``wlfu``/``tinylfu`` under a byte budget are a JAX-scan-only
+combination (``cache_sim_pallas`` raises).
 
 The only dynamic access is the scalar trace read ``trace_ref[0, t]`` per step.
 Every kind in ``repro.core.registry`` is implemented here; differential
@@ -55,6 +65,12 @@ _I32_MAX = np.iinfo(np.int32).max
 
 KERNEL_KINDS = registry.names(pallas=True)
 _SKETCH_KINDS = registry.names(sketch=True)
+
+_GDSF_SHIFT = registry.GDSF_SHIFT
+
+#: byte-capacity on the Pallas tier covers the base-step family; the ring/
+#: sketch-admission kinds under a byte budget are a JAX-scan-only combination
+BYTE_CAPABLE_KINDS = tuple(k for k in KERNEL_KINDS if k not in ("wlfu", "tinylfu"))
 
 # telemetry output rows: METRICS padded up to a TPU-friendly sublane count
 _TEL_ROWS = 16
@@ -118,11 +134,14 @@ def _refresh_hot(rows, tables, *, n_pad: int, n_objects: int, hot_k: int):
     """plfua_dyn chunk-boundary refresh: hot mask = sketch top-``hot_k``.
 
     Estimate-all is a one-hot reduction per row (no gather); the top-k is a
-    pairwise rank — ``rank(i) = |{j: est_j > est_i}| + |{j < i: est_j =
-    est_i}|`` — which is exactly ``lax.top_k``'s order (estimate descending,
-    ties to the lowest id), so the mask matches ``jax_cache.refresh_hot`` bit
-    for bit. Padding lanes get estimate -1 so they always rank last. Returns
-    (hot (1, n_pad) bool, halved rows).
+    *double stable argsort* over the estimate row: the first sort orders ids
+    by estimate descending (stable, so ties keep ascending-id order — exactly
+    ``lax.top_k``), the second inverts that permutation into per-id ranks,
+    and ``rank < hot_k`` is the mask. O(N log N) instead of the previous
+    O(N^2) pairwise comparison matrix (the BENCH_PR4 roofline term), with
+    the same bit-exact order as ``jax_cache.refresh_hot``. Padding lanes get
+    estimate -1 so they always sort last. Returns (hot (1, n_pad) bool,
+    halved rows).
     """
     w_pad = rows[0].shape[-1]
     w_iota = jax.lax.broadcasted_iota(jnp.int32, (1, w_pad), 1)
@@ -135,21 +154,17 @@ def _refresh_hot(rows, tables, *, n_pad: int, n_objects: int, hot_k: int):
     valid_col = jax.lax.broadcasted_iota(jnp.int32, (n_pad, 1), 0) < n_objects
     est = jnp.where(valid_col, est, -1)  # (n_pad, 1)
 
-    row_i = jax.lax.broadcasted_iota(jnp.int32, (n_pad, n_pad), 0)
-    col_j = jax.lax.broadcasted_iota(jnp.int32, (n_pad, n_pad), 1)
-    est_row = jnp.transpose(est)  # (1, n_pad)
-    beats = (est_row > est) | ((est_row == est) & (col_j < row_i))
-    rank = jnp.sum(beats.astype(jnp.int32), axis=1, keepdims=True)
-    hot = jnp.transpose(rank < hot_k)  # (1, n_pad) bool
+    est_row = jnp.transpose(est)  # (1, n_pad); valid est >= 0, padding -1
+    # ascending sort of -est = estimate descending; stable keeps ties in
+    # ascending-id order; padding (-est = 1 > any valid -est <= 0) sorts last
+    perm = jnp.argsort(-est_row, axis=-1, stable=True)
+    rank = jnp.argsort(perm, axis=-1, stable=True)  # invert: id -> its rank
+    hot = rank < hot_k  # (1, n_pad) bool
     return hot, [r >> 1 for r in rows]
 
 
 def _cache_sim_kernel(
-    trace_ref,  # (1, T) int32 VMEM
-    hits_ref,  # (1, 1) int32 VMEM out
-    freq_ref,  # (1, N_pad) int32 VMEM out (for lru: last-access stamps)
-    cache_ref,  # (1, N_pad) int32 VMEM out (0/1 mask)
-    *tel_refs,  # (1, _TEL_ROWS, n_w_pad) int32 VMEM out, iff telemetry_window
+    *refs,  # trace, [sizes iff size-aware], hits/freq/cache outs, [telemetry out]
     kind: str,
     capacity: int,
     hot_size: int,
@@ -162,9 +177,25 @@ def _cache_sim_kernel(
     trace_len: int,
     telemetry_window: int = 0,
     n_w_pad: int = 0,
+    capacity_bytes: int = 0,
+    max_victims: int = 0,
 ):
+    BYTES = capacity_bytes > 0
+    SIZED = BYTES or kind == "gdsf"
+    trace_ref = refs[0]  # (1, T) int32 VMEM
+    i = 1
+    if SIZED:
+        sizes_ref = refs[i]  # (1, N_pad) int32 VMEM, grid-shared; padding = 1
+        i += 1
+    hits_ref = refs[i]  # (1, 1) int32 VMEM out
+    freq_ref = refs[i + 1]  # (1, N_pad) int32 VMEM out (lru: last-access stamps)
+    cache_ref = refs[i + 2]  # (1, N_pad) int32 VMEM out (0/1 mask)
+    tel_refs = refs[i + 3 :]  # (1, _TEL_ROWS, n_w_pad) out, iff telemetry_window
+
     iota = jax.lax.broadcasted_iota(jnp.int32, (1, n_pad), 1)
     iota_u32 = iota.astype(jnp.uint32)
+    if SIZED:
+        sizes_row = sizes_ref[...]
 
     TEL = telemetry_window > 0
     if TEL:
@@ -174,20 +205,26 @@ def _cache_sim_kernel(
         nw_iota = jax.lax.broadcasted_iota(jnp.int32, (1, n_w_pad), 1)
         _row = lambda i: (m_iota == i).astype(jnp.int32)
 
-        def tel_update(tel, t, *, hit, fill, evict, count, aging=None, active=None):
+        def tel_update(tel, t, *, hit, fill, evict, count, aging=None, active=None, sz=None):
             """Scatter one step's events into the windowed accumulator via a
             one-hot window column (metric row order = telemetry_spec.METRICS;
-            occupancy is a set-at-window-end, everything else an add)."""
+            occupancy is a set-at-window-end, everything else an add).
+            ``evict`` may be a bool (object mode) or an int32 victim count
+            (byte mode); ``sz`` is the request's byte size (1 when unsized,
+            matching the jax tier's unit fallback)."""
             act = jnp.bool_(True) if active is None else active
             i32 = lambda b: (b & act).astype(jnp.int32)
+            szv = jnp.int32(1) if sz is None else sz
             won = nw_iota == jnp.minimum(t // W, n_w - 1)
             inc = (
                 _row(0) * i32(jnp.bool_(True))  # requests
                 + _row(1) * i32(hit)  # hits
                 + _row(2) * i32(~hit)  # misses
                 + _row(3) * i32(fill)  # fills
-                + _row(4) * i32(evict)  # evictions
+                + _row(4) * (jnp.asarray(evict).astype(jnp.int32) * i32(jnp.bool_(True)))  # evictions
                 + _row(5) * i32(~hit)  # fill_offers: flat cache, every miss
+                + _row(9) * (szv * i32(hit))  # hit_bytes
+                + _row(10) * (szv * i32(~hit))  # miss_bytes
             )
             if aging is not None:
                 inc = inc + _row(7) * i32(aging)  # refreshes (tinylfu aging)
@@ -217,20 +254,29 @@ def _cache_sim_kernel(
 
     # ---------------------------------------------------------------- steps
     def base_step(t, carry, active=None):
-        """lru / lfu / plfu / plfua / plfua_dyn one-hot step (plfua_dyn's
-        carry additionally threads (rows, hot); ``active`` masks tail
-        padding of the chunked plfua_dyn walk). With telemetry the windowed
-        accumulator rides as the carry's last element in every driver."""
+        """lru / lfu / plfu / plfua / plfua_dyn / gdsf one-hot step. The
+        carry is (freq, in_cache, count, hits) + per-kind extras in a fixed
+        order: gdsf appends (score, L), plfua_dyn appends (rows, hot), byte
+        mode appends (nbytes,); with telemetry the windowed accumulator
+        rides last in every driver. ``active`` masks tail padding of the
+        chunked plfua_dyn walk."""
         if TEL:
             *carry, tel = carry
-            carry = tuple(carry)
+        freq, in_cache, count, hits = carry[0], carry[1], carry[2], carry[3]
+        j = 4
+        if kind == "gdsf":
+            score, credit = carry[j], carry[j + 1]
+            j += 2
         if kind == "plfua_dyn":
-            freq, in_cache, count, hits, rows, hot = carry
-        else:
-            freq, in_cache, count, hits = carry
+            rows, hot = carry[j], carry[j + 1]
+            j += 2
+        if BYTES:
+            nbytes = carry[j]
         x = trace_ref[0, jnp.minimum(t, trace_len - 1)]
         onehot = iota == x
         hit = jnp.any(onehot & in_cache)
+        if SIZED:
+            size_x = _lane_pick(onehot, sizes_row)
 
         if kind == "plfua_dyn":
             idx = [_lane_pick(onehot, tbl) for tbl in tables]
@@ -241,44 +287,104 @@ def _cache_sim_kernel(
         else:
             admitted = jnp.bool_(True)
         touch = hit | admitted
-        need_evict = (~hit) & admitted & (count >= capacity)
-        victim_onehot = victim_of(freq, in_cache)
+        want = (~hit) & admitted
+        key = score if kind == "gdsf" else freq
 
-        if kind == "lru":
-            # recency eviction: "freq" holds last-access stamps (t+1; 0 = never)
-            new_in_cache = in_cache & ~(victim_onehot & need_evict)
-            new_freq = jnp.where(onehot & touch, t + 1, freq)
+        if BYTES:
+            # bounded multi-victim eviction until x fits (mirrors the jitted
+            # scan's _evict_bytes_loop / the reference's _room_for exactly):
+            # an object larger than the whole budget evicts nothing
+            fits_ever = size_x <= capacity_bytes
+
+            def evict_body(_, c):
+                ic, cnt, nb, keyrow, cr = c
+                need = want & fits_ever & (nb + size_x > capacity_bytes) & (cnt > 0)
+                v_oh = victim_of(keyrow, ic)
+                if kind == "gdsf":
+                    cr = jnp.where(need, _lane_pick(v_oh, keyrow), cr)
+                ic = ic & ~(v_oh & need)
+                cnt = cnt - need.astype(jnp.int32)
+                nb = nb - jnp.where(need, _lane_pick(v_oh, sizes_row), 0)
+                if kind == "lfu":
+                    # in-memory LFU destroys metadata on eviction
+                    keyrow = jnp.where(v_oh & need, 0, keyrow)
+                return ic, cnt, nb, keyrow, cr
+
+            new_in_cache, new_count, nb, key, cr = jax.lax.fori_loop(
+                0,
+                max_victims,
+                evict_body,
+                (in_cache, count, nbytes, key,
+                 credit if kind == "gdsf" else jnp.int32(0)),
+            )
+            if kind == "gdsf":
+                new_credit = cr
+            insert = want & (nb + size_x <= capacity_bytes)
+            new_nbytes = nb + jnp.where(insert, size_x, 0)
+            new_freq = key if kind == "lfu" else freq
+            need_evict_n = count - new_count  # victims this step (int32)
+            new_count = new_count + insert.astype(jnp.int32)
         else:
+            need_evict = want & (count >= capacity)
+            victim_onehot = victim_of(key, in_cache)
+            if kind == "gdsf":
+                # the aging credit ratchets to the evicted victim's priority
+                new_credit = jnp.where(
+                    need_evict, _lane_pick(victim_onehot, score), credit
+                )
             new_in_cache = in_cache & ~(victim_onehot & need_evict)
             new_freq = freq
             if kind == "lfu":
                 # in-memory LFU destroys metadata on eviction -> restart at 1
                 new_freq = jnp.where(victim_onehot & need_evict, 0, new_freq)
-            # PLFU/PLFUA: untouched freq of an evicted id *is* the parked-list
-            new_freq = jnp.where(onehot & touch, new_freq + 1, new_freq)
+            insert = want
+            new_count = count + insert.astype(jnp.int32) - need_evict.astype(jnp.int32)
+            need_evict_n = need_evict
 
-        insert = (~hit) & admitted
+        if kind == "lru":
+            # recency eviction: "freq" holds last-access stamps (t+1; 0 = never)
+            new_freq = jnp.where(onehot & touch, t + 1, new_freq)
+        else:
+            # PLFU/PLFUA/GDSF: untouched freq of an evicted id *is* the
+            # parked-list entry (since PR 7 in-memory LFU parks too; only
+            # its eviction zeroes the entry — see the zeroing above)
+            new_freq = jnp.where(onehot & touch, new_freq + 1, new_freq)
+        if kind == "gdsf":
+            # re-price under the post-eviction credit, from the bumped freq
+            fx = _lane_pick(onehot, new_freq)
+            new_score = jnp.where(
+                onehot & touch,
+                new_credit + ((fx << _GDSF_SHIFT) // size_x),
+                key,
+            )
         new_in_cache = new_in_cache | (onehot & insert)
-        new_count = count + insert.astype(jnp.int32) - need_evict.astype(jnp.int32)
         if TEL:
             tel = tel_update(
-                tel, t, hit=hit, fill=insert, evict=need_evict,
-                count=new_count, active=active,
+                tel, t, hit=hit, fill=insert, evict=need_evict_n,
+                count=new_count, active=active, sz=size_x if SIZED else None,
             )
         if active is not None:
             new_freq = jnp.where(active, new_freq, freq)
             new_in_cache = jnp.where(active, new_in_cache, in_cache)
             new_count = jnp.where(active, new_count, count)
+            if kind == "gdsf":
+                new_score = jnp.where(active, new_score, score)
+                new_credit = jnp.where(active, new_credit, credit)
+            if BYTES:
+                new_nbytes = jnp.where(active, new_nbytes, nbytes)
             hit = hit & active
         hits = hits + hit.astype(jnp.int32)
+        out = (new_freq, new_in_cache, new_count, hits)
+        if kind == "gdsf":
+            out = out + (new_score, new_credit)
         if kind == "plfua_dyn":
             if active is not None:
                 new_rows = [
                     jnp.where(active, nr, r) for nr, r in zip(new_rows, rows)
                 ]
-            out = (new_freq, new_in_cache, new_count, hits, new_rows, hot)
-        else:
-            out = (new_freq, new_in_cache, new_count, hits)
+            out = out + (new_rows, hot)
+        if BYTES:
+            out = out + (new_nbytes,)
         return out + (tel,) if TEL else out
 
     def wlfu_step(t, carry):
@@ -373,6 +479,8 @@ def _cache_sim_kernel(
     freq0 = jnp.zeros((1, n_pad), jnp.int32)
     cache0 = jnp.zeros((1, n_pad), jnp.bool_)
     zero = jnp.int32(0)
+    gdsf0 = (jnp.zeros((1, n_pad), jnp.int32), zero) if kind == "gdsf" else ()
+    bytes0 = (zero,) if BYTES else ()
     tel0 = (jnp.zeros((_TEL_ROWS, n_w_pad), jnp.int32),) if TEL else ()
 
     if kind == "wlfu":
@@ -403,7 +511,7 @@ def _cache_sim_kernel(
             carry = jax.lax.fori_loop(0, refresh, step_in_chunk, carry)
             if TEL:
                 *carry, tel = carry
-            freq, in_cache, count, hits, rows, hot = carry
+            freq, in_cache, count, hits, rows, hot, *extra = carry
             fire = (c + 1) * refresh <= trace_len
             new_hot, new_rows = _refresh_hot(
                 rows, tables, n_pad=n_pad, n_objects=n_objects, hot_k=hot_size
@@ -418,15 +526,21 @@ def _cache_sim_kernel(
                 tel = tel + (_row(7) * fire_i + _row(8) * (churn * fire_i)) * won
             hot = jnp.where(fire, new_hot, hot)
             rows = [jnp.where(fire, nr, r) for nr, r in zip(new_rows, rows)]
-            out = (freq, in_cache, count, hits, rows, hot)
+            out = (freq, in_cache, count, hits, rows, hot, *extra)
             return out + (tel,) if TEL else out
 
         carry = jax.lax.fori_loop(
-            0, n_chunks, chunk, (freq0, cache0, zero, zero, rows0, hot0) + tel0
+            0,
+            n_chunks,
+            chunk,
+            (freq0, cache0, zero, zero, rows0, hot0) + bytes0 + tel0,
         )
     else:
         carry = jax.lax.fori_loop(
-            0, trace_len, base_step, (freq0, cache0, zero, zero) + tel0
+            0,
+            trace_len,
+            base_step,
+            (freq0, cache0, zero, zero) + gdsf0 + bytes0 + tel0,
         )
 
     freq, in_cache, _, hits = carry[0], carry[1], carry[2], carry[3]
@@ -449,6 +563,9 @@ def cache_sim_pallas(
     sketch_width: int = 0,
     doorkeeper: int = 0,
     telemetry_window: int = 0,
+    capacity_bytes: int = 0,
+    max_victims: int = 0,
+    sizes=None,
     interpret: bool = True,
 ):
     """Simulate S same-shape traces on the Pallas grid.
@@ -467,6 +584,14 @@ def cache_sim_pallas(
         the kernel accumulates the :data:`repro.telemetry.METRICS` counters
         per ceil(T/W) window inside the trace loop and a fourth output is
         returned; the disabled kernel program is unchanged.
+      capacity_bytes: byte budget (0 = object-count mode). Byte mode is
+        supported for ``BYTE_CAPABLE_KINDS`` only (the base-step family);
+        ``wlfu``/``tinylfu`` under a byte budget raise — use the JAX scan.
+      max_victims: byte-mode multi-victim eviction bound (0 -> the registry
+        default; a byte-only option, like ``PolicySpec``).
+      sizes: (n_objects,) int32 per-object byte sizes, shared by all samples
+        (``workloads.object_sizes``). Consulted only by the size-aware
+        programs (byte mode or gdsf); None -> unit sizes.
 
     The defaults mirror ``jax_cache.PolicySpec`` exactly, so identical
     arguments produce bit-identical state across the two tiers.
@@ -488,6 +613,18 @@ def cache_sim_pallas(
         raise ValueError("doorkeeper is a tinylfu-only option")
     if telemetry_window < 0:
         raise ValueError(f"telemetry_window must be >= 0, got {telemetry_window}")
+    if capacity_bytes < 0:
+        raise ValueError(f"capacity_bytes must be >= 0, got {capacity_bytes}")
+    if capacity_bytes and kind not in BYTE_CAPABLE_KINDS:
+        raise ValueError(
+            f"byte-capacity mode is not supported for kind={kind!r} on the "
+            f"Pallas tier (supported: {BYTE_CAPABLE_KINDS}); use jax_cache"
+        )
+    if max_victims < 0:
+        raise ValueError(f"max_victims must be >= 0, got {max_victims}")
+    if max_victims and not capacity_bytes:
+        raise ValueError("max_victims is a byte-capacity (capacity_bytes) option")
+    max_victims = (max_victims or registry.DEFAULT_MAX_VICTIMS) if capacity_bytes else 0
     s, t = traces.shape
     n_pad = _round_up(max(n_objects, 128), 128)
     if kind in ("plfua", "plfua_dyn"):
@@ -521,6 +658,8 @@ def cache_sim_pallas(
         trace_len=t,
         telemetry_window=telemetry_window,
         n_w_pad=n_w_pad,
+        capacity_bytes=capacity_bytes,
+        max_victims=max_victims,
     )
     out_specs = [
         pl.BlockSpec((1, 1), lambda i: (i, 0)),
@@ -535,14 +674,33 @@ def cache_sim_pallas(
     if telemetry_window:
         out_specs.append(pl.BlockSpec((1, _TEL_ROWS, n_w_pad), lambda i: (i, 0, 0)))
         out_shape.append(jax.ShapeDtypeStruct((s, _TEL_ROWS, n_w_pad), jnp.int32))
+    in_specs = [pl.BlockSpec((1, t), lambda i: (i, 0))]
+    inputs = [traces.astype(jnp.int32)]
+    if capacity_bytes or kind == "gdsf":
+        # grid-shared (1, n_pad) sizes row; padding lanes are size 1 so the
+        # unit-size fallback and the padded tail share one code path (jnp
+        # throughout: sizes may be a tracer under the jitted ops.cache_sim)
+        if sizes is None:
+            sizes_row = jnp.ones((1, n_pad), jnp.int32)
+        else:
+            sz = jnp.asarray(sizes, jnp.int32)
+            if sz.shape != (n_objects,):
+                raise ValueError(
+                    f"sizes must have shape ({n_objects},), got {sz.shape}"
+                )
+            sizes_row = jnp.concatenate(
+                [sz, jnp.ones((n_pad - n_objects,), jnp.int32)]
+            )[None, :]
+        in_specs.append(pl.BlockSpec((1, n_pad), lambda i: (0, 0)))
+        inputs.append(sizes_row)
     out = pl.pallas_call(
         kernel,
         grid=(s,),
-        in_specs=[pl.BlockSpec((1, t), lambda i: (i, 0))],
+        in_specs=in_specs,
         out_specs=out_specs,
         out_shape=out_shape,
         interpret=interpret,
-    )(traces.astype(jnp.int32))
+    )(*inputs)
     hits, freq, cache = out[0], out[1], out[2]
     result = (hits[:, 0], freq[:, :n_objects], cache[:, :n_objects].astype(bool))
     if telemetry_window:

@@ -24,6 +24,8 @@ def _on_tpu() -> bool:
         "sketch_width",
         "doorkeeper",
         "telemetry_window",
+        "capacity_bytes",
+        "max_victims",
         "interpret",
     ),
 )
@@ -39,6 +41,9 @@ def cache_sim(
     sketch_width: int = 0,
     doorkeeper: int = 0,
     telemetry_window: int = 0,
+    capacity_bytes: int = 0,
+    max_victims: int = 0,
+    sizes=None,
     interpret: bool | None = None,
 ):
     """Batched cache-policy simulation (see cache_sim_pallas for the contract).
@@ -46,6 +51,9 @@ def cache_sim(
     ``interpret`` defaults to True off-TPU so the same call validates on CPU
     and compiles natively on TPU. ``telemetry_window=W`` adds a fourth output
     — the (S, n_windows, N_METRICS) windowed series of docs/observability.md.
+    ``capacity_bytes``/``max_victims`` are jit statics (they shape the
+    program); ``sizes`` is a traced (n_objects,) int32 array shared by all
+    samples.
     """
     if interpret is None:
         interpret = not _on_tpu()
@@ -60,6 +68,9 @@ def cache_sim(
         sketch_width=sketch_width,
         doorkeeper=doorkeeper,
         telemetry_window=telemetry_window,
+        capacity_bytes=capacity_bytes,
+        max_victims=max_victims,
+        sizes=sizes,
         interpret=interpret,
     )
 

@@ -1,6 +1,6 @@
 """The paper's technique as a serving feature: a content/prefix cache whose
 admission + eviction policy is pluggable (any name in core.registry: LRU /
-LFU / PLFU / PLFUA / WLFU / TinyLFU / dynamic-PLFUA — the reference
+LFU / PLFU / PLFUA / WLFU / TinyLFU / dynamic-PLFUA / GDSF — the reference
 implementations from repro.core.policies drive the decisions; this layer
 adds payload storage and energy accounting).
 
@@ -48,14 +48,29 @@ class ContentCache:
         n_objects: int | None = None,
         hot: list[int] | None = None,
         window: int | None = None,
+        sizes=None,
+        capacity_bytes: int = 0,
+        max_victims: int = 0,
         size_of: Callable[[Any], int] = lambda p: 1,
         policy_obj: pol_mod.CachePolicy | None = None,
     ):
         # a prebuilt brain (e.g. fleet.build_policy(PolicySpec) with sketch /
-        # doorkeeper parameters the name+kwargs surface doesn't carry) wins
+        # doorkeeper parameters the name+kwargs surface doesn't carry) wins.
+        # ``sizes``/``capacity_bytes``/``max_victims`` switch the brain to
+        # byte-capacity semantics (core.policies byte mode); ``size_of`` keeps
+        # metering *payload* bytes independently — policy bytes are the
+        # catalogue's declared sizes, stored bytes are whatever the engine
+        # actually materialised.
         if policy_obj is None:
             policy_obj = pol_mod.make_policy(
-                policy, capacity, n_objects=n_objects, hot=hot, window=window
+                policy,
+                capacity,
+                n_objects=n_objects,
+                hot=hot,
+                window=window,
+                sizes=sizes,
+                capacity_bytes=capacity_bytes,
+                max_victims=max_victims,
             )
         self.policy = policy_obj
         self._payloads: dict[int, Any] = {}

@@ -58,7 +58,16 @@ def write_csv(path, rows) -> None:
     with open(path, "w", newline="") as fh:
         if not rows:
             return
-        writer = csv.DictWriter(fh, fieldnames=list(rows[0].keys()))
+        # Ordered union across ALL rows, not rows[0].keys(): mixed-tag row
+        # sets (e.g. fleet level rows carrying byte fields next to flat-cache
+        # rows without them) used to crash DictWriter on the first row that
+        # introduced a new key. First-seen order keeps the common prefix
+        # stable; late-appearing columns append, absent cells write empty.
+        fieldnames: dict[str, None] = {}
+        for row in rows:
+            for key in row:
+                fieldnames.setdefault(key)
+        writer = csv.DictWriter(fh, fieldnames=list(fieldnames), restval="")
         writer.writeheader()
         writer.writerows(rows)
 

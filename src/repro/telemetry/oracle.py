@@ -45,6 +45,9 @@ def windowed_reference(policy: "policies.CachePolicy", trace, window: int) -> np
         out[w, METRIC_INDEX["evictions"]] += evicted
         out[w, METRIC_INDEX["fill_offers"]] += int(not hit)
         out[w, METRIC_INDEX["occupancy"]] = post_count
+        sz = policy._size(int(x))
+        out[w, METRIC_INDEX["hit_bytes"]] += sz * int(hit)
+        out[w, METRIC_INDEX["miss_bytes"]] += sz * int(not hit)
         if is_tiny and policy._seen == 0:
             # the request() increment was reset -> the aging window closed
             out[w, METRIC_INDEX["refreshes"]] += 1

@@ -22,6 +22,9 @@ axis is :data:`METRICS`, in order:
                  the request that completed the period
 ``hot_churn``    plfua_dyn only — size of the symmetric difference between
                  the hot masks before/after each refresh (joiners + leavers)
+``hit_bytes``    bytes served from this cache in the window (PR 7 byte
+                 tiers; unit object sizes make this equal ``hits``)
+``miss_bytes``   bytes fetched past this cache (``== misses`` at unit sizes)
 
 Everything here is xp-generic (``xp=np`` for the oracle and exporters,
 ``xp=jnp`` inside the jitted scans) and shape-static, so the assembly folds
@@ -43,6 +46,8 @@ METRICS = (
     "occupancy",
     "refreshes",
     "hot_churn",
+    "hit_bytes",
+    "miss_bytes",
 )
 N_METRICS = len(METRICS)
 METRIC_INDEX = {name: i for i, name in enumerate(METRICS)}
@@ -137,18 +142,23 @@ def series_from_run(
     aging=None,
     fired=None,
     churn=None,
+    hit_bytes=None,
+    miss_bytes=None,
     chunk_len: int | None = None,
     xp=np,
 ):
     """Bucket per-step event series into the ``[..., n_windows, N_METRICS]``
     layout. Leading axes (node fleets) pass through unchanged.
 
-    ``hits``/``fills``/``evictions``/``offers``/``active``/``aging`` are
-    per-step bool series (..., T); ``occupancy`` the per-step cached-object
-    count; ``active=None`` means every position counts (flat cache).
-    ``fired``/``churn`` are per-chunk (..., n_chunks) refresh events for the
-    chunked plfua_dyn scans, scattered to windows via the static
-    :func:`chunk_window_matrix` (``chunk_len`` required with them).
+    ``hits``/``fills``/``offers``/``active``/``aging`` are per-step bool
+    series (..., T); ``evictions`` bool or int (byte-mode multi-victim
+    counts); ``occupancy`` the per-step cached-object count; ``active=None``
+    means every position counts (flat cache). ``hit_bytes``/``miss_bytes``
+    are per-step byte series (..., T); None falls back to unit object sizes
+    (hit_bytes := hits, miss_bytes := misses). ``fired``/``churn`` are
+    per-chunk (..., n_chunks) refresh events for the chunked plfua_dyn
+    scans, scattered to windows via the static :func:`chunk_window_matrix`
+    (``chunk_len`` required with them).
     """
     W = window
     hits_w = bucket_sum(hits, W, xp)
@@ -163,6 +173,8 @@ def series_from_run(
     evict_w = bucket_sum(evictions, W, xp)
     offer_w = miss_w if offers is None else bucket_sum(offers, W, xp)
     occ_w = bucket_end(occupancy, W, xp)
+    hb_w = hits_w if hit_bytes is None else bucket_sum(hit_bytes, W, xp)
+    mb_w = miss_w if miss_bytes is None else bucket_sum(miss_bytes, W, xp)
     zeros = xp.zeros(hits_w.shape, xp.int32)
     refr_w = zeros
     churn_w = zeros
@@ -177,6 +189,18 @@ def series_from_run(
         refr_w = refr_w + fired.astype(xp.int32) @ m
         churn_w = churn_w + churn.astype(xp.int32) @ m
     return xp.stack(
-        [req_w, hits_w, miss_w, fill_w, evict_w, offer_w, occ_w, refr_w, churn_w],
+        [
+            req_w,
+            hits_w,
+            miss_w,
+            fill_w,
+            evict_w,
+            offer_w,
+            occ_w,
+            refr_w,
+            churn_w,
+            hb_w,
+            mb_w,
+        ],
         axis=-1,
     )

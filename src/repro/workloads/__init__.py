@@ -27,16 +27,19 @@ import numpy as np
 from repro.core import zipf
 from repro.workloads import generators
 from repro.workloads.generators import (
+    SIZE_DISTS,
     churn,
     diurnal,
     flash_crowd,
     multi_tenant,
+    object_sizes,
     stationary,
 )
 
 __all__ = [
     "SCENARIOS",
     "SCENARIO_NAMES",
+    "SIZE_DISTS",
     "TraceSpec",
     "make_traces",
     "register_scenario",
@@ -45,6 +48,7 @@ __all__ = [
     "flash_crowd",
     "diurnal",
     "multi_tenant",
+    "object_sizes",
 ]
 
 SCENARIOS: dict[str, Callable[..., np.ndarray]] = {

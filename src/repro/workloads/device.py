@@ -33,6 +33,7 @@ __all__ = [
     "DeviceTraceSpec",
     "gen_sample",
     "make_traces_device",
+    "object_sizes_device",
     "sample_key",
 ]
 
@@ -207,6 +208,49 @@ _GENERATORS = {
     "diurnal": _diurnal,
     "multi_tenant": _multi_tenant,
 }
+
+
+def object_sizes_device(
+    n_objects: int,
+    *,
+    dist: str = "lognormal",
+    corr: float = 0.0,
+    seed: int = 0,
+    median: int = 64,
+    sigma: float = 1.2,
+    shape: float = 1.5,
+    max_size: int = 1 << 20,
+) -> jax.Array:
+    """On-device port of :func:`repro.workloads.generators.object_sizes` —
+    same contract ((n_objects,) int32 >= 1, exact ``median``, ``corr`` as a
+    rank-correlation strength), distribution-matched rather than bit-matched
+    to the host stream (same caveat as the trace generators: parity tests
+    pull the array off the device and feed the oracle). Traceable, so a
+    streaming fleet can synthesize the catalogue inside jit."""
+    if dist not in ("lognormal", "pareto"):
+        raise ValueError(f"unknown size dist {dist!r}; expected lognormal|pareto")
+    if not -1.0 <= corr <= 1.0:
+        raise ValueError(f"corr must be in [-1, 1], got {corr}")
+    k_raw, k_mix = jax.random.split(
+        jax.random.fold_in(jax.random.PRNGKey(seed), 611_953)
+    )
+    if dist == "lognormal":
+        raw = median * jnp.exp(sigma * jax.random.normal(k_raw, (n_objects,)))
+    else:
+        raw = (
+            median
+            * (1.0 + jax.random.pareto(k_raw, shape, (n_objects,)))
+            / (2.0 ** (1.0 / shape))
+        )
+    raw = jnp.clip(jnp.rint(raw), 1, max_size).astype(jnp.int32)
+    if corr:
+        ids = jnp.arange(n_objects, dtype=jnp.float32)
+        keyv = corr * ids / max(1, n_objects - 1) + (1.0 - abs(corr)) * (
+            jax.random.uniform(k_mix, (n_objects,))
+        )
+        order = jnp.argsort(keyv, stable=True)
+        raw = jnp.zeros_like(raw).at[order].set(jnp.sort(raw)[::-1])
+    return raw
 
 
 def gen_sample(dspec: DeviceTraceSpec, key: jax.Array) -> jax.Array:

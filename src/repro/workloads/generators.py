@@ -24,7 +24,12 @@ __all__ = [
     "flash_crowd",
     "diurnal",
     "multi_tenant",
+    "object_sizes",
+    "SIZE_DISTS",
 ]
+
+#: supported per-object size distributions (PR 7 byte-capacity tiers)
+SIZE_DISTS = ("lognormal", "pareto")
 
 
 def _rng(seed: int, sample: int) -> np.random.Generator:
@@ -153,6 +158,56 @@ def diurnal(
             if hi > lo:
                 out[s, lo:hi] = _sample_ranks(rng, n_objects, hi - lo, float(a))
     return out
+
+
+def object_sizes(
+    n_objects: int,
+    *,
+    dist: str = "lognormal",
+    corr: float = 0.0,
+    seed: int = 0,
+    median: int = 64,
+    sigma: float = 1.2,
+    shape: float = 1.5,
+    max_size: int = 1 << 20,
+) -> np.ndarray:
+    """Heavy-tailed per-object byte sizes, ``(n_objects,)`` int32 ``>= 1``.
+
+    The companion of the trace generators for byte-capacity tiers
+    (``PolicySpec.capacity_bytes``): index ``i`` is object id ``i``'s size,
+    the parallel axis of the fixed-shape int32 trace contract. Two classic
+    web-object families: ``lognormal`` (body) and ``pareto`` (tail), both
+    scaled so ``median`` is the distribution's median and clipped to
+    ``[1, max_size]``.
+
+    ``corr`` in [-1, 1] is the size–popularity correlation knob (ids are
+    popularity ranks): ``+1`` assigns the largest sizes to the hottest ids,
+    ``-1`` to the coldest, ``0`` independently; intermediate values mix a
+    rank key with uniform noise, so |corr| acts as a rank-correlation
+    strength. The drawn multiset of sizes is identical for every ``corr``,
+    only the assignment changes — byte-CHR comparisons across ``corr`` see
+    the same total catalogue bytes.
+    """
+    if dist not in SIZE_DISTS:
+        raise ValueError(f"unknown size dist {dist!r}; expected one of {SIZE_DISTS}")
+    if not -1.0 <= corr <= 1.0:
+        raise ValueError(f"corr must be in [-1, 1], got {corr}")
+    rng = np.random.default_rng(seed * 7919 + 611_953)
+    if dist == "lognormal":
+        raw = median * np.exp(sigma * rng.standard_normal(n_objects))
+    else:  # pareto: median * 2**(1/shape) quantile trick keeps median exact
+        raw = median * (1.0 + rng.pareto(shape, n_objects)) / (2.0 ** (1.0 / shape))
+    raw = np.clip(np.rint(raw), 1, max_size).astype(np.int32)
+    if corr:
+        ids = np.arange(n_objects, dtype=np.float64)
+        keyv = corr * ids / max(1, n_objects - 1) + (1.0 - abs(corr)) * rng.random(
+            n_objects
+        )
+        order = np.argsort(keyv, kind="stable")  # ascending key gets largest
+        out = np.empty_like(raw)
+        out[order] = np.sort(raw)[::-1]
+        raw = out
+    return raw
 
 
 def multi_tenant(

@@ -1,0 +1,366 @@
+"""Byte-capacity acceptance suite (PR 7).
+
+The contract under test, per docs/policies.md:
+
+* **capacity invariant** — with ``capacity_bytes`` set, the sum of resident
+  object sizes never exceeds the byte budget after *any* step, on every
+  policy kind and placement (the bounded multi-victim eviction loop's whole
+  point), and the jitted ``state["bytes"]`` ledger always equals the
+  recomputed sum over ``in_cache``;
+* **oracle parity** — multi-victim eviction counts, hit sequences and final
+  contents match the host-side reference policies exactly;
+* **unit-size degeneration** — ``sizes=1`` with ``capacity_bytes ==
+  capacity`` is bit-identical to object-count mode on all three tiers
+  (Python oracle, jitted scan, Pallas kernel), so byte mode is a strict
+  generalisation and the pre-PR outputs are reproduced exactly;
+* **gdsf** — the size-aware score (L + freq/size ratchet) agrees bit-for-bit
+  across the three tiers, sized and unsized.
+
+Size catalogues come from ``workloads.object_sizes`` (heavy-tailed, with the
+size-popularity correlation knob) so the multi-victim path is genuinely
+exercised: one hot large object displaces several small residents.
+"""
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # pragma: no cover - CI installs hypothesis; shim elsewhere
+    from _hypothesis_fallback import given, settings, strategies as st
+
+import jax
+import jax.numpy as jnp
+
+from repro import fleet, workloads
+from repro.core import jax_cache, policies, registry
+from repro.kernels.cache_sim import cache_sim as cs_mod
+from repro.kernels.cache_sim.ops import cache_sim
+from repro.telemetry import TelemetrySpec, oracle
+
+N, CAP, T = 64, 8, 500
+ALL_KINDS = registry.names(jax=True)
+_KNOBS = {"wlfu": {"window": 48}, "tinylfu": {"window": 120}, "plfua_dyn": {"refresh": 150}}
+
+
+def _sizes(seed=3, corr=0.5, dist="lognormal", n=N):
+    return workloads.object_sizes(n, dist=dist, corr=corr, seed=seed, median=8, max_size=64)
+
+
+def _spec(kind, cap_bytes=0, max_victims=0, n=N, cap=CAP):
+    return jax_cache.PolicySpec(
+        kind=kind, n_objects=n, capacity=cap, capacity_bytes=cap_bytes,
+        max_victims=max_victims, **_KNOBS.get(kind, {})
+    )
+
+
+def _pol(kind, sizes, cap_bytes=0, max_victims=0, n=N, cap=CAP):
+    return policies.make_policy(
+        kind, cap, n_objects=n, sizes=sizes, capacity_bytes=cap_bytes,
+        max_victims=max_victims, **_KNOBS.get(kind, {})
+    )
+
+
+def _trace(seed, t=T, n=N):
+    return workloads.make_traces("churn", n, n_samples=1, trace_len=t, seed=seed)[0]
+
+
+def _stepwise_bytes(spec, trace, sizes):
+    """Per-step (hits, bytes-ledger, recomputed-resident-sum) under jit."""
+    sizes_j = jnp.asarray(sizes, jnp.int32)
+
+    def f(s, x):
+        ns, hit = jax_cache.step(
+            spec, s, x, jnp.int32(spec.capacity), sizes=sizes_j,
+            cap_bytes=jnp.int32(spec.capacity_bytes),
+        )
+        resident = (ns["in_cache"] * sizes_j).sum().astype(jnp.int32)
+        return ns, (hit, ns["bytes"], resident)
+
+    state, (hits, ledger, resident) = jax.lax.scan(
+        f, jax_cache.init_state(spec), jnp.asarray(trace, jnp.int32)
+    )
+    return state, np.asarray(hits), np.asarray(ledger), np.asarray(resident)
+
+
+# ------------------------------------------------- per-step capacity invariant
+@settings(max_examples=8, deadline=None)
+@given(
+    kind=st.sampled_from(ALL_KINDS),
+    dist=st.sampled_from(workloads.SIZE_DISTS),
+    corr=st.sampled_from((-1.0, -0.5, 0.0, 0.5, 1.0)),
+    seed=st.integers(0, 10_000),
+)
+def test_resident_bytes_never_exceed_capacity(kind, dist, corr, seed):
+    sizes = _sizes(seed=seed % 7, corr=corr, dist=dist)
+    cap_b = int(sizes.sum() // 6)
+    spec = _spec(kind, cap_bytes=cap_b)
+    _, _, ledger, resident = _stepwise_bytes(spec, _trace(seed), sizes)
+    assert (ledger == resident).all(), f"{kind}: bytes ledger drifted"
+    assert (ledger <= cap_b).all(), (
+        f"{kind}: resident bytes exceed capacity_bytes "
+        f"(max {ledger.max()} > {cap_b})"
+    )
+
+
+@pytest.mark.parametrize("kind", ALL_KINDS)
+def test_byte_mode_matches_reference(kind):
+    """Hit sequence, final contents and the (multi-victim) eviction count all
+    equal the host-side byte-mode policy's."""
+    sizes = _sizes()
+    cap_b = int(sizes.sum() // 6)
+    trace = _trace(29)
+    spec = _spec(kind, cap_bytes=cap_b)
+    pol = _pol(kind, sizes, cap_bytes=cap_b)
+    hits, state, series = jax_cache.simulate(
+        spec, jnp.asarray(trace), TelemetrySpec(T), jnp.asarray(sizes)
+    )
+    ref_hits = np.array([pol.request(int(x)) for x in trace])
+    np.testing.assert_array_equal(np.asarray(hits), ref_hits, err_msg=kind)
+    np.testing.assert_array_equal(
+        np.asarray(state["in_cache"]).astype(bool),
+        [pol.contains(i) for i in range(N)], err_msg=kind,
+    )
+    assert pol.bytes <= cap_b
+    assert int(np.asarray(state["bytes"])) == pol.bytes
+    # eviction counter: the windowed series' total equals the reference's
+    from repro.telemetry.spec import METRIC_INDEX
+
+    assert int(np.asarray(series)[:, METRIC_INDEX["evictions"]].sum()) == pol.evictions
+
+
+def test_multi_victim_eviction_actually_fires():
+    """The catalogue + budget above must exercise >1 victim per step somewhere
+    (else the suite isn't testing the loop) — pinned with W=1 telemetry."""
+    sizes = _sizes()
+    cap_b = int(sizes.sum() // 6)
+    spec = _spec("lfu", cap_bytes=cap_b)
+    _, _, series = jax_cache.simulate(
+        spec, jnp.asarray(_trace(29)), TelemetrySpec(1), jnp.asarray(sizes)
+    )
+    from repro.telemetry.spec import METRIC_INDEX
+
+    per_step = np.asarray(series)[:, METRIC_INDEX["evictions"]]
+    assert per_step.max() >= 2, "no multi-victim eviction in the scenario"
+
+
+def test_max_victims_caps_the_loop():
+    """An object needing more evictions than ``max_victims`` allows is
+    abandoned after the bounded loop: exactly max_victims victims go, the
+    object still isn't inserted (the documented _room_for / fori_loop
+    contract), and the byte invariant holds throughout."""
+    sizes = np.full(N, 4, np.int32)
+    sizes[0] = 40  # needs 10 small victims; the loop only grants 2
+    pol = _pol("lfu", sizes, cap_bytes=48, max_victims=2)
+    for x in range(1, 13):
+        pol.request(x)  # 12 residents x 4B = 48B
+    assert pol.bytes == 48
+    ev0 = pol.evictions
+    assert not pol.request(0)
+    assert not pol.contains(0)  # 2 victims freed 8B, 40 needed -> no insert
+    assert pol.evictions == ev0 + 2
+    assert pol.bytes == 40
+    # an oversized object (> the whole budget) evicts nothing at all
+    sizes2 = np.full(N, 4, np.int32)
+    sizes2[0] = 100
+    pol2 = _pol("lfu", sizes2, cap_bytes=48, max_victims=2)
+    for x in range(1, 13):
+        pol2.request(x)
+    pol2.request(0)
+    assert pol2.evictions == 0 and pol2.bytes == 48
+    # jitted scan agrees on the bounded-abandon outcome
+    spec = _spec("lfu", cap_bytes=48, max_victims=2)
+    trace = np.array(list(range(1, 13)) + [0], np.int32)
+    state, hits, ledger, resident = _stepwise_bytes(spec, trace, sizes)
+    assert not bool(np.asarray(state["in_cache"])[0])
+    assert int(np.asarray(state["bytes"])) == 40
+    assert (ledger == resident).all() and (ledger <= 48).all()
+
+
+# ------------------------------------------------------ unit-size degeneration
+@pytest.mark.parametrize("kind", ALL_KINDS)
+def test_unit_sizes_degenerate_to_object_mode_jax(kind):
+    """sizes=1 + capacity_bytes == capacity reproduces object-count mode
+    bit-for-bit (hits AND full final state) — the PR's no-regression anchor."""
+    trace = _trace(31)
+    ones = jnp.ones(N, jnp.int32)
+    h0, s0 = jax_cache.simulate(_spec(kind), jnp.asarray(trace))
+    h1, s1 = jax_cache.simulate(
+        _spec(kind, cap_bytes=CAP), jnp.asarray(trace), None, ones
+    )
+    np.testing.assert_array_equal(np.asarray(h0), np.asarray(h1), err_msg=kind)
+    for k in s0:
+        np.testing.assert_array_equal(
+            np.asarray(s0[k]), np.asarray(s1[k]), err_msg=f"{kind}: state[{k}]"
+        )
+    # byte-mode extras beyond object mode: the ledger equals the count
+    np.testing.assert_array_equal(np.asarray(s1["bytes"]), np.asarray(s0["count"]))
+
+
+@pytest.mark.parametrize("kind", sorted(cs_mod.BYTE_CAPABLE_KINDS))
+def test_unit_sizes_degenerate_to_object_mode_kernel(kind):
+    traces = workloads.make_traces("churn", N, n_samples=2, trace_len=300, seed=7)
+    kw = dict(kind=kind, n_objects=N, capacity=CAP, interpret=True,
+              **_KNOBS.get(kind, {}))
+    out0 = cache_sim(traces, **kw)
+    out1 = cache_sim(traces, capacity_bytes=CAP, **kw)
+    for a, b in zip(out0, out1):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b), err_msg=kind)
+
+
+def test_kernel_byte_mode_matches_jax():
+    """Kernel vs jitted scan, sized byte mode, bitwise (hits + contents +
+    telemetry) — the cross-tier differential for the new eviction loop."""
+    sizes = _sizes()
+    cap_b = int(sizes.sum() // 6)
+    traces = workloads.make_traces("churn", N, n_samples=2, trace_len=300, seed=11)
+    for kind in sorted(cs_mod.BYTE_CAPABLE_KINDS):
+        kw = dict(kind=kind, n_objects=N, capacity=CAP, capacity_bytes=cap_b,
+                  interpret=True, **_KNOBS.get(kind, {}))
+        kh, kf, kc, kseries = cache_sim(
+            traces, sizes=jnp.asarray(sizes), telemetry_window=64, **kw
+        )
+        spec = _spec(kind, cap_bytes=cap_b)
+        for s in range(2):
+            hits, state, series = jax_cache.simulate(
+                spec, jnp.asarray(traces[s]), TelemetrySpec(64), jnp.asarray(sizes)
+            )
+            assert int(np.asarray(hits).sum()) == int(np.asarray(kh)[s].sum()), kind
+            np.testing.assert_array_equal(
+                np.asarray(kc)[s], np.asarray(state["in_cache"]), err_msg=kind
+            )
+            np.testing.assert_array_equal(
+                np.asarray(kseries)[s], np.asarray(series), err_msg=kind
+            )
+
+
+def test_kernel_byte_mode_validation():
+    traces = np.zeros((1, 8), np.int32)
+    for kind in sorted(set(cs_mod.KERNEL_KINDS) - set(cs_mod.BYTE_CAPABLE_KINDS)):
+        with pytest.raises(ValueError, match="byte"):
+            cache_sim(traces, kind=kind, n_objects=N, capacity=CAP,
+                      capacity_bytes=64, window=48, interpret=True)
+    with pytest.raises(ValueError, match="max_victims"):
+        cache_sim(traces, kind="lru", n_objects=N, capacity=CAP,
+                  max_victims=4, interpret=True)
+
+
+# ------------------------------------------------------------------------ gdsf
+def test_gdsf_three_tier_parity_sized():
+    """The acceptance criterion: gdsf (sized scores, object-count capacity and
+    byte capacity) bit-agrees across oracle, jitted scan and kernel."""
+    sizes = _sizes()
+    trace = _trace(41, t=300)
+    for cap_b in (0, int(sizes.sum() // 6)):
+        spec = _spec("gdsf", cap_bytes=cap_b)
+        pol = _pol("gdsf", sizes, cap_bytes=cap_b)
+        hits, state = jax_cache.simulate(
+            spec, jnp.asarray(trace), None, jnp.asarray(sizes)
+        )
+        ref_hits = np.array([pol.request(int(x)) for x in trace])
+        np.testing.assert_array_equal(np.asarray(hits), ref_hits)
+        np.testing.assert_array_equal(
+            np.asarray(state["in_cache"]).astype(bool),
+            [pol.contains(i) for i in range(N)],
+        )
+        kh, kf, kc = cache_sim(
+            trace[None, :], kind="gdsf", n_objects=N, capacity=CAP,
+            capacity_bytes=cap_b, sizes=jnp.asarray(sizes), interpret=True,
+        )
+        assert int(np.asarray(kh)[0]) == int(ref_hits.sum())  # per-sample count
+        np.testing.assert_array_equal(np.asarray(kc)[0], np.asarray(state["in_cache"]))
+
+
+def test_gdsf_prefers_small_objects_at_equal_frequency():
+    """The size-aware tie-break the policy exists for: with equal demand the
+    large object is the better eviction (higher bytes per saved miss)."""
+    sizes = np.ones(N, np.int32)
+    sizes[1] = 32
+    pol = _pol("gdsf", sizes, cap=2)
+    pol.request(1)  # large, freq 1
+    pol.request(2)  # small, freq 1
+    pol.request(3)  # full -> evicts 1 (same freq, lower freq/size score)
+    assert not pol.contains(1) and pol.contains(2) and pol.contains(3)
+
+
+def test_gdsf_registry_row():
+    assert "gdsf" in ALL_KINDS
+    assert registry.names(size_aware=True) == ("gdsf",)
+    assert registry.info("gdsf").size_aware
+    assert not registry.info("lfu").size_aware
+
+
+# ------------------------------------------------------------- fleet placement
+@pytest.mark.parametrize("pl", ("lce", "lcd", "admit"))
+def test_fleet_byte_mode_matches_oracle(pl):
+    """Byte-capacity tiers under cross-tier placement: both jitted engines
+    (lce -> level-major, others -> time-major placed) vs the reference."""
+    sizes = _sizes(n=96)
+    mean = int(sizes.mean())
+    topo = fleet.tree(
+        n_objects=96, widths=(2, 1), kinds=("lfu", "gdsf"),
+        capacities=(12, 48), capacity_bytes=(12 * mean, 48 * mean),
+        placements=("lce", pl),
+    )
+    trace = _trace(47, t=600, n=96)
+    assign = topo.assignment(trace)
+    out = fleet.simulate_fleet(topo, trace, assign, sizes=jnp.asarray(sizes))
+    ref = fleet.simulate_fleet_reference(topo, trace, assign, sizes=sizes)
+    for l in range(topo.n_levels):
+        np.testing.assert_array_equal(
+            np.asarray(out["hit"][l]), ref.level_hit[l], err_msg=f"{pl} level {l}"
+        )
+        cap_b = topo.levels[l][0].capacity_bytes
+        assert (np.asarray(out["tiers"][l]["bytes"]) <= cap_b).all()
+        assert [int(v) for v in np.asarray(out["tiers"][l]["evictions"])] == [
+            p.evictions for p in ref.levels[l]
+        ], f"{pl} level {l} evictions"
+
+
+def test_fleet_byte_report_conserves_bytes():
+    sizes = _sizes(n=96)
+    mean = int(sizes.mean())
+    topo = fleet.tree(
+        n_objects=96, widths=(2, 1), kinds="lru", capacities=(12, 48),
+        capacity_bytes=(12 * mean, 48 * mean),
+    )
+    trace = _trace(53, t=600, n=96)
+    out = fleet.simulate_fleet(
+        topo, trace, topo.assignment(trace), sizes=jnp.asarray(sizes)
+    )
+    rep = fleet.fleet_report(topo, out)
+    # every byte requested at the edge is served by some tier or the origin
+    assert rep.per_level[0].req_bytes == int(sizes[trace].sum())
+    assert (
+        sum(t.hit_bytes for t in rep.per_level) + rep.origin_egress_bytes
+        == rep.per_level[0].req_bytes
+    )
+    assert rep.origin_egress_gb == pytest.approx(rep.origin_egress_bytes / 1e9)
+    assert 0.0 <= rep.byte_chr <= 1.0
+
+
+# ----------------------------------------------------------- size catalogues
+def test_object_sizes_contract():
+    base = workloads.object_sizes(256, dist="lognormal", seed=5)
+    assert base.dtype == np.int32 and base.shape == (256,) and base.min() >= 1
+    # corr reassigns the same multiset — catalogue bytes invariant
+    for corr in (-1.0, -0.3, 0.7, 1.0):
+        s = workloads.object_sizes(256, dist="lognormal", seed=5, corr=corr)
+        np.testing.assert_array_equal(np.sort(s), np.sort(base))
+    # corr=+1 puts the largest sizes on the hottest (lowest) ids
+    s_pos = workloads.object_sizes(256, dist="lognormal", seed=5, corr=1.0)
+    s_neg = workloads.object_sizes(256, dist="lognormal", seed=5, corr=-1.0)
+    np.testing.assert_array_equal(s_pos, np.sort(base)[::-1])
+    np.testing.assert_array_equal(s_neg, np.sort(base))
+    with pytest.raises(ValueError):
+        workloads.object_sizes(16, dist="nope")
+    with pytest.raises(ValueError):
+        workloads.object_sizes(16, corr=1.5)
+    # device generator: same contract (distribution-matched, not bit-matched
+    # to the host stream — the trace-generator convention)
+    from repro.workloads.device import object_sizes_device
+
+    dev = np.asarray(object_sizes_device(256, dist="pareto", seed=9))
+    assert dev.dtype == np.int32 and dev.min() >= 1
+    dev_c = np.asarray(object_sizes_device(256, dist="pareto", seed=9, corr=1.0))
+    np.testing.assert_array_equal(np.sort(dev_c), np.sort(dev))
+    np.testing.assert_array_equal(dev_c, np.sort(dev)[::-1])

@@ -169,8 +169,10 @@ def test_fleet_report_rollup():
     assert rep.origin_requests == rep.n_requests - hits >= 0
     assert rep.mgmt_cpu_s > 0 and rep.mgmt_energy_j > rep.mgmt_cpu_s  # ~5.9 W/core
     rows = rep.rows()
-    # per-node + per-level aggregate + per-level placement row
-    assert len(rows) == topo.n_nodes + 2 * topo.n_levels
+    # per-node + per-level aggregate + per-level placement row + origin row
+    assert len(rows) == topo.n_nodes + 2 * topo.n_levels + 1
+    assert rows[-1]["tier"] == "origin"
+    assert rows[-1]["req_bytes"] == rep.origin_egress_bytes
     assert [t.tier for t in rep.per_level] == ["edge", "mid1", "root"]
     assert [t.tier for t in rep.per_level_placement] == [
         "edge:placement", "mid1:placement", "root:placement"

@@ -51,7 +51,7 @@ REPO_ROOT = str(pathlib.Path(__file__).resolve().parents[1])
 
 N, T = 96, 700
 PLACEMENTS = ("lce", "lcd", "prob(0.5)", "admit")
-FAST_KINDS = ("lru", "plfua", "tinylfu")
+FAST_KINDS = ("lru", "lfu", "plfua", "tinylfu")
 
 
 def _topo(kind, placements, *, caps=(4, 9, 23), widths=(4, 2, 1), n=N, **kw):
@@ -271,13 +271,57 @@ def test_lcd_occupancy_subset_of_lce(kind, scenario, router, seed):
 
 # ------------------------------------------------------------ oracle parity
 @pytest.mark.parametrize("pl", ("lcd", "prob(0.5)", "admit"))
-@pytest.mark.parametrize("kind", FAST_KINDS)
+@pytest.mark.parametrize("kind", FAST_KINDS + ("gdsf",))
 def test_placed_engine_matches_oracle(pl, kind):
     """Fast-lane jit-vs-oracle cells (the exhaustive placement x kind x
     scenario matrix is slow-marked in tests/test_differential.py)."""
     topo = _topo(kind, pl)
     trace = workloads.make_traces("churn", N, 1, T, seed=17)[0]
     _assert_oracle_parity(topo, trace, topo.assignment(trace))
+
+
+def test_lfu_parks_frequency_on_gated_miss():
+    """PR 7 satellite: in-memory LFU follows the PLFU parked-frequency
+    convention — a placement-gated (unfilled) miss still accumulates the
+    object's counter, so a later filled miss inserts with the parked demand
+    (the 'in-memory LFU excepted' carve-out from PR 5 is gone)."""
+    from repro.core import policies
+
+    pol = policies.LFUCache(2)
+    pol.request(1, fill=True)
+    pol.request(1, fill=True)  # 1: freq 2
+    pol.request(2, fill=True)  # 2: freq 1
+    for _ in range(3):
+        assert not pol.request(7, fill=False)  # parked demand, no insert
+    assert not pol.contains(7)
+    assert pol.request(7, fill=False) is False
+    pol.request(7, fill=True)  # inserts at freq 5 (4 parked + this one)
+    assert pol.contains(7) and pol.contains(1) and not pol.contains(2)
+    # eviction pressure respects the promoted frequency: 7 outlives a newcomer
+    pol.request(3, fill=True)  # evicts 1 (freq 2) ... not 7 (freq 5)
+    assert pol.contains(7) and pol.contains(3) and not pol.contains(1)
+    # ... and the jitted step agrees on the same gated sequence
+    import jax.numpy as jnp
+
+    spec = jax_cache.PolicySpec(kind="lfu", n_objects=8, capacity=2)
+    seq = [(1, True), (1, True), (2, True), (7, False), (7, False),
+           (7, False), (7, False), (7, True), (3, True)]
+    trace = jnp.asarray([x for x, _ in seq], jnp.int32)
+    fill = jnp.asarray([f for _, f in seq])
+    import jax
+
+    def step_fn(s, xf):
+        x, f = xf
+        ns, hit = jax_cache.step(spec, s, x, spec.capacity, fill=f)
+        return ns, hit
+
+    state, hits = jax.lax.scan(
+        step_fn, jax_cache.init_state(spec), (trace, fill)
+    )
+    in_cache = np.asarray(state["in_cache"]).astype(bool)
+    np.testing.assert_array_equal(
+        in_cache, [pol.contains(i) for i in range(8)]
+    )
 
 
 def test_mixed_placements_and_dyn_refresh_match_oracle():
@@ -365,7 +409,8 @@ def test_placement_report_rows_and_lcd_energy_win():
         ]
         assert all(r["policy"] == pl for r in p_rows)
         assert rep.placement_energy_j > 0
-        assert len(rows) == 11 + 2 * 3  # nodes + (aggregate + placement)/level
+        # nodes + (aggregate + placement)/level + the origin summary row
+        assert len(rows) == 11 + 2 * 3 + 1
     assert reps["lcd"].mgmt_energy_j < reps["lce"].mgmt_energy_j
     assert abs(reps["lcd"].total_chr - reps["lce"].total_chr) <= 0.02
 

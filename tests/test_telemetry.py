@@ -252,6 +252,7 @@ def test_report_row_schema_pinned():
     test and TIER_ROW_FIELDS deliberately if the schema must change."""
     expected = (
         "tier", "policy", "capacity", "requests", "hits", "chr",
+        "req_bytes", "hit_bytes", "byte_chr",
         "evictions", "mgmt_ops", "mgmt_cpu_s", "mgmt_energy_j",
     )
     assert TIER_ROW_FIELDS == expected
@@ -259,8 +260,19 @@ def test_report_row_schema_pinned():
     trace = _trace("stationary", seed=2, t=400)
     out = fleet.simulate_fleet(topo, trace, topo.assignment(trace))
     rep = fleet.fleet_report(topo, out)
-    for row in rep.rows():
+    rows = rep.rows()
+    # the final row is the origin summary: pinned schema + the egress column
+    assert rows[-1]["tier"] == "origin"
+    assert tuple(rows[-1].keys()) == expected + ("origin_egress_gb",)
+    for row in rows[:-1]:
         assert tuple(row.keys()) == expected, row["tier"]
+    # unit fallback: byte columns degenerate to the request/hit counts, so the
+    # origin egress equals the origin request count (1 "byte" per object)
+    for row in rows[:-1]:
+        assert row["req_bytes"] == row["requests"]
+        assert row["hit_bytes"] == row["hits"]
+        assert row["byte_chr"] == row["chr"]
+    assert rows[-1]["req_bytes"] == rep.origin_requests
 
 
 def test_fleet_report_window_rows(tmp_path):
@@ -292,6 +304,37 @@ def test_fleet_report_window_rows(tmp_path):
     # a report built without telemetry refuses window_rows loudly
     with pytest.raises(ValueError):
         fleet.fleet_report(topo, out).window_rows()
+
+
+def test_write_csv_mixed_tag_rows(tmp_path):
+    """Rows with heterogeneous key sets (the PR 7 exporter fix): the header
+    must be the first-seen-ordered union across ALL rows, absent cells write
+    empty — rows[0].keys() used to drop (and DictWriter then choked on) any
+    key introduced by a later row."""
+    rows = [
+        {"tier": "edge[0]", "requests": 10, "hits": 4},
+        {"tier": "edge", "requests": 10, "hits": 4, "req_bytes": 640},
+        {"tier": "origin", "requests": 6, "origin_egress_gb": 1.5e-6},
+    ]
+    path = tmp_path / "mixed.csv"
+    export.write_csv(path, rows)
+    back = export.read_csv(path)
+    assert list(back[0].keys()) == [
+        "tier", "requests", "hits", "req_bytes", "origin_egress_gb"
+    ]
+    assert back[0]["req_bytes"] == "" and back[0]["origin_egress_gb"] == ""
+    assert back[1]["req_bytes"] == "640"
+    assert back[2]["hits"] == "" and back[2]["origin_egress_gb"] == "1.5e-06"
+    # fleet rows (pinned schema + the origin extra) export through the same
+    # path — the real mixed-tag producer
+    topo = _topo3("plfu")
+    trace = _trace("stationary", seed=2, t=400)
+    out = fleet.simulate_fleet(topo, trace, topo.assignment(trace))
+    fpath = tmp_path / "fleet.csv"
+    export.write_csv(fpath, fleet.fleet_report(topo, out).rows())
+    frows = export.read_csv(fpath)
+    assert "origin_egress_gb" in frows[0]
+    assert frows[-1]["origin_egress_gb"] != ""
 
 
 def test_export_series_rows_shape_checks():
