@@ -336,6 +336,62 @@ def fig10_chr_over_time(full: bool = False):
     return rows
 
 
+def fig11_tenant_chr_over_time(full: bool = False):
+    """Beyond-paper figure (PR 8): *per-tenant* CHR trajectory from the
+    group-segmented telemetry on the ``multi_tenant`` workload. fig10 shows
+    when the fleet loses CHR; this shows *who* — the dominant tenant's head
+    stays resident while the small tenants' CHR rides the eviction pressure.
+    Writes the full per-(sample, window, tenant) series to
+    ``telemetry_fig11.jsonl`` via repro.telemetry.export."""
+    from benchmarks.cdn_bench import policy_window
+    from repro import telemetry, workloads
+    from repro.core import jax_cache, registry
+    from repro.telemetry import export
+
+    n = 10_000 if full else 2_000
+    cap = n * 3 // 100
+    samples, tlen = (8, 100_000) if full else (2, 12_000)
+    n_tenants = 4
+    tel = telemetry.TelemetrySpec(window=tlen // 16, n_groups=n_tenants)
+    groups = workloads.tenant_groups(n, n_tenants)
+    hit_col = telemetry.METRIC_INDEX["hits"]
+    req_col = telemetry.METRIC_INDEX["requests"]
+    traces = workloads.make_traces(
+        "multi_tenant", n, n_samples=samples, trace_len=tlen, seed=11,
+        n_tenants=n_tenants,
+    )
+    rows, jsonl_rows = [], []
+    for kind in registry.names(jax=True, grouped_telemetry=True):
+        spec = jax_cache.PolicySpec(
+            kind=kind, n_objects=n, capacity=cap, window=policy_window(kind)
+        )
+        hits, series = jax_cache.simulate_batch(spec, traces, tel, None, groups)
+        agg = np.asarray(series).sum(axis=0)  # (n_windows, n_tenants, N_METRICS)
+        jsonl_rows.extend(
+            export.series_rows(
+                np.asarray(series), tel.window, grouped=True,
+                scenario="multi_tenant", kind=kind,
+            )
+        )
+        per_tenant = " ".join(
+            f"t{g}_chr_last={agg[-1, g, hit_col] / max(1, agg[-1, g, req_col]):.4f}"
+            for g in range(n_tenants)
+        )
+        rows.append(
+            (
+                f"fig11/multi_tenant/{kind}",
+                0.0,
+                f"{per_tenant} windows={agg.shape[0]} "
+                f"CHR={float(np.asarray(hits).mean()):.4f}",
+            )
+        )
+    export.write_jsonl("telemetry_fig11.jsonl", jsonl_rows)
+    rows.append(
+        ("fig11/export", 0.0, f"rows={len(jsonl_rows)} -> telemetry_fig11.jsonl")
+    )
+    return rows
+
+
 ALL = {
     "fig2": fig2_red_columns,
     "fig3": fig3_chr_grid,
@@ -346,5 +402,6 @@ ALL = {
     "fig8": fig8_hierarchy,
     "fig9": fig9_dynamic_admission,
     "fig10": fig10_chr_over_time,
+    "fig11": fig11_tenant_chr_over_time,
     "metadata": metadata_table,
 }

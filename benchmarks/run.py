@@ -28,11 +28,12 @@ def main() -> None:
     ap.add_argument(
         "--only",
         default=None,
-        help="comma-separated group list (fig2..fig10, metadata, cache_py, "
+        help="comma-separated group list (fig2..fig11, metadata, cache_py, "
         "cache_jax, cache_pallas, kernel_vs_jax, cdn, cdn_router, cdn_topo, "
         "fleet_policies, fleet_depth, fleet_placement, fleet_scale, "
         "cache_sizes, fleet_bytes, serving_energy, roofline, cache_roofline, "
-        "telemetry_timing, telemetry_overhead) — see docs/benchmarks.md",
+        "telemetry_timing, telemetry_overhead, telemetry_tenants) — see "
+        "docs/benchmarks.md",
     )
     ap.add_argument(
         "--record",

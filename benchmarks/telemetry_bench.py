@@ -1,4 +1,4 @@
-"""Telemetry benchmarks (PR 6): the measured compile/execute-split rows.
+"""Telemetry benchmarks (PR 6/PR 8): the measured compile/execute-split rows.
 
 Groups:
   * ``telemetry_timing``   — ``telemetry.measure`` on the jitted single-cache
@@ -10,14 +10,22 @@ Groups:
     counters on vs off. The disabled path is bit-identical by construction
     (tests/test_telemetry.py pins it); this group pins the *cost* of the
     enabled path and fails the run if it ever exceeds 2x.
+  * ``telemetry_tenants``  — PR 8 group-segmented rows: a 3-tier fleet on the
+    ``multi_tenant`` workload with ``TelemetrySpec(window, n_groups)`` and the
+    matching ``tenant_groups`` catalogue. Emits one row per (policy, tenant)
+    with per-tenant CHR / byte-CHR / p50 / p99 / eviction-pressure (the
+    ``FleetReport.tenant_rows`` SLO schema), a grouped-vs-off execute-time
+    ratio row per policy, and writes the self-contained operator dashboard
+    to ``telemetry_dashboard.html`` (the CI bench-smoke artifact).
 """
 from __future__ import annotations
 
 import numpy as np
 
 from benchmarks.cdn_bench import policy_window
-from repro import telemetry, workloads
+from repro import fleet, telemetry, workloads
 from repro.core import jax_cache, registry
+from repro.telemetry import dashboard
 
 
 def _spec(kind: str, n: int, cap: int) -> "jax_cache.PolicySpec":
@@ -78,7 +86,75 @@ def telemetry_overhead(full: bool = False):
     return rows
 
 
+def telemetry_tenants(full: bool = False):
+    """Per-tenant SLO rows + grouped-telemetry overhead on a 3-tier fleet."""
+    n, edge_cap = (10_000, 300) if full else (2_000, 60)
+    samples, tlen = (8, 100_000) if full else (2, 10_000)
+    n_tenants = 4
+    tel = telemetry.TelemetrySpec(window=tlen // 16, n_groups=n_tenants)
+    traces = workloads.make_traces(
+        "multi_tenant", n, n_samples=samples, trace_len=tlen, seed=8,
+        n_tenants=n_tenants,
+    )
+    groups = workloads.tenant_groups(n, n_tenants)
+    sizes = workloads.object_sizes(n, seed=8)
+    rows = []
+    dashboard_written = False
+    for kind in ("lru", "plfua_dyn", "gdsf"):
+        topo = fleet.tree(
+            n_objects=n, widths=(8, 2, 1), kinds=kind,
+            capacities=(edge_cap, 4 * edge_cap, 8 * edge_cap),
+            window=policy_window(kind),
+        )
+        assign = topo.assignment(traces)
+        off = telemetry.measure(
+            fleet.simulate_fleet_batch, topo, traces, assign,
+            static=(0, 3), steps=traces.size,
+        )
+        on = telemetry.measure(
+            fleet.simulate_fleet_batch, topo, traces, assign, tel,
+            sizes, groups, static=(0, 3), steps=traces.size,
+        )
+        out = fleet.simulate_fleet_batch(topo, traces, assign, tel, sizes, groups)
+        rep = fleet.fleet_report(topo, out, telemetry=tel)
+        latency = telemetry.LatencyModel.default(len(topo.levels))
+        for t in rep.tenant_rows(latency):
+            rows.append(
+                (
+                    f"telemetry_tenants/{kind}/tenant{t['tenant']}",
+                    0.0,
+                    f"chr={t['chr']:.4f} byte_chr={t['byte_chr']:.4f} "
+                    f"p50_us={t['p50_us']:.1f} p99_us={t['p99_us']:.1f} "
+                    f"eviction_pressure={t['eviction_pressure']} "
+                    f"hot_share={t['hot_share']:.4f} requests={t['requests']}",
+                )
+            )
+        ratio = on.execute_s / off.execute_s
+        rows.append(
+            (
+                f"telemetry_tenants/{kind}/overhead",
+                on.us_per_step,
+                f"grouped_overhead={ratio:.3f}x on_steps_per_s={on.steps_per_s:.0f} "
+                f"off_steps_per_s={off.steps_per_s:.0f} tenants={n_tenants}",
+            )
+        )
+        if not dashboard_written:
+            path = dashboard.write_dashboard(
+                "telemetry_dashboard.html",
+                rep.window_rows(),
+                latency=latency,
+                tenant_rows=rep.tenant_rows(latency),
+                title=f"Cache fleet — tenant dashboard ({kind}, multi_tenant)",
+            )
+            rows.append(
+                ("telemetry_tenants/dashboard", 0.0, f"kind={kind} -> {path}")
+            )
+            dashboard_written = True
+    return rows
+
+
 ALL = {
     "telemetry_timing": telemetry_timing,
     "telemetry_overhead": telemetry_overhead,
+    "telemetry_tenants": telemetry_tenants,
 }

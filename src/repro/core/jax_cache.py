@@ -460,7 +460,7 @@ def refresh_hot(spec: PolicySpec, state: dict[str, jax.Array]) -> dict[str, jax.
     return {**state, "hot": hot, "sketch": sketch.rows_halve(state["sketch"])}
 
 
-def _step_events(spec: PolicySpec, s, ns, hit, x, a, sizes=None):
+def _step_events(spec: PolicySpec, s, ns, hit, x, a, sizes=None, og=None):
     """Derive the telemetry events of one applied step from the state
     transition: a fill is a miss whose object ended up cached; the eviction
     *count* falls out of the occupancy delta (int32 — a byte-capacity step
@@ -468,10 +468,18 @@ def _step_events(spec: PolicySpec, s, ns, hit, x, a, sizes=None):
     equals the old boolean event); a tinylfu aging event is the ``seen``
     reset (the counter just incremented, so 0 means the window closed). All
     masked by ``a`` so frozen (inactive / padded) steps emit nothing. With
-    ``sizes`` the request's bytes are bucketed into hit/miss byte events."""
+    ``sizes`` the request's bytes are bucketed into hit/miss byte events.
+    With ``og`` (the (n_objects, n_groups) int32 group one-hot) the step
+    also emits the per-group victim counts and per-group occupancy the
+    grouped series needs — the membership diff ``in_cache & ~in_cache'``
+    is exactly the victims, so its group-sum matches ``evict``."""
     fill = a & (~hit) & ns["in_cache"][x]
     evict = (s["count"] - ns["count"]) + fill.astype(jnp.int32)
     ev = {"fill": fill, "evict": evict, "count": ns["count"]}
+    if og is not None:
+        vmask = s["in_cache"] & ~ns["in_cache"]
+        ev["evict_g"] = vmask.astype(jnp.int32) @ og
+        ev["count_g"] = ns["in_cache"].astype(jnp.int32) @ og
     if sizes is not None:
         sz = sizes[x]
         ev["hit_bytes"] = jnp.where(a & hit, sz, 0)
@@ -483,7 +491,7 @@ def _step_events(spec: PolicySpec, s, ns, hit, x, a, sizes=None):
 
 def _chunked_scan(
     spec: PolicySpec, state, trace, active=None, cap=None, instrument=False,
-    sizes=None, cap_bytes=None,
+    sizes=None, cap_bytes=None, og=None,
 ):
     """plfua_dyn driver: scan refresh-length chunks of ``step`` with the hot
     mask frozen, then :func:`refresh_hot` at every chunk boundary.
@@ -518,7 +526,7 @@ def _chunked_scan(
         ns, hit = step(spec, s, x, cap, sizes=sizes, cap_bytes=cap_bytes)
         ns = jax.tree_util.tree_map(lambda o, n_: jnp.where(a, n_, o), s, ns)
         if instrument:
-            return ns, (hit & a, _step_events(spec, s, ns, hit, x, a, sizes))
+            return ns, (hit & a, _step_events(spec, s, ns, hit, x, a, sizes, og))
         return ns, hit & a
 
     def chunk(s, inp):
@@ -526,12 +534,16 @@ def _chunked_scan(
         s, out = jax.lax.scan(f, s, (xs, acts))
         refreshed = refresh_hot(spec, s)
         if instrument:
-            churn = jnp.where(
-                fire_c, (s["hot"] != refreshed["hot"]).sum().astype(jnp.int32), 0
-            )
+            diff = s["hot"] != refreshed["hot"]
+            churn = jnp.where(fire_c, diff.sum().astype(jnp.int32), 0)
+            chunk_ev = {"fired": fire_c, "churn": churn}
+            if og is not None:
+                chunk_ev["churn_g"] = jnp.where(
+                    fire_c, diff.astype(jnp.int32) @ og, 0
+                )
         s = jax.tree_util.tree_map(lambda o, r: jnp.where(fire_c, r, o), s, refreshed)
         if instrument:
-            return s, (out, {"fired": fire_c, "churn": churn})
+            return s, (out, chunk_ev)
         return s, out
 
     state, out = jax.lax.scan(
@@ -542,25 +554,30 @@ def _chunked_scan(
     if not instrument:
         return state, out.reshape(-1)[:T]
     (hits, ev), chunk_ev = out
-    unpad = lambda arr: arr.reshape(-1)[:T]
+    # per-step events unpad to (T, ...); grouped events keep their trailing
+    # group axis through the chunk flattening
+    unpad = lambda arr: arr.reshape((-1,) + arr.shape[2:])[:T]
     events = {k: unpad(v) for k, v in ev.items()}
-    events.update(chunk_ev)  # (n_chunks,) fired/churn stay chunk-shaped
+    events.update(chunk_ev)  # (n_chunks, ...) fired/churn stay chunk-shaped
     return state, unpad(hits), events
 
 
 def instrumented_scan(
-    spec: PolicySpec, state, trace, active=None, cap=None, sizes=None, cap_bytes=None
+    spec: PolicySpec, state, trace, active=None, cap=None, sizes=None,
+    cap_bytes=None, og=None,
 ):
     """The telemetry-enabled twin of the plain ``lax.scan`` over ``step`` /
     the masked fleet scan: identical state trajectory and hit series, plus
     the per-step event series telemetry buckets (fill/evict/count, tinylfu
-    aging, plfua_dyn chunk refresh/churn, hit/miss bytes when sized). Only
-    compiled when a :class:`repro.telemetry.TelemetrySpec` is passed, so the
-    disabled path stays byte-for-byte the uninstrumented program."""
+    aging, plfua_dyn chunk refresh/churn, hit/miss bytes when sized; with
+    ``og`` — the (n_objects, n_groups) group one-hot — also per-group
+    victim counts / occupancy / churn). Only compiled when a
+    :class:`repro.telemetry.TelemetrySpec` is passed, so the disabled path
+    stays byte-for-byte the uninstrumented program."""
     if spec.kind == "plfua_dyn":
         return _chunked_scan(
             spec, state, trace, active, cap, instrument=True,
-            sizes=sizes, cap_bytes=cap_bytes,
+            sizes=sizes, cap_bytes=cap_bytes, og=og,
         )
     if active is None:
         active = jnp.ones(trace.shape, jnp.bool_)
@@ -569,18 +586,44 @@ def instrumented_scan(
         x, a = xa
         ns, hit = step(spec, s, x, cap, sizes=sizes, cap_bytes=cap_bytes)
         ns = jax.tree_util.tree_map(lambda o, n_: jnp.where(a, n_, o), s, ns)
-        return ns, (hit & a, _step_events(spec, s, ns, hit, x, a, sizes))
+        return ns, (hit & a, _step_events(spec, s, ns, hit, x, a, sizes, og))
 
     state, (hits, events) = jax.lax.scan(f, state, (trace.astype(jnp.int32), active))
     return state, hits, events
 
 
 def telemetry_series(
-    spec: PolicySpec, telemetry, trace_len: int, hits, events, active=None
+    spec: PolicySpec, telemetry, trace_len: int, hits, events, active=None,
+    groups_t=None,
 ):
     """Bucket one node's event series into [..., n_windows, N_METRICS]
-    (int32) under jit. ``active=None`` is the flat-cache convention (every
-    position is a request and every miss a fill offer)."""
+    (int32) under jit — or, when ``telemetry.n_groups > 0``, into the
+    group-segmented [..., n_windows, n_groups, N_METRICS] layout
+    (``groups_t`` = per-trace-position group ids required). ``active=None``
+    is the flat-cache convention (every position is a request and every
+    miss a fill offer)."""
+    chunk_len = spec.effective_refresh if spec.kind == "plfua_dyn" else None
+    if telemetry.n_groups:
+        if groups_t is None:
+            raise ValueError("telemetry.n_groups > 0 requires a groups catalogue")
+        return telemetry_spec.grouped_series_from_run(
+            telemetry.window,
+            trace_len,
+            telemetry.n_groups,
+            groups_t,
+            hits=hits,
+            active=active,
+            fills=events["fill"],
+            evictions_g=events["evict_g"],
+            occupancy_g=events["count_g"],
+            aging=events.get("aging"),
+            fired=events.get("fired"),
+            churn_g=events.get("churn_g"),
+            hit_bytes=events.get("hit_bytes"),
+            miss_bytes=events.get("miss_bytes"),
+            chunk_len=chunk_len,
+            xp=jnp,
+        )
     return telemetry_spec.series_from_run(
         telemetry.window,
         trace_len,
@@ -594,19 +637,36 @@ def telemetry_series(
         churn=events.get("churn"),
         hit_bytes=events.get("hit_bytes"),
         miss_bytes=events.get("miss_bytes"),
-        chunk_len=spec.effective_refresh if spec.kind == "plfua_dyn" else None,
+        chunk_len=chunk_len,
         xp=jnp,
     )
 
 
+def group_scatter_arrays(telemetry, groups, trace):
+    """(one-hot (N, G), per-position group ids (T,)) for a grouped run, or
+    (None, None) when grouping is off. Raises if ``n_groups > 0`` but no
+    catalogue was passed — a silent all-zero series would be worse."""
+    if telemetry is None or not telemetry.n_groups:
+        return None, None
+    if groups is None:
+        raise ValueError("telemetry.n_groups > 0 requires a groups catalogue")
+    g = jnp.asarray(groups, jnp.int32)
+    og = telemetry_spec.group_onehot(g, telemetry.n_groups, jnp)
+    return og, g[trace.astype(jnp.int32)]
+
+
 @functools.partial(jax.jit, static_argnums=(0, 2))
-def simulate(spec: PolicySpec, trace: jax.Array, telemetry=None, sizes=None):
+def simulate(
+    spec: PolicySpec, trace: jax.Array, telemetry=None, sizes=None, groups=None
+):
     """Run a full trace. Returns (hits: bool[T], final_state), or with a
     static :class:`repro.telemetry.TelemetrySpec` third argument
     (hits, final_state, series[n_windows, N_METRICS]) — the windowed
     telemetry accumulated inside the scan (docs/observability.md).
     ``sizes`` is the per-object byte-size array (``None`` = unit sizes),
-    consulted when ``spec.size_aware``."""
+    consulted when ``spec.size_aware``; ``groups`` the per-object int32
+    group catalogue consulted when ``telemetry.n_groups > 0`` (the series
+    gains a group axis: [n_windows, n_groups, N_METRICS])."""
     state = init_state(spec)
     if sizes is not None:
         sizes = jnp.asarray(sizes, jnp.int32)
@@ -618,20 +678,26 @@ def simulate(spec: PolicySpec, trace: jax.Array, telemetry=None, sizes=None):
                 lambda s, x: step(spec, s, x, sizes=sizes), state, trace
             )
         return hits, state
-    state, hits, events = instrumented_scan(spec, state, trace, sizes=sizes)
-    series = telemetry_series(spec, telemetry, trace.shape[0], hits, events)
+    og, groups_t = group_scatter_arrays(telemetry, groups, trace)
+    state, hits, events = instrumented_scan(spec, state, trace, sizes=sizes, og=og)
+    series = telemetry_series(
+        spec, telemetry, trace.shape[0], hits, events, groups_t=groups_t
+    )
     return hits, state, series
 
 
 @functools.partial(jax.jit, static_argnums=(0, 2))
-def simulate_batch(spec: PolicySpec, traces: jax.Array, telemetry=None, sizes=None):
+def simulate_batch(
+    spec: PolicySpec, traces: jax.Array, telemetry=None, sizes=None, groups=None
+):
     """vmap over samples: traces (S, T) -> hits (S, T). The paper's 12-sample
     replication in one device launch. With ``telemetry`` set, returns
-    (hits (S, T), series (S, n_windows, N_METRICS)). ``sizes`` is shared
-    across samples (one object universe)."""
+    (hits (S, T), series (S, n_windows, N_METRICS)) — plus a group axis
+    before N_METRICS when ``telemetry.n_groups > 0``. ``sizes``/``groups``
+    are shared across samples (one object universe)."""
     if telemetry is None:
         return jax.vmap(lambda tr: simulate(spec, tr, None, sizes)[0])(traces)
-    out = jax.vmap(lambda tr: simulate(spec, tr, telemetry, sizes))(traces)
+    out = jax.vmap(lambda tr: simulate(spec, tr, telemetry, sizes, groups))(traces)
     return out[0], out[2]
 
 

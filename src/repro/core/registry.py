@@ -51,6 +51,12 @@ class PolicyInfo:
     #: PR 6) on the jax tier, both fleet engines and the Pallas kernel —
     #: asserted against the host-side oracle in tests/test_telemetry.py
     telemetry: bool = True
+    #: kind supports the group-segmented telemetry axis (PR 8:
+    #: ``TelemetrySpec(window, n_groups)`` + an id -> group catalogue) on
+    #: every tier that implements it — asserted against the grouped oracle in
+    #: tests/test_telemetry_groups.py. Implied-by-construction for telemetry
+    #: kinds today; the flag exists so a future kind can opt out explicitly.
+    grouped_telemetry: bool = True
     #: eviction *score* consults the per-object size (GDSF family). Every
     #: kind runs under byte-capacity tiers (``PolicySpec.capacity_bytes``,
     #: the bounded multi-victim eviction loop in jax_cache.step); this flag
@@ -93,6 +99,7 @@ def names(
     pallas: bool | None = None,
     sketch: bool | None = None,
     telemetry: bool | None = None,
+    grouped_telemetry: bool | None = None,
     size_aware: bool | None = None,
 ) -> tuple[str, ...]:
     """Canonical-order names, filtered by tier support (None = don't care)."""
@@ -107,6 +114,8 @@ def names(
         if sketch is not None and p.sketch != sketch:
             continue
         if telemetry is not None and p.telemetry != telemetry:
+            continue
+        if grouped_telemetry is not None and p.grouped_telemetry != grouped_telemetry:
             continue
         if size_aware is not None and p.size_aware != size_aware:
             continue

@@ -41,6 +41,8 @@ from repro.fleet.reference import (
     simulate_fleet_reference,
 )
 from repro.fleet.report import (
+    TENANT_ROW_FIELDS,
+    TIER_ROW_FIELDS,
     FleetReport,
     TierReport,
     fleet_report,
@@ -70,6 +72,8 @@ __all__ = [
     "build_policy",
     "FleetReport",
     "TierReport",
+    "TIER_ROW_FIELDS",
+    "TENANT_ROW_FIELDS",
     "fleet_report",
     "mgmt_ops",
     "masked_scan",

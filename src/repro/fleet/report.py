@@ -44,6 +44,7 @@ __all__ = [
     "TierReport",
     "FleetReport",
     "TIER_ROW_FIELDS",
+    "TENANT_ROW_FIELDS",
     "aggregate_tiers",
     "mgmt_ops",
     "placement_ops",
@@ -70,6 +71,28 @@ TIER_ROW_FIELDS = (
     "mgmt_ops",
     "mgmt_cpu_s",
     "mgmt_energy_j",
+)
+
+#: the pinned FleetReport.tenant_rows() schema (PR 8) — one row per tenant
+#: group, derived from the group-segmented windowed series. Counts are
+#: totals over the report's scope; ``chr``/``byte_chr``/``hot_share`` are
+#: ratios in [0, 1]; the latency columns are µs under the report's
+#: LatencyModel (p50/p99 are exact discrete inverse-CDF reads over the
+#: per-level serving histogram, not sampled estimates).
+TENANT_ROW_FIELDS = (
+    "tenant",
+    "requests",
+    "hits",
+    "chr",
+    "req_bytes",
+    "hit_bytes",
+    "byte_chr",
+    "egress_bytes",
+    "p50_us",
+    "p99_us",
+    "mean_us",
+    "eviction_pressure",
+    "hot_share",
 )
 
 #: dict/heap touches charged per processed request, by policy kind. Sketch
@@ -279,9 +302,16 @@ class FleetReport:
     per_level_placement: list[TierReport] = dataclasses.field(default_factory=list)
     #: per-level windowed telemetry, batch-summed to ``(n_nodes, n_windows,
     #: N_METRICS)`` per level — present when fleet_report was handed the run's
-    #: TelemetrySpec (see window_rows)
+    #: TelemetrySpec (see window_rows). Group-segmented runs (PR 8) keep the
+    #: group axis: ``(n_nodes, n_windows, n_groups, N_METRICS)``.
     per_level_series: list[np.ndarray] | None = None
     telemetry_window: int | None = None
+    #: tenant groups on the run's TelemetrySpec (0 = ungrouped)
+    n_groups: int = 0
+    #: per-level cross-tenant eviction pressure, batch-summed to
+    #: ``(n_nodes, n_windows, n_groups)`` — evictions of a group's objects
+    #: triggered by *another* group's request (grouped runs only)
+    per_level_pressure: list[np.ndarray] | None = None
 
     @property
     def level_chr(self) -> list[float]:
@@ -383,10 +413,91 @@ class FleetReport:
                     series,
                     self.telemetry_window,
                     labels=[t.tier for t in nodes],
+                    grouped=self.n_groups > 0,
                     level=agg.tier,
                     policy=agg.policy,
                 )
             )
+        return rows
+
+    def tenant_rows(self, latency=None) -> list[dict]:
+        """Per-tenant SLO rows (the :data:`TENANT_ROW_FIELDS` schema) from a
+        group-segmented run.
+
+        Every request enters at the edge, so a tenant's request/byte totals
+        are the edge level's grouped counters; its hits are summed over all
+        serving levels and the remainder went to origin. Those per-level
+        serve counts *are* the latency histogram under ``latency`` (a
+        :class:`repro.telemetry.LatencyModel`; default: the deterministic
+        ladder ``LatencyModel.default(n_levels)``), so p50/p99/mean are
+        exact. ``eviction_pressure`` totals the cross-tenant evictions the
+        run recorded against each tenant; ``hot_share`` is the tenant's
+        share of fleet-wide cached objects in the final window.
+        """
+        if self.per_level_series is None or not self.n_groups:
+            raise ValueError(
+                "tenant_rows needs group-segmented telemetry; run the fleet "
+                "with TelemetrySpec(window, n_groups) + a groups catalogue "
+                "and pass the spec to fleet_report(..., telemetry=...)"
+            )
+        from repro.telemetry import LatencyModel
+        from repro.telemetry.spec import METRIC_INDEX
+
+        L = len(self.per_level_series)
+        if latency is None:
+            latency = LatencyModel.default(L)
+        if latency.n_levels != L:
+            raise ValueError(
+                f"latency model has {latency.n_levels} levels, fleet has {L}"
+            )
+        # (L, G) per-level grouped totals; edge carries the demand axis
+        hits_lg = np.stack(
+            [s[..., METRIC_INDEX["hits"]].sum(axis=(0, 1)) for s in self.per_level_series]
+        )
+        hit_bytes_lg = np.stack(
+            [s[..., METRIC_INDEX["hit_bytes"]].sum(axis=(0, 1)) for s in self.per_level_series]
+        )
+        edge = self.per_level_series[0]
+        req_g = edge[..., METRIC_INDEX["requests"]].sum(axis=(0, 1))
+        req_bytes_g = (
+            edge[..., METRIC_INDEX["hit_bytes"]].sum(axis=(0, 1))
+            + edge[..., METRIC_INDEX["miss_bytes"]].sum(axis=(0, 1))
+        )
+        origin_g = req_g - hits_lg.sum(axis=0)
+        egress_g = req_bytes_g - hit_bytes_lg.sum(axis=0)
+        # final-window fleet-wide occupancy census per group
+        occ_g = sum(
+            s[:, -1, :, METRIC_INDEX["occupancy"]].sum(axis=0)
+            for s in self.per_level_series
+        )
+        occ_total = float(occ_g.sum())
+        if self.per_level_pressure is not None:
+            pressure_g = sum(p.sum(axis=(0, 1)) for p in self.per_level_pressure)
+        else:
+            pressure_g = np.zeros(self.n_groups, np.int64)
+        rows = []
+        for g in range(self.n_groups):
+            hist = np.concatenate([hits_lg[:, g], [origin_g[g]]])
+            total_hits = int(hits_lg[:, g].sum())
+            rows.append({
+                "tenant": g,
+                "requests": int(req_g[g]),
+                "hits": total_hits,
+                "chr": total_hits / int(req_g[g]) if req_g[g] else 0.0,
+                "req_bytes": int(req_bytes_g[g]),
+                "hit_bytes": int(hit_bytes_lg[:, g].sum()),
+                "byte_chr": (
+                    int(hit_bytes_lg[:, g].sum()) / int(req_bytes_g[g])
+                    if req_bytes_g[g] else 0.0
+                ),
+                "egress_bytes": int(egress_g[g]),
+                "p50_us": latency.percentile(hist, 0.5),
+                "p99_us": latency.percentile(hist, 0.99),
+                "mean_us": latency.mean_us(hist),
+                "eviction_pressure": int(pressure_g[g]),
+                "hot_share": float(occ_g[g]) / occ_total if occ_total else 0.0,
+            })
+            assert tuple(rows[-1].keys()) == TENANT_ROW_FIELDS
         return rows
 
 
@@ -462,6 +573,8 @@ def fleet_report(
     origin = n_requests - sum(t.hits for t in per_level)
     origin_bytes = per_level[0].req_bytes - sum(t.hit_bytes for t in per_level)
     per_level_series = None
+    per_level_pressure = None
+    n_groups = 0 if telemetry is None else getattr(telemetry, "n_groups", 0)
     if telemetry is not None:
         if "telemetry" not in result:
             raise ValueError(
@@ -469,17 +582,25 @@ def fleet_report(
                 "run simulate_fleet(..., telemetry=spec) first"
             )
         per_level_series = []
+        # grouped series carry one extra trailing axis before N_METRICS
+        keep = 4 if n_groups else 3
         for l, arr in enumerate(result["telemetry"]):
             a = np.asarray(arr)
-            # collapse any batch axes down to (n_nodes, n_windows, N_METRICS);
-            # counters sum over samples like the scalar tier counters above
-            a = a.reshape((-1,) + a.shape[-3:]).sum(axis=0)
+            # collapse any batch axes down to (n_nodes, n_windows, [n_groups,]
+            # N_METRICS); counters sum over samples like the scalar tier
+            # counters above
+            a = a.reshape((-1,) + a.shape[-keep:]).sum(axis=0)
             if a.shape[0] != len(topo.levels[l]):
                 raise ValueError(
                     f"level {l} series has {a.shape[0]} nodes, topology has "
                     f"{len(topo.levels[l])}"
                 )
             per_level_series.append(a)
+        if n_groups and "telemetry_pressure" in result:
+            per_level_pressure = [
+                np.asarray(p).reshape((-1,) + np.asarray(p).shape[-3:]).sum(axis=0)
+                for p in result["telemetry_pressure"]
+            ]
     return FleetReport(
         per_node=per_node,
         per_level=per_level,
@@ -489,4 +610,6 @@ def fleet_report(
         per_level_placement=per_level_placement,
         per_level_series=per_level_series,
         telemetry_window=None if telemetry is None else telemetry.window,
+        n_groups=n_groups,
+        per_level_pressure=per_level_pressure,
     )

@@ -67,6 +67,7 @@ def masked_scan(
     instrument=False,
     sizes=None,
     cap_bytes=None,
+    og=None,
 ):
     """Scan ``step`` over the trace, freezing state where ``active`` is False.
 
@@ -77,10 +78,11 @@ def masked_scan(
     ``instrument`` (static) switches to the telemetry twin, which returns
     ``(state, hits, events)`` with the per-step event series (identical
     state/hit trajectory — asserted in tests/test_telemetry.py). ``sizes``/
-    ``cap_bytes`` are the byte-capacity inputs of ``jax_cache.step``."""
+    ``cap_bytes`` are the byte-capacity inputs of ``jax_cache.step``; ``og``
+    the (n_objects, n_groups) group one-hot for group-segmented telemetry."""
     if instrument:
         return jax_cache.instrumented_scan(
-            spec, state, trace, active, cap, sizes=sizes, cap_bytes=cap_bytes
+            spec, state, trace, active, cap, sizes=sizes, cap_bytes=cap_bytes, og=og
         )
     if spec.kind == "plfua_dyn":
         return jax_cache._chunked_scan(
@@ -155,13 +157,17 @@ def stack_level_state(specs: tuple[PolicySpec, ...]):
     )
 
 
-def run_level(specs: tuple[PolicySpec, ...], trace, active, *, instrument=False, sizes=None):
+def run_level(
+    specs: tuple[PolicySpec, ...], trace, active, *, instrument=False, sizes=None,
+    og=None,
+):
     """One level: vmap the masked scan over its nodes.
 
     ``active``: (K, T) bool — request t routed here and unserved below.
     Returns (stacked final states, (K, T) hit series), plus the vmapped
     per-node event series when ``instrument`` is set. ``sizes`` is the
-    global per-object byte array, shared by every node."""
+    global per-object byte array, shared by every node, and ``og`` the
+    shared group one-hot (grouped telemetry)."""
     s0 = specs[0]
     states = stack_level_state(specs)
     caps = jnp.array([s.capacity for s in specs], jnp.int32)
@@ -170,35 +176,43 @@ def run_level(specs: tuple[PolicySpec, ...], trace, active, *, instrument=False,
         return jax.vmap(
             lambda st, act, cap, capb: masked_scan(
                 s0, st, trace, act, cap,
-                instrument=instrument, sizes=sizes, cap_bytes=capb,
+                instrument=instrument, sizes=sizes, cap_bytes=capb, og=og,
             )
         )(states, active, caps, caps_b)
     return jax.vmap(
         lambda st, act, cap: masked_scan(
-            s0, st, trace, act, cap, instrument=instrument, sizes=sizes
+            s0, st, trace, act, cap, instrument=instrument, sizes=sizes, og=og
         )
     )(states, active, caps)
 
 
-def level_series(spec: PolicySpec, telemetry, trace_len, hits, active, events):
+def level_series(
+    spec: PolicySpec, telemetry, trace_len, hits, active, events, groups_t=None
+):
     """Bucket one level's vmapped event series into (K, n_windows, N_METRICS)
-    — the level-major engine has no placement gate, so fill offers default to
+    (a group axis before N_METRICS when ``telemetry.n_groups > 0``) — the
+    level-major engine has no placement gate, so fill offers default to
     the miss count (every miss of an active node is offered)."""
     return jax_cache.telemetry_series(
-        spec, telemetry, trace_len, hits, events, active=active
+        spec, telemetry, trace_len, hits, events, active=active, groups_t=groups_t
     )
 
 
-def upper_levels(topo: Topology, trace, assigns, demand, *, telemetry=None, sizes=None):
+def upper_levels(
+    topo: Topology, trace, assigns, demand, *, telemetry=None, sizes=None,
+    og=None, groups_t=None,
+):
     """Run levels 1..L-1 given the edge tier's surviving ``demand`` stream.
 
     Shared by the single-device path and the shard_map path (which computes
     level 0 under a device mesh and the global miss stream via a collective).
     Returns (per-level hit series list, counters list, states list, demand[,
-    per-level telemetry series list when ``telemetry`` is set]).
+    per-level telemetry series list when ``telemetry`` is set — grouped runs
+    additionally append the per-level eviction-pressure list]).
     """
     instrument = telemetry is not None
-    level_hits, counters, states_out, series_out = [], [], [], []
+    grouped = instrument and telemetry.n_groups > 0
+    level_hits, counters, states_out, series_out, pressure_out = [], [], [], [], []
     for l in range(1, topo.n_levels):
         specs = topo.levels[l]
         K = len(specs)
@@ -207,11 +221,20 @@ def upper_levels(topo: Topology, trace, assigns, demand, *, telemetry=None, size
         ) & demand[None, :]
         if instrument:
             states, hits, events = run_level(
-                specs, trace, active, instrument=True, sizes=sizes
+                specs, trace, active, instrument=True, sizes=sizes, og=og
             )
             series_out.append(
-                level_series(specs[0], telemetry, trace.shape[0], hits, active, events)
+                level_series(
+                    specs[0], telemetry, trace.shape[0], hits, active, events,
+                    groups_t=groups_t,
+                )
             )
+            if grouped:
+                pressure_out.append(
+                    telemetry_spec.windowed_pressure(
+                        telemetry.window, groups_t, events["evict_g"], xp=jnp
+                    )
+                )
         else:
             states, hits = run_level(specs, trace, active, sizes=sizes)
         hit_l = hits.any(axis=0)
@@ -219,36 +242,58 @@ def upper_levels(topo: Topology, trace, assigns, demand, *, telemetry=None, size
         counters.append(tier_counters(specs[0], hits, active, trace, states, sizes))
         states_out.append(states)
         demand = demand & ~hit_l
+    if grouped:
+        return level_hits, counters, states_out, demand, series_out, pressure_out
     if instrument:
         return level_hits, counters, states_out, demand, series_out
     return level_hits, counters, states_out, demand
 
 
-def _simulate_fleet_impl(topo: Topology, trace, assignment, telemetry=None, sizes=None):
+def _simulate_fleet_impl(
+    topo: Topology, trace, assignment, telemetry=None, sizes=None, groups=None
+):
     if topo.has_placement:
         # non-lce placement couples the levels at each trace position ->
         # the time-major engine (see module docstring)
-        return _simulate_placed_impl(topo, trace, assignment, telemetry, sizes)
+        return _simulate_placed_impl(topo, trace, assignment, telemetry, sizes, groups)
     trace = trace.astype(jnp.int32)
     assignment = assignment.astype(jnp.int32)
     if sizes is not None:
         sizes = jnp.asarray(sizes, jnp.int32)
+    og, groups_t = jax_cache.group_scatter_arrays(telemetry, groups, trace)
+    grouped = og is not None
     assigns = level_assignments(topo, trace, assignment)
 
     specs0 = topo.levels[0]
     E = len(specs0)
     active0 = assigns[0][None, :] == jnp.arange(E, dtype=jnp.int32)[:, None]
+    pressure = []
     if telemetry is not None:
         edge_states, edge_hits, edge_events = run_level(
-            specs0, trace, active0, instrument=True, sizes=sizes
+            specs0, trace, active0, instrument=True, sizes=sizes, og=og
         )
         edge_series = level_series(
-            specs0[0], telemetry, trace.shape[0], edge_hits, active0, edge_events
+            specs0[0], telemetry, trace.shape[0], edge_hits, active0, edge_events,
+            groups_t=groups_t,
         )
         demand = ~edge_hits.any(axis=0)
-        hits_up, counters_up, states_up, demand, series_up = upper_levels(
-            topo, trace, assigns, demand, telemetry=telemetry, sizes=sizes
-        )
+        if grouped:
+            pressure.append(
+                telemetry_spec.windowed_pressure(
+                    telemetry.window, groups_t, edge_events["evict_g"], xp=jnp
+                )
+            )
+            hits_up, counters_up, states_up, demand, series_up, pressure_up = (
+                upper_levels(
+                    topo, trace, assigns, demand, telemetry=telemetry,
+                    sizes=sizes, og=og, groups_t=groups_t,
+                )
+            )
+            pressure.extend(pressure_up)
+        else:
+            hits_up, counters_up, states_up, demand, series_up = upper_levels(
+                topo, trace, assigns, demand, telemetry=telemetry, sizes=sizes
+            )
     else:
         edge_states, edge_hits = run_level(specs0, trace, active0, sizes=sizes)
         demand = ~edge_hits.any(axis=0)
@@ -272,8 +317,14 @@ def _simulate_fleet_impl(topo: Topology, trace, assignment, telemetry=None, size
         "origin_miss": demand,
     }
     if telemetry is not None:
-        # (K_l, n_windows, N_METRICS) int32 per level (docs/observability.md)
+        # (K_l, n_windows, N_METRICS) int32 per level (docs/observability.md);
+        # grouped runs carry (K_l, n_windows, n_groups, N_METRICS) instead
         out["telemetry"] = (edge_series, *series_up)
+        if grouped:
+            # per level (K_l, n_windows, n_groups): evictions of each group's
+            # objects at steps requested by *another* group (cross-tenant
+            # eviction pressure)
+            out["telemetry_pressure"] = tuple(pressure)
     return out
 
 
@@ -326,6 +377,7 @@ def _placed_run(
     edge_axis: str | None = None,
     instrument: bool = False,
     sizes=None,
+    og=None,
 ):
     """The time-major scan shared by the single-device and edge-sharded
     placed paths. ``trace`` (T,) int32, ``assigns`` one (T,) int32 per level.
@@ -490,6 +542,17 @@ def _placed_run(
                     # post-step occupancy snapshot of the whole node fleet
                     "count": new_states[l]["count"],
                 }
+                if og is not None:
+                    # victim-group counts at the consulted node (membership
+                    # diff = exactly the victims; masked like the scalar) and
+                    # the whole node fleet's per-group occupancy snapshot
+                    vmask = st["in_cache"] & ~ns["in_cache"]
+                    tel_l["evict_g"] = jnp.where(
+                        act, vmask.astype(jnp.int32) @ og, 0
+                    )
+                    tel_l["count_g"] = (
+                        new_states[l]["in_cache"].astype(jnp.int32) @ og
+                    )
                 if spec.kind == "tinylfu":
                     tel_l["aging"] = act & (ns["seen"] == 0)
                 tel.append(tel_l)
@@ -547,26 +610,27 @@ def _placed_run(
         carry, out = jax.lax.scan(step_t, carry, xs)
         states, pstates, fills, admitted = carry
         states = list(states)
-        churns = []
+        churns, churns_g = [], []
         for j, l in enumerate(dyn_levels):
             refreshed = jax.vmap(
                 lambda s: jax_cache.refresh_hot(specs[l], s)
             )(states[l])
             if instrument:
+                diff = states[l]["hot"] != refreshed["hot"]  # (K, N)
                 churns.append(
-                    jnp.where(
-                        fire_c[j],
-                        (states[l]["hot"] != refreshed["hot"]).sum(-1).astype(jnp.int32),
-                        0,
-                    )
+                    jnp.where(fire_c[j], diff.sum(-1).astype(jnp.int32), 0)
                 )
+                if og is not None:
+                    churns_g.append(
+                        jnp.where(fire_c[j], diff.astype(jnp.int32) @ og, 0)
+                    )
             states[l] = jax.tree_util.tree_map(
                 lambda o, r: jnp.where(fire_c[j], r, o), states[l], refreshed
             )
         carry = (tuple(states), pstates, fills, admitted)
         if instrument:
             hits, tel = out
-            return carry, (hits, tel, tuple(churns))
+            return carry, (hits, tel, tuple(churns), tuple(churns_g))
         return carry, out
 
     chunk = lambda a: a.reshape(n_chunks, G, *a.shape[1:])
@@ -587,26 +651,33 @@ def _placed_run(
     if not instrument:
         hit_lv = [h.reshape(-1)[:T] for h in out]
         return list(states), pstates, list(fills), list(admitted), hit_lv
-    hits, tel, churns = out
+    hits, tel, churns, churns_g = out
     hit_lv = [h.reshape(-1)[:T] for h in hits]
     # un-chunk the event series: scalars (n_chunks, G) -> (T,); the per-step
-    # occupancy snapshot (n_chunks, G, K) -> (K, T)
+    # occupancy snapshot (n_chunks, G, K) -> (K, T); grouped events keep
+    # their trailing group axis — evict_g (n_chunks, G, n_g) -> (T, n_g),
+    # count_g (n_chunks, G, K, n_g) -> (K, T, n_g)
     tel_lv = []
     for l in range(L):
-        d = {
-            k: (
-                v.reshape(-1)[:T]
-                if v.ndim == 2
-                else v.reshape(-1, v.shape[-1])[:T].T
-            )
-            for k, v in tel[l].items()
-        }
+        d = {}
+        for k, v in tel[l].items():
+            if k == "evict_g":
+                d[k] = v.reshape((-1,) + v.shape[2:])[:T]
+            elif k == "count_g":
+                d[k] = jnp.moveaxis(v.reshape((-1,) + v.shape[2:])[:T], 0, 1)
+            elif v.ndim == 2:
+                d[k] = v.reshape(-1)[:T]
+            else:
+                d[k] = v.reshape(-1, v.shape[-1])[:T].T
         tel_lv.append(d)
     for j, l in enumerate(dyn_levels):
         K = churns[j].shape[-1]
         # all nodes of a dyn level refresh on the same global-time schedule
         tel_lv[l]["fired"] = jnp.broadcast_to(jnp.asarray(fire[:, j]), (K, n_chunks))
         tel_lv[l]["churn"] = churns[j].T  # (n_chunks, K) -> (K, n_chunks)
+        if og is not None:
+            # (n_chunks, K, n_g) -> (K, n_chunks, n_g)
+            tel_lv[l]["churn_g"] = jnp.moveaxis(churns_g[j], 0, 1)
     return list(states), pstates, list(fills), list(admitted), hit_lv, tel_lv, G
 
 
@@ -624,6 +695,7 @@ def assemble_placed(
     chunk_len=None,
     trace=None,
     sizes=None,
+    groups_t=None,
 ):
     """Fold a ``_placed_run`` result into the ``simulate_fleet`` pytree.
 
@@ -632,15 +704,17 @@ def assemble_placed(
     served it) — identical to the level-major masks by construction. With
     ``telemetry``/``tel_lv`` the per-step events (which are consulted-node
     scalars) are scattered to nodes through the same masks and bucketed;
-    ``trace``/``sizes`` add the per-node byte accounting."""
+    ``trace``/``sizes`` add the per-node byte accounting and ``groups_t``
+    (per-position group ids) the group-segmented series + pressure."""
     T = hit_lv[0].shape[0]
+    grouped = telemetry is not None and telemetry.n_groups > 0
     demand = jnp.ones((T,), jnp.bool_)
     sz_t = (
         None
         if sizes is None
         else jnp.take(jnp.asarray(sizes, jnp.int32), trace, axis=-1)
     )
-    tiers, node_hits, series = [], [], []
+    tiers, node_hits, series, pressure = [], [], [], []
     for l in range(topo.n_levels):
         K = len(topo.levels[l])
         active = (
@@ -667,30 +741,65 @@ def assemble_placed(
             ev = tel_lv[l]
             per_node = lambda s: active & s[None, :]
             aging = ev.get("aging")
-            series.append(
-                telemetry_spec.series_from_run(
-                    telemetry.window,
-                    T,
-                    hits=nh,
-                    active=active,
-                    fills=per_node(ev["fill"]),
-                    # int32 victim counts, scattered to the consulted node
-                    evictions=active * ev["evict"][None, :],
-                    occupancy=ev["count"],
-                    offers=per_node(ev["offer"]),
-                    aging=None if aging is None else per_node(aging),
-                    fired=ev.get("fired"),
-                    churn=ev.get("churn"),
-                    hit_bytes=None if sz_t is None else nh * sz_t[None, :],
-                    miss_bytes=(
-                        None
-                        if sz_t is None
-                        else (active & ~nh) * sz_t[None, :]
-                    ),
-                    chunk_len=chunk_len,
-                    xp=jnp,
+            if grouped:
+                # scatter the consulted-node victim-group counts to nodes
+                # through the same activity masks as the scalar events
+                evict_g = active[:, :, None] * ev["evict_g"][None, :, :]
+                series.append(
+                    telemetry_spec.grouped_series_from_run(
+                        telemetry.window,
+                        T,
+                        telemetry.n_groups,
+                        groups_t,
+                        hits=nh,
+                        active=active,
+                        fills=per_node(ev["fill"]),
+                        evictions_g=evict_g,
+                        occupancy_g=ev["count_g"],
+                        offers=per_node(ev["offer"]),
+                        aging=None if aging is None else per_node(aging),
+                        fired=ev.get("fired"),
+                        churn_g=ev.get("churn_g"),
+                        hit_bytes=None if sz_t is None else nh * sz_t[None, :],
+                        miss_bytes=(
+                            None
+                            if sz_t is None
+                            else (active & ~nh) * sz_t[None, :]
+                        ),
+                        chunk_len=chunk_len,
+                        xp=jnp,
+                    )
                 )
-            )
+                pressure.append(
+                    telemetry_spec.windowed_pressure(
+                        telemetry.window, groups_t, evict_g, xp=jnp
+                    )
+                )
+            else:
+                series.append(
+                    telemetry_spec.series_from_run(
+                        telemetry.window,
+                        T,
+                        hits=nh,
+                        active=active,
+                        fills=per_node(ev["fill"]),
+                        # int32 victim counts, scattered to the consulted node
+                        evictions=active * ev["evict"][None, :],
+                        occupancy=ev["count"],
+                        offers=per_node(ev["offer"]),
+                        aging=None if aging is None else per_node(aging),
+                        fired=ev.get("fired"),
+                        churn=ev.get("churn"),
+                        hit_bytes=None if sz_t is None else nh * sz_t[None, :],
+                        miss_bytes=(
+                            None
+                            if sz_t is None
+                            else (active & ~nh) * sz_t[None, :]
+                        ),
+                        chunk_len=chunk_len,
+                        xp=jnp,
+                    )
+                )
         demand = demand & ~hit_lv[l]
     out = {
         "hit": tuple(hit_lv),
@@ -703,23 +812,28 @@ def assemble_placed(
     }
     if telemetry is not None:
         out["telemetry"] = tuple(series)
+        if grouped:
+            out["telemetry_pressure"] = tuple(pressure)
     return out
 
 
-def _simulate_placed_impl(topo: Topology, trace, assignment, telemetry=None, sizes=None):
+def _simulate_placed_impl(
+    topo: Topology, trace, assignment, telemetry=None, sizes=None, groups=None
+):
     trace = trace.astype(jnp.int32)
     assignment = assignment.astype(jnp.int32)
     if sizes is not None:
         sizes = jnp.asarray(sizes, jnp.int32)
+    og, groups_t = jax_cache.group_scatter_arrays(telemetry, groups, trace)
     assigns = level_assignments(topo, trace, assignment)
     if telemetry is not None:
         states, pstates, fills, admitted, hit_lv, tel_lv, G = _placed_run(
-            topo, trace, assigns, instrument=True, sizes=sizes
+            topo, trace, assigns, instrument=True, sizes=sizes, og=og
         )
         return assemble_placed(
             topo, assigns, states, pstates, fills, admitted, hit_lv,
             telemetry=telemetry, tel_lv=tel_lv, chunk_len=G,
-            trace=trace, sizes=sizes,
+            trace=trace, sizes=sizes, groups_t=groups_t,
         )
     states, pstates, fills, admitted, hit_lv = _placed_run(
         topo, trace, assigns, sizes=sizes
@@ -732,7 +846,8 @@ def _simulate_placed_impl(topo: Topology, trace, assignment, telemetry=None, siz
 
 @functools.partial(jax.jit, static_argnums=(0, 3))
 def simulate_fleet(
-    topo: Topology, trace: jax.Array, assignment: jax.Array, telemetry=None, sizes=None
+    topo: Topology, trace: jax.Array, assignment: jax.Array, telemetry=None,
+    sizes=None, groups=None,
 ):
     """Run one trace through an N-tier topology. See module docstring.
 
@@ -752,17 +867,23 @@ def simulate_fleet(
 
     With a static :class:`repro.telemetry.TelemetrySpec` the dict gains
     ``telemetry``: per level a (K_l, n_windows, N_METRICS) int32 windowed
-    series accumulated inside the scan (docs/observability.md).
+    series accumulated inside the scan (docs/observability.md). A grouped
+    spec (``telemetry.n_groups > 0``, with the ``groups`` id→group int32
+    catalogue) widens that to (K_l, n_windows, n_groups, N_METRICS) and
+    adds ``telemetry_pressure``: per level (K_l, n_windows, n_groups)
+    cross-tenant eviction counts (a tenant's objects evicted by another
+    tenant's requests).
     """
-    return _simulate_fleet_impl(topo, trace, assignment, telemetry, sizes)
+    return _simulate_fleet_impl(topo, trace, assignment, telemetry, sizes, groups)
 
 
 @functools.partial(jax.jit, static_argnums=(0, 3))
 def simulate_fleet_batch(
-    topo: Topology, traces: jax.Array, assignments: jax.Array, telemetry=None, sizes=None
+    topo: Topology, traces: jax.Array, assignments: jax.Array, telemetry=None,
+    sizes=None, groups=None,
 ):
     """vmap the fleet over (S, T) trace samples in one device launch
-    (``sizes`` is shared across samples — one object universe)."""
-    return jax.vmap(lambda tr, a: _simulate_fleet_impl(topo, tr, a, telemetry, sizes))(
-        traces, assignments
-    )
+    (``sizes``/``groups`` are shared across samples — one object universe)."""
+    return jax.vmap(
+        lambda tr, a: _simulate_fleet_impl(topo, tr, a, telemetry, sizes, groups)
+    )(traces, assignments)

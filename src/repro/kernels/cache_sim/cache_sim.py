@@ -43,6 +43,15 @@ size 1) and one insertion runs a bounded multi-victim eviction loop — at most
 decision. ``wlfu``/``tinylfu`` under a byte budget are a JAX-scan-only
 combination (``cache_sim_pallas`` raises).
 
+PR 8: group-segmented telemetry. With ``n_groups=G`` (static) and a
+grid-shared id -> group catalogue row, the windowed accumulator stacks one
+16-row metric block per group (row = g*16 + m): request-attributed metrics
+scatter into the requester's block at the dynamic row ``gx*16 + m`` and the
+membership-attributed events (evictions, occupancy, hot churn) are per-group
+lane-sums over a static Python loop — the kernel-shaped spelling of the jax
+tier's one-hot group matmuls, summing over groups to the ungrouped series
+bit for bit. The n_groups=0 program is unchanged.
+
 The only dynamic access is the scalar trace read ``trace_ref[0, t]`` per step.
 Every kind in ``repro.core.registry`` is implemented here; differential
 parity against both ``jax_cache.simulate`` and the pure-Python references is
@@ -164,7 +173,7 @@ def _refresh_hot(rows, tables, *, n_pad: int, n_objects: int, hot_k: int):
 
 
 def _cache_sim_kernel(
-    *refs,  # trace, [sizes iff size-aware], hits/freq/cache outs, [telemetry out]
+    *refs,  # trace, [sizes iff size-aware], [groups iff grouped], outs, [tel out]
     kind: str,
     capacity: int,
     hot_size: int,
@@ -179,43 +188,86 @@ def _cache_sim_kernel(
     n_w_pad: int = 0,
     capacity_bytes: int = 0,
     max_victims: int = 0,
+    n_groups: int = 0,
 ):
     BYTES = capacity_bytes > 0
     SIZED = BYTES or kind == "gdsf"
+    GROUPED = telemetry_window > 0 and n_groups > 0
     trace_ref = refs[0]  # (1, T) int32 VMEM
     i = 1
     if SIZED:
         sizes_ref = refs[i]  # (1, N_pad) int32 VMEM, grid-shared; padding = 1
         i += 1
+    if GROUPED:
+        groups_ref = refs[i]  # (1, N_pad) int32 VMEM, grid-shared; padding = 0
+        i += 1
     hits_ref = refs[i]  # (1, 1) int32 VMEM out
     freq_ref = refs[i + 1]  # (1, N_pad) int32 VMEM out (lru: last-access stamps)
     cache_ref = refs[i + 2]  # (1, N_pad) int32 VMEM out (0/1 mask)
-    tel_refs = refs[i + 3 :]  # (1, _TEL_ROWS, n_w_pad) out, iff telemetry_window
+    tel_refs = refs[i + 3 :]  # (1, ROWS, n_w_pad) out, iff telemetry_window
 
     iota = jax.lax.broadcasted_iota(jnp.int32, (1, n_pad), 1)
     iota_u32 = iota.astype(jnp.uint32)
     if SIZED:
         sizes_row = sizes_ref[...]
+    if GROUPED:
+        groups_row = groups_ref[...]
 
     TEL = telemetry_window > 0
     if TEL:
         W = telemetry_window
         n_w = -(-trace_len // W)
-        m_iota = jax.lax.broadcasted_iota(jnp.int32, (_TEL_ROWS, 1), 0)
+        # grouped layout stacks one _TEL_ROWS block per group: row = g*16 + m
+        ROWS = _TEL_ROWS * (n_groups if GROUPED else 1)
+        m_iota = jax.lax.broadcasted_iota(jnp.int32, (ROWS, 1), 0)
         nw_iota = jax.lax.broadcasted_iota(jnp.int32, (1, n_w_pad), 1)
         _row = lambda i: (m_iota == i).astype(jnp.int32)
 
-        def tel_update(tel, t, *, hit, fill, evict, count, aging=None, active=None, sz=None):
+        def tel_update(
+            tel, t, *, hit, fill, evict, count, aging=None, active=None, sz=None,
+            evict_mask=None, cache_mask=None, gx=None,
+        ):
             """Scatter one step's events into the windowed accumulator via a
             one-hot window column (metric row order = telemetry_spec.METRICS;
             occupancy is a set-at-window-end, everything else an add).
             ``evict`` may be a bool (object mode) or an int32 victim count
             (byte mode); ``sz`` is the request's byte size (1 when unsized,
-            matching the jax tier's unit fallback)."""
+            matching the jax tier's unit fallback). Under GROUPED the
+            request-attributed metrics land in the requester's row block at
+            the dynamic row ``gx*16 + m`` while evictions / occupancy are
+            membership-attributed from ``evict_mask`` / ``cache_mask`` via a
+            static per-group lane-sum loop — exactly the jax tier's
+            ``evict_g`` / ``count_g`` one-hot matmuls."""
             act = jnp.bool_(True) if active is None else active
             i32 = lambda b: (b & act).astype(jnp.int32)
             szv = jnp.int32(1) if sz is None else sz
             won = nw_iota == jnp.minimum(t // W, n_w - 1)
+            if GROUPED:
+                grow = lambda m: (m_iota == gx * _TEL_ROWS + m).astype(jnp.int32)
+                inc = (
+                    grow(0) * i32(jnp.bool_(True))  # requests
+                    + grow(1) * i32(hit)  # hits
+                    + grow(2) * i32(~hit)  # misses
+                    + grow(3) * i32(fill)  # fills
+                    + grow(5) * i32(~hit)  # fill_offers: flat cache, every miss
+                    + grow(9) * (szv * i32(hit))  # hit_bytes
+                    + grow(10) * (szv * i32(~hit))  # miss_bytes
+                )
+                if aging is not None:
+                    inc = inc + grow(7) * i32(aging)  # refreshes (tinylfu aging)
+                acti = act.astype(jnp.int32)
+                for g in range(n_groups):
+                    in_g = groups_row == g
+                    ev_g = jnp.sum((evict_mask & in_g).astype(jnp.int32))
+                    inc = inc + _row(g * _TEL_ROWS + 4) * (ev_g * acti)
+                tel = tel + inc * won.astype(jnp.int32)
+                is_end = act & (((t + 1) % W == 0) | (t == trace_len - 1))
+                for g in range(n_groups):
+                    cnt_g = jnp.sum((cache_mask & (groups_row == g)).astype(jnp.int32))
+                    tel = jnp.where(
+                        (m_iota == g * _TEL_ROWS + 6) & won & is_end, cnt_g, tel
+                    )
+                return tel
             inc = (
                 _row(0) * i32(jnp.bool_(True))  # requests
                 + _row(1) * i32(hit)  # hits
@@ -277,6 +329,8 @@ def _cache_sim_kernel(
         hit = jnp.any(onehot & in_cache)
         if SIZED:
             size_x = _lane_pick(onehot, sizes_row)
+        if GROUPED:
+            gx = _lane_pick(onehot, groups_row)
 
         if kind == "plfua_dyn":
             idx = [_lane_pick(onehot, tbl) for tbl in tables]
@@ -359,9 +413,18 @@ def _cache_sim_kernel(
             )
         new_in_cache = new_in_cache | (onehot & insert)
         if TEL:
+            gargs = (
+                # victims = membership lost this step (insert only ever adds
+                # the missed id's lane, so the diff is exactly the evictions)
+                dict(evict_mask=in_cache & ~new_in_cache,
+                     cache_mask=new_in_cache, gx=gx)
+                if GROUPED
+                else {}
+            )
             tel = tel_update(
                 tel, t, hit=hit, fill=insert, evict=need_evict_n,
                 count=new_count, active=active, sz=size_x if SIZED else None,
+                **gargs,
             )
         if active is not None:
             new_freq = jnp.where(active, new_freq, freq)
@@ -404,11 +467,20 @@ def _cache_sim_kernel(
         hit = jnp.any(onehot & in_cache)
         need_evict = (~hit) & (count >= capacity)
         victim_onehot = victim_of(freq, in_cache)
+        prev_cache = in_cache
         in_cache = (in_cache & ~(victim_onehot & need_evict)) | onehot
         count = count + (~hit).astype(jnp.int32) - need_evict.astype(jnp.int32)
         hits = hits + hit.astype(jnp.int32)
         if TEL:
-            tel = tel_update(tel, t, hit=hit, fill=~hit, evict=need_evict, count=count)
+            gargs = (
+                dict(evict_mask=prev_cache & ~in_cache, cache_mask=in_cache,
+                     gx=_lane_pick(onehot, groups_row))
+                if GROUPED
+                else {}
+            )
+            tel = tel_update(
+                tel, t, hit=hit, fill=~hit, evict=need_evict, count=count, **gargs
+            )
             return freq, in_cache, count, hits, ring, ptr, tel
         return freq, in_cache, count, hits, ring, ptr
 
@@ -454,6 +526,7 @@ def _cache_sim_kernel(
         admit = est_x > est_v
         insert = (~hit) & ((~full) | admit)
         need_evict = (~hit) & full & admit
+        prev_cache = in_cache
         in_cache = (in_cache & ~(victim_onehot & need_evict)) | (onehot & insert)
         # LFU eviction semantics: metadata dies with the victim, entry restarts at 1
         freq = jnp.where(victim_onehot & need_evict, 0, freq)
@@ -465,8 +538,15 @@ def _cache_sim_kernel(
         count = count + insert.astype(jnp.int32) - need_evict.astype(jnp.int32)
         hits = hits + hit.astype(jnp.int32)
         if TEL:
+            gargs = (
+                dict(evict_mask=prev_cache & ~in_cache, cache_mask=in_cache,
+                     gx=_lane_pick(onehot, groups_row))
+                if GROUPED
+                else {}
+            )
             tel = tel_update(
-                tel, t, hit=hit, fill=insert, evict=need_evict, count=count, aging=age
+                tel, t, hit=hit, fill=insert, evict=need_evict, count=count,
+                aging=age, **gargs
             )
         out = (
             (freq, in_cache, count, hits, rows, seen, bloom)
@@ -481,7 +561,7 @@ def _cache_sim_kernel(
     zero = jnp.int32(0)
     gdsf0 = (jnp.zeros((1, n_pad), jnp.int32), zero) if kind == "gdsf" else ()
     bytes0 = (zero,) if BYTES else ()
-    tel0 = (jnp.zeros((_TEL_ROWS, n_w_pad), jnp.int32),) if TEL else ()
+    tel0 = (jnp.zeros((ROWS, n_w_pad), jnp.int32),) if TEL else ()
 
     if kind == "wlfu":
         ring0 = jnp.full((1, r_pad), -1, jnp.int32)
@@ -522,8 +602,20 @@ def _cache_sim_kernel(
                 pos = jnp.minimum((c + 1) * refresh - 1, trace_len - 1)
                 won = (nw_iota == pos // W).astype(jnp.int32)
                 fire_i = fire.astype(jnp.int32)
-                churn = jnp.sum((hot != new_hot).astype(jnp.int32))
-                tel = tel + (_row(7) * fire_i + _row(8) * (churn * fire_i)) * won
+                if GROUPED:
+                    # the refresh is attributed to the group of the request
+                    # that completed the period; churn is membership-split
+                    # over the hot-mask diff (the jax tier's churn_g matmul)
+                    gp = _lane_pick(iota == trace_ref[0, pos], groups_row)
+                    inc = (m_iota == gp * _TEL_ROWS + 7).astype(jnp.int32) * fire_i
+                    diff = hot != new_hot
+                    for g in range(n_groups):
+                        churn_g = jnp.sum((diff & (groups_row == g)).astype(jnp.int32))
+                        inc = inc + _row(g * _TEL_ROWS + 8) * (churn_g * fire_i)
+                    tel = tel + inc * won
+                else:
+                    churn = jnp.sum((hot != new_hot).astype(jnp.int32))
+                    tel = tel + (_row(7) * fire_i + _row(8) * (churn * fire_i)) * won
             hot = jnp.where(fire, new_hot, hot)
             rows = [jnp.where(fire, nr, r) for nr, r in zip(new_rows, rows)]
             out = (freq, in_cache, count, hits, rows, hot, *extra)
@@ -566,6 +658,8 @@ def cache_sim_pallas(
     capacity_bytes: int = 0,
     max_victims: int = 0,
     sizes=None,
+    n_groups: int = 0,
+    groups=None,
     interpret: bool = True,
 ):
     """Simulate S same-shape traces on the Pallas grid.
@@ -592,6 +686,12 @@ def cache_sim_pallas(
       sizes: (n_objects,) int32 per-object byte sizes, shared by all samples
         (``workloads.object_sizes``). Consulted only by the size-aware
         programs (byte mode or gdsf); None -> unit sizes.
+      n_groups: group-segmented telemetry (PR 8): number of tenant groups G
+        (0 = off). Requires ``telemetry_window`` and a ``groups`` catalogue;
+        the series output grows a group axis. The n_groups=0 program is
+        byte-identical to before the option existed.
+      groups: (n_objects,) int32 id -> group labels in [0, n_groups), shared
+        by all samples (``workloads.tenant_groups``).
 
     The defaults mirror ``jax_cache.PolicySpec`` exactly, so identical
     arguments produce bit-identical state across the two tiers.
@@ -601,7 +701,9 @@ def cache_sim_pallas(
       freq:     (S, N)    int32 — final frequency table (lru: last-access stamps).
       in_cache: (S, N)    bool  — final cache contents.
       series:   (S, n_windows, N_METRICS) int32 — only with telemetry_window,
-                matching ``jax_cache.simulate(..., TelemetrySpec(W))`` exactly.
+                matching ``jax_cache.simulate(..., TelemetrySpec(W))`` exactly;
+                (S, n_windows, n_groups, N_METRICS) when grouped, matching
+                ``TelemetrySpec(W, n_groups)`` + the same ``groups`` catalogue.
     """
     if kind not in KERNEL_KINDS:
         raise ValueError(f"kind={kind!r} not in {KERNEL_KINDS}")
@@ -613,6 +715,12 @@ def cache_sim_pallas(
         raise ValueError("doorkeeper is a tinylfu-only option")
     if telemetry_window < 0:
         raise ValueError(f"telemetry_window must be >= 0, got {telemetry_window}")
+    if n_groups < 0:
+        raise ValueError(f"n_groups must be >= 0, got {n_groups}")
+    if n_groups and not telemetry_window:
+        raise ValueError("n_groups is a telemetry option: set telemetry_window")
+    if n_groups and groups is None:
+        raise ValueError("n_groups > 0 requires a groups catalogue")
     if capacity_bytes < 0:
         raise ValueError(f"capacity_bytes must be >= 0, got {capacity_bytes}")
     if capacity_bytes and kind not in BYTE_CAPABLE_KINDS:
@@ -660,6 +768,7 @@ def cache_sim_pallas(
         n_w_pad=n_w_pad,
         capacity_bytes=capacity_bytes,
         max_victims=max_victims,
+        n_groups=n_groups,
     )
     out_specs = [
         pl.BlockSpec((1, 1), lambda i: (i, 0)),
@@ -672,8 +781,9 @@ def cache_sim_pallas(
         jax.ShapeDtypeStruct((s, n_pad), jnp.int32),
     ]
     if telemetry_window:
-        out_specs.append(pl.BlockSpec((1, _TEL_ROWS, n_w_pad), lambda i: (i, 0, 0)))
-        out_shape.append(jax.ShapeDtypeStruct((s, _TEL_ROWS, n_w_pad), jnp.int32))
+        tel_rows = _TEL_ROWS * (n_groups or 1)
+        out_specs.append(pl.BlockSpec((1, tel_rows, n_w_pad), lambda i: (i, 0, 0)))
+        out_shape.append(jax.ShapeDtypeStruct((s, tel_rows, n_w_pad), jnp.int32))
     in_specs = [pl.BlockSpec((1, t), lambda i: (i, 0))]
     inputs = [traces.astype(jnp.int32)]
     if capacity_bytes or kind == "gdsf":
@@ -693,6 +803,17 @@ def cache_sim_pallas(
             )[None, :]
         in_specs.append(pl.BlockSpec((1, n_pad), lambda i: (0, 0)))
         inputs.append(sizes_row)
+    if telemetry_window and n_groups:
+        # grid-shared (1, n_pad) id -> group row; padding lanes get group 0 —
+        # harmless because padding ids are never requested, cached, or hot
+        g = jnp.asarray(groups, jnp.int32)
+        if g.shape != (n_objects,):
+            raise ValueError(f"groups must have shape ({n_objects},), got {g.shape}")
+        groups_row = jnp.concatenate(
+            [g, jnp.zeros((n_pad - n_objects,), jnp.int32)]
+        )[None, :]
+        in_specs.append(pl.BlockSpec((1, n_pad), lambda i: (0, 0)))
+        inputs.append(groups_row)
     out = pl.pallas_call(
         kernel,
         grid=(s,),
@@ -704,9 +825,16 @@ def cache_sim_pallas(
     hits, freq, cache = out[0], out[1], out[2]
     result = (hits[:, 0], freq[:, :n_objects], cache[:, :n_objects].astype(bool))
     if telemetry_window:
-        # (S, rows, w_pad) -> (S, n_windows, N_METRICS) in METRICS order
-        series = jnp.transpose(
-            out[3][:, : telemetry_spec.N_METRICS, :n_w], (0, 2, 1)
-        )
+        if n_groups:
+            # (S, 16G, w_pad) -> (S, G, 16, n_w) -> (S, n_w, G, N_METRICS)
+            raw = out[3][:, :, :n_w].reshape(s, n_groups, _TEL_ROWS, n_w)
+            series = jnp.transpose(
+                raw[:, :, : telemetry_spec.N_METRICS, :], (0, 3, 1, 2)
+            )
+        else:
+            # (S, rows, w_pad) -> (S, n_windows, N_METRICS) in METRICS order
+            series = jnp.transpose(
+                out[3][:, : telemetry_spec.N_METRICS, :n_w], (0, 2, 1)
+            )
         result = result + (series,)
     return result

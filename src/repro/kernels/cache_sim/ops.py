@@ -26,6 +26,7 @@ def _on_tpu() -> bool:
         "telemetry_window",
         "capacity_bytes",
         "max_victims",
+        "n_groups",
         "interpret",
     ),
 )
@@ -44,16 +45,19 @@ def cache_sim(
     capacity_bytes: int = 0,
     max_victims: int = 0,
     sizes=None,
+    n_groups: int = 0,
+    groups=None,
     interpret: bool | None = None,
 ):
     """Batched cache-policy simulation (see cache_sim_pallas for the contract).
 
     ``interpret`` defaults to True off-TPU so the same call validates on CPU
     and compiles natively on TPU. ``telemetry_window=W`` adds a fourth output
-    — the (S, n_windows, N_METRICS) windowed series of docs/observability.md.
-    ``capacity_bytes``/``max_victims`` are jit statics (they shape the
-    program); ``sizes`` is a traced (n_objects,) int32 array shared by all
-    samples.
+    — the (S, n_windows, N_METRICS) windowed series of docs/observability.md;
+    ``n_groups=G`` (with a ``groups`` catalogue) segments it per tenant group
+    into (S, n_windows, G, N_METRICS). ``capacity_bytes``/``max_victims``/
+    ``n_groups`` are jit statics (they shape the program); ``sizes`` and
+    ``groups`` are traced (n_objects,) int32 arrays shared by all samples.
     """
     if interpret is None:
         interpret = not _on_tpu()
@@ -71,6 +75,8 @@ def cache_sim(
         capacity_bytes=capacity_bytes,
         max_victims=max_victims,
         sizes=sizes,
+        n_groups=n_groups,
+        groups=groups,
         interpret=interpret,
     )
 

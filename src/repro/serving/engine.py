@@ -65,10 +65,12 @@ class ServeEngine:
         self.cache_len = cache_len
         self.content = content_cache
         self.telemetry = telemetry
-        #: per-request (hit, fill, evict, occupancy) outcomes, recorded when
-        #: telemetry is on; window_series() buckets them on the shared
-        #: repro.telemetry window semantics
-        self._outcomes: list[tuple[int, int, int, int]] = []
+        #: per-request (hit, fill, evict, occupancy, hit_bytes, miss_bytes)
+        #: outcomes, recorded when telemetry is on; window_series() buckets
+        #: them on the shared repro.telemetry window semantics. Byte columns
+        #: use the policy brain's size catalogue (unit fallback on unsized
+        #: caches), so sized engines report real byte-CHR, not counts.
+        self._outcomes: list[tuple[int, int, int, int, int, int]] = []
         self.stats = EngineStats()
         self._prefill = jax.jit(lambda p, b: model.prefill(p, b, cache_len))
         self._decode = jax.jit(model.decode_step)
@@ -99,12 +101,15 @@ class ServeEngine:
         (cache, pos, last_logits), skipped = self._prefill_state(req)
         if pre is not None:
             s = self.content.stats
+            sz = self.content.policy._size(req.obj_id)
             self._outcomes.append(
                 (
                     int(skipped),
                     int(s.inserts > pre[0]),
                     int(s.evictions > pre[1]),
                     len(self.content),
+                    sz * int(skipped),
+                    sz * int(not skipped),
                 )
             )
         out = []
@@ -131,7 +136,7 @@ class ServeEngine:
             raise ValueError("engine was built without telemetry=TelemetrySpec(...)")
         if not self._outcomes:
             raise ValueError("no requests served yet")
-        ev = np.asarray(self._outcomes, np.int64).T  # (4, T)
+        ev = np.asarray(self._outcomes, np.int64).T  # (6, T)
         return telemetry_spec.series_from_run(
             self.telemetry.window,
             ev.shape[1],
@@ -139,6 +144,8 @@ class ServeEngine:
             fills=ev[1],
             evictions=ev[2],
             occupancy=ev[3],
+            hit_bytes=ev[4],
+            miss_bytes=ev[5],
         )
 
     def report(self) -> dict:

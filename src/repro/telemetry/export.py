@@ -16,30 +16,48 @@ import numpy as np
 from repro.telemetry.spec import METRICS, N_METRICS
 
 
-def series_rows(series, window: int, *, labels=None, **tags) -> list[dict]:
+def series_rows(
+    series, window: int, *, labels=None, grouped=False, group_labels=None, **tags
+) -> list[dict]:
     """Flatten a ``[..., n_windows, N_METRICS]`` series into per-window dicts.
 
     Leading axes are flattened and enumerated as ``node`` (or named via
     ``labels``); ``tags`` (policy, scenario, level, ...) are copied into
     every row. ``t_start`` is the window's first trace position.
+
+    ``grouped=True`` reads the PR 8 group-segmented layout
+    ``[..., n_windows, n_groups, N_METRICS]`` instead and emits one row per
+    (node, window, group) with a ``group`` column (named via
+    ``group_labels``) — the shapes are otherwise ambiguous, so the caller
+    states which contract the array follows.
     """
     arr = np.asarray(series)
-    if arr.ndim < 2 or arr.shape[-1] != N_METRICS:
+    min_ndim = 3 if grouped else 2
+    if arr.ndim < min_ndim or arr.shape[-1] != N_METRICS:
         raise ValueError(
-            f"expected [..., n_windows, {N_METRICS}] series, got shape {arr.shape}"
+            f"expected [..., n_windows, {N_METRICS}] series"
+            + (" with a group axis" if grouped else "")
+            + f", got shape {arr.shape}"
         )
-    flat = arr.reshape(-1, arr.shape[-2], N_METRICS)
+    if grouped:
+        flat = arr.reshape(-1, arr.shape[-3], arr.shape[-2], N_METRICS)
+    else:
+        flat = arr.reshape(-1, arr.shape[-2], 1, N_METRICS)
+    n_groups = flat.shape[2]
     rows = []
     for node in range(flat.shape[0]):
         for w in range(flat.shape[1]):
-            row = dict(tags)
-            row["node"] = int(node) if labels is None else labels[node]
-            row["window"] = w
-            row["t_start"] = w * window
-            for m, name in enumerate(METRICS):
-                row[name] = int(flat[node, w, m])
-            row["chr"] = row["hits"] / row["requests"] if row["requests"] else 0.0
-            rows.append(row)
+            for g in range(n_groups):
+                row = dict(tags)
+                row["node"] = int(node) if labels is None else labels[node]
+                row["window"] = w
+                row["t_start"] = w * window
+                if grouped:
+                    row["group"] = int(g) if group_labels is None else group_labels[g]
+                for m, name in enumerate(METRICS):
+                    row[name] = int(flat[node, w, g, m])
+                row["chr"] = row["hits"] / row["requests"] if row["requests"] else 0.0
+                rows.append(row)
     return rows
 
 

@@ -29,6 +29,16 @@ axis is :data:`METRICS`, in order:
 Everything here is xp-generic (``xp=np`` for the oracle and exporters,
 ``xp=jnp`` inside the jitted scans) and shape-static, so the assembly folds
 into the jit at trace length known at compile time.
+
+PR 8 adds the *group axis*: :class:`TelemetrySpec(window, n_groups=G)` plus
+an id→group int32 catalogue (the ``sizes`` pattern; groups must lie in
+``[0, G)``) turns the series into ``[..., n_windows, n_groups, N_METRICS]``.
+Request-attributed metrics (requests/hits/misses/fills/offers/refreshes/
+bytes) land in the requesting object's group; ``evictions`` land in the
+*victim's* group and ``occupancy``/``hot_churn`` are per-group membership
+counts — the three series the scans emit extra per-step state for. Summing
+over the group axis reproduces the ungrouped series bit-for-bit, and
+``n_groups=0`` (the default) leaves every code path untouched.
 """
 from __future__ import annotations
 
@@ -58,13 +68,21 @@ class TelemetrySpec:
     """Static (hashable) telemetry configuration, folded into the jit as a
     static argument — one compiled program per (policy, window) pair, and
     *zero* overhead when the telemetry argument is None (the uninstrumented
-    scan is emitted verbatim, asserted bit-identical in tests)."""
+    scan is emitted verbatim, asserted bit-identical in tests).
+
+    ``n_groups=0`` (default) keeps the flat ``[..., n_windows, N_METRICS]``
+    layout; ``n_groups=G > 0`` segments every metric by an id→group
+    catalogue into ``[..., n_windows, G, N_METRICS]`` (tenant attribution).
+    """
 
     window: int
+    n_groups: int = 0
 
     def __post_init__(self):
         if self.window < 1:
             raise ValueError(f"telemetry window must be >= 1, got {self.window}")
+        if self.n_groups < 0:
+            raise ValueError(f"n_groups must be >= 0, got {self.n_groups}")
 
     def n_windows(self, trace_len: int) -> int:
         return n_windows(trace_len, self.window)
@@ -204,3 +222,135 @@ def series_from_run(
         ],
         axis=-1,
     )
+
+
+def group_onehot(groups, n_groups: int, xp=np):
+    """(N,) int group ids -> (N, n_groups) int32 one-hot. Ids outside
+    ``[0, n_groups)`` produce all-zero rows (they vanish from every group —
+    the group-sum identity requires ids in range)."""
+    g = xp.asarray(groups, dtype=xp.int32)
+    return (g[:, None] == xp.arange(n_groups, dtype=xp.int32)[None, :]).astype(
+        xp.int32
+    )
+
+
+def _gsum(events, og_t, window: int, xp):
+    """Group-scatter a per-step series then window it:
+    (..., T) x (T, G) -> (..., n_windows, G)."""
+    e = xp.asarray(events)
+    eg = e[..., :, None].astype(xp.int32) * og_t
+    return xp.swapaxes(bucket_sum(xp.swapaxes(eg, -1, -2), window, xp), -1, -2)
+
+
+def _gend(series_g, window: int, xp):
+    """End-of-window snapshot per group: (..., T, G) -> (..., n_windows, G)."""
+    s = xp.asarray(series_g)
+    return xp.swapaxes(bucket_end(xp.swapaxes(s, -1, -2), window, xp), -1, -2)
+
+
+def grouped_series_from_run(
+    window: int,
+    trace_len: int,
+    n_groups: int,
+    groups_t,
+    *,
+    hits,
+    fills,
+    evictions_g,
+    occupancy_g,
+    active=None,
+    offers=None,
+    aging=None,
+    fired=None,
+    churn_g=None,
+    hit_bytes=None,
+    miss_bytes=None,
+    chunk_len: int | None = None,
+    xp=np,
+):
+    """Group-segmented :func:`series_from_run`: bucket per-step events into
+    ``[..., n_windows, n_groups, N_METRICS]``.
+
+    ``groups_t`` is the (T,) int32 group id of each *trace position* (the
+    requested object's group) — request-attributed metrics (requests, hits,
+    misses, fills, offers, aging refreshes, hit/miss bytes) scatter along
+    it, so their group-sum trivially equals the ungrouped window sums.
+    ``evictions_g`` (..., T, n_groups) carries per-step *victim-group*
+    eviction counts and ``occupancy_g`` (..., T, n_groups) the per-group
+    cached-object counts — the two quantities a scan must emit per group
+    because the requester's group doesn't determine them. plfua_dyn chunk
+    events: ``fired`` stays per-chunk (..., n_chunks) and is attributed to
+    the group of the request that completed the period (trace position
+    ``(c+1)*chunk_len - 1``); ``churn_g`` (..., n_chunks, n_groups) carries
+    the per-group hot-mask symmetric difference.
+    """
+    W = window
+    G = n_groups
+    gt = xp.asarray(groups_t, dtype=xp.int32)
+    og_t = group_onehot(gt, G, xp)  # (T, G)
+    hits_wg = _gsum(hits, og_t, W, xp)
+    if active is None:
+        ones = xp.ones((trace_len,), xp.int32)
+        req_wg = xp.broadcast_to(_gsum(ones, og_t, W, xp), hits_wg.shape).astype(
+            xp.int32
+        )
+    else:
+        req_wg = _gsum(active, og_t, W, xp)
+    miss_wg = req_wg - hits_wg
+    fill_wg = _gsum(fills, og_t, W, xp)
+    evict_wg = xp.swapaxes(
+        bucket_sum(xp.swapaxes(xp.asarray(evictions_g), -1, -2), W, xp), -1, -2
+    )
+    offer_wg = miss_wg if offers is None else _gsum(offers, og_t, W, xp)
+    occ_wg = _gend(occupancy_g, W, xp)
+    hb_wg = hits_wg if hit_bytes is None else _gsum(hit_bytes, og_t, W, xp)
+    mb_wg = miss_wg if miss_bytes is None else _gsum(miss_bytes, og_t, W, xp)
+    zeros = xp.zeros(hits_wg.shape, xp.int32)
+    refr_wg = zeros
+    churn_wg = zeros
+    if aging is not None:
+        refr_wg = refr_wg + _gsum(aging, og_t, W, xp)
+    if fired is not None:
+        if chunk_len is None:
+            raise ValueError("chunk_len is required with fired/churn_g")
+        n_chunks = fired.shape[-1]
+        m = xp.asarray(chunk_window_matrix(n_chunks, chunk_len, trace_len, W))
+        pos = np.minimum(
+            (np.arange(n_chunks) + 1) * chunk_len - 1, trace_len - 1
+        )
+        cg = group_onehot(gt[xp.asarray(pos)], G, xp)  # (n_chunks, G)
+        fired_cg = xp.asarray(fired).astype(xp.int32)[..., :, None] * cg
+        refr_wg = refr_wg + xp.einsum("...cg,cw->...wg", fired_cg, m)
+        churn_wg = churn_wg + xp.einsum(
+            "...cg,cw->...wg", xp.asarray(churn_g).astype(xp.int32), m
+        )
+    return xp.stack(
+        [
+            req_wg,
+            hits_wg,
+            miss_wg,
+            fill_wg,
+            evict_wg,
+            offer_wg,
+            occ_wg,
+            refr_wg,
+            churn_wg,
+            hb_wg,
+            mb_wg,
+        ],
+        axis=-1,
+    )
+
+
+def windowed_pressure(window: int, groups_t, evictions_g, xp=np):
+    """Eviction pressure: (..., T, G) per-step victim-group eviction counts
+    -> (..., n_windows, G) counting only victims whose group differs from
+    the *requesting* group at that step — evictions of a tenant's objects
+    triggered by other tenants' fills. Summed with same-group evictions it
+    reproduces the grouped ``evictions`` metric."""
+    ev = xp.asarray(evictions_g)
+    gt = xp.asarray(groups_t, dtype=xp.int32)
+    G = ev.shape[-1]
+    cross = (gt[:, None] != xp.arange(G, dtype=xp.int32)[None, :]).astype(xp.int32)
+    p = ev * cross  # (..., T, G)
+    return xp.swapaxes(bucket_sum(xp.swapaxes(p, -1, -2), window, xp), -1, -2)

@@ -72,7 +72,10 @@ def j_per_step(cpu_seconds: float, steps: int) -> float:
     return energy.mgmt_energy_j(cpu_seconds) / steps
 
 
-def measure(fn, *args, steps: int, static=(), repeats: int = 3, warmup: int = 1, **kwargs) -> Timing:
+def measure(
+    fn, *args, steps: int, static=(), repeats: int = 3, warmup: int = 1,
+    profile_dir=None, **kwargs
+) -> Timing:
     """Measure ``fn(*args, **kwargs)`` with compile/execute separation.
 
     For a jitted ``fn`` the AOT path (``lower(...).compile()``) isolates
@@ -80,6 +83,12 @@ def measure(fn, *args, steps: int, static=(), repeats: int = 3, warmup: int = 1,
     which no longer takes the static arguments, so ``static`` lists their
     positional indices (keyword arguments are assumed static and baked in).
     Plain callables are timed the same way with ``compile_s = 0``.
+
+    ``profile_dir``: when set, one extra (untimed) call runs inside
+    ``jax.profiler.trace(profile_dir)`` *after* the timed repeats, writing a
+    TensorBoard-loadable device trace next to the numbers it explains. The
+    capture never pollutes the timing — profiling overhead stays outside
+    the clock.
     """
     if steps < 1:
         raise ValueError(f"steps must be >= 1, got {steps}")
@@ -100,6 +109,9 @@ def measure(fn, *args, steps: int, static=(), repeats: int = 3, warmup: int = 1,
         t0 = time.perf_counter()
         jax.block_until_ready(call())
         times.append(time.perf_counter() - t0)
+    if profile_dir is not None:
+        with jax.profiler.trace(str(profile_dir)):
+            jax.block_until_ready(call())
     return Timing(
         steps=int(steps),
         repeats=len(times),

@@ -34,6 +34,7 @@ from repro.workloads.generators import (
     multi_tenant,
     object_sizes,
     stationary,
+    tenant_groups,
 )
 
 __all__ = [
@@ -48,6 +49,7 @@ __all__ = [
     "flash_crowd",
     "diurnal",
     "multi_tenant",
+    "tenant_groups",
     "object_sizes",
 ]
 

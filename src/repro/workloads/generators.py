@@ -24,6 +24,7 @@ __all__ = [
     "flash_crowd",
     "diurnal",
     "multi_tenant",
+    "tenant_groups",
     "object_sizes",
     "SIZE_DISTS",
 ]
@@ -249,3 +250,17 @@ def multi_tenant(
             if cnt:
                 out[s, mask] = offsets[t] + _sample_ranks(rng, int(sizes[t]), cnt, alpha)
     return out
+
+
+def tenant_groups(n_objects: int, n_tenants: int = 4) -> np.ndarray:
+    """The id -> tenant catalogue matching :func:`multi_tenant`'s block map:
+    object id ``i`` belongs to the tenant whose contiguous block contains it
+    (same block sizes, same remainder distribution). ``(n_objects,)`` int32
+    in ``[0, n_tenants)`` — the ``groups`` argument of the group-segmented
+    telemetry tiers (``TelemetrySpec(window, n_groups=n_tenants)``)."""
+    if n_tenants < 1 or n_tenants > n_objects:
+        raise ValueError(f"need 1 <= n_tenants <= n_objects, got {n_tenants}")
+    block = n_objects // n_tenants
+    sizes = np.full(n_tenants, block, np.int64)
+    sizes[: n_objects - block * n_tenants] += 1  # distribute the remainder
+    return np.repeat(np.arange(n_tenants, dtype=np.int32), sizes)

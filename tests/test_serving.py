@@ -295,3 +295,49 @@ def test_fleet_cache_topology_payload_consistency():
     # an object the 2-slot edges evicted long ago survives at the LRU root
     assert fc.lookup(20) == "p20"
     assert fc.parent_fills > 0
+
+
+def test_engine_sized_window_series_roundtrip(tiny_engine):
+    """PR 8 satellite: a sized content cache must report *real* byte traffic
+    in window_series — hit_bytes/miss_bytes from the policy's size catalogue,
+    not the unit fallback's hit/miss counts."""
+    from repro.telemetry import TelemetrySpec
+    from repro.telemetry.spec import METRIC_INDEX
+
+    model, params = tiny_engine
+    n_objects = 20
+    sizes = np.arange(2, 2 + n_objects, dtype=np.int64)  # no unit sizes at all
+    reqs = _requests(n_objects=n_objects, n_requests=30, seed=11)
+    eng = ServeEngine(
+        model, params, cache_len=16,
+        content_cache=ContentCache(
+            capacity=8, policy="gdsf", n_objects=n_objects,
+            sizes=sizes, capacity_bytes=64,
+        ),
+        telemetry=TelemetrySpec(8),
+    )
+    eng.run(reqs)
+    series = eng.window_series()
+    req_w = series[:, METRIC_INDEX["requests"]]
+    hit_w = series[:, METRIC_INDEX["hits"]]
+    hb_w = series[:, METRIC_INDEX["hit_bytes"]]
+    mb_w = series[:, METRIC_INDEX["miss_bytes"]]
+    assert req_w.sum() == len(reqs)
+    # byte columns carry the catalogue's sizes: every request weighs >= 2,
+    # so totals strictly exceed the unit-fallback counts ...
+    assert hb_w.sum() >= 2 * hit_w.sum() and hb_w.sum() > hit_w.sum() > 0
+    assert mb_w.sum() > (req_w - hit_w).sum()
+    # ... and the per-request ledger balances exactly
+    total_bytes = sum(int(sizes[r.obj_id]) for r in reqs)
+    assert int(hb_w.sum() + mb_w.sum()) == total_bytes
+    # the unsized engine keeps the unit fallback (hit_bytes == hits)
+    eng_u = ServeEngine(
+        model, params, cache_len=16,
+        content_cache=ContentCache(capacity=8, policy="plfu", n_objects=n_objects),
+        telemetry=TelemetrySpec(8),
+    )
+    eng_u.run(reqs)
+    s_u = eng_u.window_series()
+    np.testing.assert_array_equal(
+        s_u[:, METRIC_INDEX["hit_bytes"]], s_u[:, METRIC_INDEX["hits"]]
+    )
