@@ -13,6 +13,9 @@ classes:
   i.e. 50%) is a regression. Wall-clock on shared CI runners is noisy, which
   is why the default is generous and why ``benchmarks.run --compare`` is
   report-only unless ``--strict`` is passed.
+* **coverage** — a baseline row absent from the current run is itself a
+  regression (PR 9): a vanished benchmark must not pass silently. Compare
+  against a baseline recorded from the same ``--only`` group set.
 
 Usable standalone::
 
@@ -63,9 +66,11 @@ def compare(
 ) -> tuple[list[str], list[str]]:
     """Return ``(regressions, notes)`` — human-readable comparison lines.
 
-    Only rows (and metrics) present on *both* sides are compared, so adding
-    groups or derived fields never trips the gate; removed rows are listed in
-    notes so a silently-dropped benchmark is still visible.
+    Only metrics present on *both* sides of a row are compared, so adding
+    groups or derived fields never trips the gate. A baseline row *absent*
+    from the current run is a regression (PR 9; previously only noted): a
+    silently-vanished benchmark is exactly the failure a trail gate exists
+    to catch, and it fails the run under ``--strict`` like any other line.
     """
     base_rows, cur_rows = _rows_by_name(baseline), _rows_by_name(current)
     regressions: list[str] = []
@@ -73,8 +78,10 @@ def compare(
     common = [n for n in base_rows if n in cur_rows]
     missing = [n for n in base_rows if n not in cur_rows]
     if missing:
-        notes.append(f"{len(missing)} baseline row(s) absent from current run: "
-                     + ", ".join(sorted(missing)[:8]) + ("..." if len(missing) > 8 else ""))
+        regressions.append(
+            f"{len(missing)} baseline row(s) absent from current run: "
+            + ", ".join(sorted(missing)[:8]) + ("..." if len(missing) > 8 else "")
+        )
     for name in common:
         b, c = base_rows[name], cur_rows[name]
         bm = parse_metrics(b.get("derived", ""))

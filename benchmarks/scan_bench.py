@@ -1,0 +1,118 @@
+"""Scan-resistance benchmarks (PR 9): the adversarial ``scan`` scenario
+against the recency/frequency baselines and the ghost-list defenders.
+
+A scan sweep is a one-touch sequential walk over cold ids — the canonical
+workload that flushes an LRU cache and poisons an LFU sketch while carrying
+zero reuse. These groups put the defence on the perf trail:
+
+  * ``cache_scan`` — flat jitted cache, {lru, lfu, arc, doorkeeper'd
+    tinylfu} on the scan trace and on its stationary base: overall CHR on
+    both plus the scan-induced drop. The arc row is the scan-resistance
+    acceptance evidence (arc >= lru/lfu + 0.05 absolute CHR on scan, the
+    margin pinned by tests/test_arc.py::test_scan_resistance_regression).
+  * ``fleet_scan``  — 3-tier fleet of the same kinds under scan: per-level
+    and total CHR, steps/sec and management energy (does edge-level scan
+    resistance survive hierarchical demand filtering?).
+
+The reduced-scale configuration mirrors tests/test_arc.py's regression
+constants (n=600, cap=30, 3x12k requests, seed 33, 6 sweeps of 6%) so the
+recorded BENCH_PR9.json rows and the pinned test thresholds describe the
+same experiment. Rows follow the repo convention ``name,us_per_call,derived``.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro import fleet, telemetry, workloads
+from repro.core import jax_cache
+
+#: (kind, PolicySpec extras) — recency baseline, frequency baseline, and the
+#: two scan-resistant designs (ARC ghost lists / TinyLFU bloom doorkeeper)
+SCAN_KINDS = (
+    ("lru", {}),
+    ("lfu", {}),
+    ("arc", {}),
+    ("tinylfu", {"doorkeeper": 256}),
+)
+
+SCAN_KW = dict(n_sweeps=6, sweep_len_frac=0.06)
+
+
+def _label(kind: str, extras: dict) -> str:
+    return kind if not extras else kind + "+" + ",".join(f"{k}{v}" for k, v in extras.items())
+
+
+def cache_scan_sweep(full: bool = False):
+    """Flat cache on scan vs its stationary base: CHR + the scan drop."""
+    n, cap = (6_000, 300) if full else (600, 30)
+    samples, tlen = (8, 50_000) if full else (3, 12_000)
+    seed = 33
+    traces = {
+        scenario: workloads.make_traces(
+            scenario, n, n_samples=samples, trace_len=tlen, seed=seed,
+            **(SCAN_KW if scenario == "scan" else {}),
+        )
+        for scenario in ("scan", "stationary")
+    }
+    rows = []
+    for kind, extras in SCAN_KINDS:
+        spec = jax_cache.PolicySpec(kind=kind, n_objects=n, capacity=cap, **extras)
+        tr = telemetry.measure(
+            jax_cache.simulate_batch, spec, traces["scan"],
+            static=(0,), steps=traces["scan"].size,
+        )
+        chrs = {
+            scenario: float(np.asarray(jax_cache.simulate_batch(spec, t)).mean())
+            for scenario, t in traces.items()
+        }
+        rows.append(
+            (
+                f"cache_scan/{_label(kind, extras)}",
+                tr.us_per_step,
+                f"steps_per_s={tr.steps_per_s:.0f} chr={chrs['scan']:.4f} "
+                f"stationary_chr={chrs['stationary']:.4f} "
+                f"scan_cost={chrs['stationary'] - chrs['scan']:.4f}",
+            )
+        )
+    return rows
+
+
+def fleet_scan_sweep(full: bool = False):
+    """3-tier fleet of each scan kind under the scan workload."""
+    n, edge_cap = (6_000, 300) if full else (600, 30)
+    samples, tlen = (8, 50_000) if full else (3, 12_000)
+    traces = workloads.make_traces(
+        "scan", n, n_samples=samples, trace_len=tlen, seed=33, **SCAN_KW
+    )
+    rows = []
+    for kind, extras in SCAN_KINDS:
+        topo = fleet.tree(
+            n_objects=n,
+            widths=(4, 2, 1),
+            kinds=kind,
+            capacities=(edge_cap, 4 * edge_cap, 8 * edge_cap),
+            **extras,
+        )
+        assign = topo.assignment(traces)
+        tr = telemetry.measure(
+            fleet.simulate_fleet_batch, topo, traces, assign,
+            static=(0,), steps=traces.size,
+        )
+        out = fleet.simulate_fleet_batch(topo, traces, assign)
+        rep = fleet.fleet_report(topo, out)
+        rows.append(
+            (
+                f"fleet_scan/{_label(kind, extras)}",
+                tr.us_per_step,
+                f"steps_per_s={tr.steps_per_s:.0f} edge_chr={rep.edge_chr:.4f} "
+                f"total_chr={rep.total_chr:.4f} origin={rep.origin_requests} "
+                f"mgmt_J={rep.mgmt_energy_j:.4f}",
+            )
+        )
+    return rows
+
+
+ALL = {
+    "cache_scan": cache_scan_sweep,
+    "fleet_scan": fleet_scan_sweep,
+}

@@ -72,6 +72,10 @@ class PolicySpec:
             raise ValueError("doorkeeper is a tinylfu-only option")
         if self.capacity_bytes < 0:
             raise ValueError(f"capacity_bytes must be >= 0, got {self.capacity_bytes}")
+        if self.kind == "arc" and self.capacity_bytes:
+            # the T1/T2 balance target p is defined in object slots; a byte
+            # budget has no analogue (mirrors the reference ARCCache raise)
+            raise ValueError("arc does not support byte-capacity mode")
         if self.max_victims < 0:
             raise ValueError(f"max_victims must be >= 0, got {self.max_victims}")
         if self.max_victims and not self.capacity_bytes:
@@ -130,6 +134,14 @@ def init_state(spec: PolicySpec) -> dict[str, jax.Array]:
     }
     if spec.kind == "lru":
         state["last"] = jnp.zeros((n,), jnp.int32)
+        state["t"] = jnp.zeros((), jnp.int32)
+    elif spec.kind == "arc":
+        # per-object list membership (0=unlisted 1=T1 2=T2 3=B1 4=B2) and an
+        # entry stamp: the LRU of a list is its min-stamp member (within one
+        # list stamps are unique — at most one object joins a list per step)
+        state["lst"] = jnp.zeros((n,), jnp.int32)
+        state["stamp"] = jnp.zeros((n,), jnp.int32)
+        state["p"] = jnp.zeros((), jnp.int32)  # adaptive T1 size target
         state["t"] = jnp.zeros((), jnp.int32)
     else:
         state["freq"] = jnp.zeros((n,), jnp.int32)
@@ -296,6 +308,75 @@ def step(
         last = last.at[x].set(t)
         count = count + insert.astype(jnp.int32) - need_evict.astype(jnp.int32)
         return dict(in_cache=in_cache, count=count, last=last, t=t + 1), hit
+
+    if spec.kind == "arc":
+        # Branch-free ARC mirroring policies.ARCCache case for case. Every
+        # list operation is a masked write on the (lst, stamp) pair; list
+        # sizes are mask sums, LRUs are masked stamp argmins.
+        lst, stamp, p, t = state["lst"], state["stamp"], state["p"], state["t"]
+        lx = lst[x]
+        hit = (lx == 1) | (lx == 2)
+        g1 = lx == 3
+        g2 = lx == 4
+        ghost = g1 | g2
+        cold = lx == 0
+        t1n = (lst == 1).sum().astype(jnp.int32)
+        t2n = (lst == 2).sum().astype(jnp.int32)
+        b1n = (lst == 3).sum().astype(jnp.int32)
+        b2n = (lst == 4).sum().astype(jnp.int32)
+        total = t1n + t2n + b1n + b2n
+        # adaptation (ghost hits only, filled or not): a B1 hit grows the
+        # recency target p, a B2 hit shrinks it — integer deltas
+        d1 = jnp.maximum(1, b2n // jnp.maximum(1, b1n))
+        d2 = jnp.maximum(1, b1n // jnp.maximum(1, b2n))
+        p = jnp.where(
+            g1, jnp.minimum(cap, p + d1), jnp.where(g2, jnp.maximum(0, p - d2), p)
+        )
+        # Case IV ghost trimming (cold misses only). Filled: IV(a) drops the
+        # LRU of B1 when the recency side T1+B1 is at capacity (B1 empty ->
+        # hard-drop T1's LRU instead, no ghost left behind), IV(b) drops the
+        # LRU of B2 when the directory holds 2c entries. Unfilled: the same
+        # trims make room to park x in B1, but a trim that would need a
+        # *resident* eviction (IV(a) with B1 empty) skips parking entirely.
+        caseA = cold & (t1n + b1n >= cap)
+        hard_t1 = caseA & (b1n == 0) & fill
+        park_skip = caseA & (b1n == 0) & (~fill)
+        gone_b1 = caseA & (b1n > 0)
+        gone_b2 = cold & (~caseA) & (total >= 2 * cap) & (b2n > 0)
+        b1_lru = _masked_argmin(stamp, lst == 3)
+        b2_lru = _masked_argmin(stamp, lst == 4)
+        lst = lst.at[b1_lru].set(jnp.where(gone_b1, 0, lst[b1_lru]))
+        lst = lst.at[b2_lru].set(jnp.where(gone_b2, 0, lst[b2_lru]))
+        # REPLACE: a filled miss about to insert into a full cache demotes
+        # the LRU of T1 (when |T1| > p, or == p on a B2 hit, or T2 is empty)
+        # to B1's MRU, else T2's LRU to B2's MRU. Flat ARC is provably full
+        # whenever it replaces, so the fullness guard is bit-neutral there;
+        # under placement gating it stops evictions out of a non-full cache.
+        need_evict = fill & (~hit) & (~hard_t1) & (t1n + t2n >= cap)
+        from_t1 = (t1n >= 1) & ((g2 & (t1n == p)) | (t1n > p) | (t2n == 0))
+        t1_lru = _masked_argmin(stamp, lst == 1)
+        t2_lru = _masked_argmin(stamp, lst == 2)
+        victim = jnp.where(hard_t1 | from_t1, t1_lru, t2_lru)
+        evict = need_evict | hard_t1
+        vdst = jnp.where(hard_t1, 0, jnp.where(from_t1, 3, 4))
+        lst = lst.at[victim].set(jnp.where(evict, vdst, lst[victim]))
+        stamp = stamp.at[victim].set(jnp.where(need_evict, t, stamp[victim]))
+        # x's destination: any hit and every filled ghost hit land at T2's
+        # MRU, a filled cold miss at T1's MRU; an unfilled ghost hit refreshes
+        # in place (parked demand) and an unfilled cold miss parks in B1
+        dst = jnp.where(
+            hit | (ghost & fill),
+            2,
+            jnp.where(cold & fill, 1, jnp.where(ghost, lx, 3)),
+        )
+        write_x = ~park_skip
+        lst = lst.at[x].set(jnp.where(write_x, dst, lst[x]))
+        stamp = stamp.at[x].set(jnp.where(write_x, t, stamp[x]))
+        in_cache = (lst == 1) | (lst == 2)
+        count = in_cache.sum().astype(jnp.int32)
+        return dict(
+            in_cache=in_cache, count=count, lst=lst, stamp=stamp, p=p, t=t + 1
+        ), hit
 
     if spec.kind == "tinylfu":
         # sketch first (add, then age), exactly as TinyLFUCache.request does
@@ -709,6 +790,9 @@ def metadata_entries(spec: PolicySpec, state: dict[str, jax.Array]) -> jax.Array
     """Live metadata entries, matching CachePolicy.metadata_entries semantics."""
     if spec.kind == "lru":
         return state["count"]
+    if spec.kind == "arc":
+        # residents (T1+T2) plus ghosts (B1+B2): the full ARC directory
+        return (state["lst"] != 0).sum()
     if spec.kind == "wlfu":
         return (state["freq"] > 0).sum() + state["count"]
     if spec.kind == "lfu":

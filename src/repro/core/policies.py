@@ -27,6 +27,13 @@ Implemented policies:
                ratchets to each evicted victim's priority; evicted objects
                park their frequency (ghost entries), like PLFU.
 
+  * ARC      — Adaptive Replacement Cache [Megiddo & Modha 2003]: two
+               resident lists (T1 recency, T2 frequency) plus two ghost
+               lists (B1/B2) remembering recent evictions; an integer target
+               ``p`` adapts the T1/T2 split towards whichever ghost list is
+               being re-requested. Scan-resistant: one-touch sweeps churn
+               only T1 while the re-referenced working set survives in T2.
+
 All frequency policies break eviction ties by lowest object id, and all are
 "implemented in the same manner" (paper §1.1): dict metadata + a lazy min-heap
 for eviction, so CPU-time comparisons between them are apples-to-apples.
@@ -63,6 +70,7 @@ __all__ = [
     "TinyLFUCache",
     "DynamicPLFUACache",
     "GDSFCache",
+    "ARCCache",
     "make_policy",
     "POLICY_NAMES",
     "GDSF_SHIFT",
@@ -714,6 +722,136 @@ class GDSFCache(CachePolicy):
         return len(self._freq) + len(self._parked)
 
 
+class ARCCache(CachePolicy):
+    """Adaptive Replacement Cache [Megiddo & Modha 2003, FAST'03].
+
+    Four lists over the id space, pairwise disjoint:
+
+      * T1 — residents seen exactly once recently (recency side)
+      * T2 — residents seen at least twice (frequency side)
+      * B1 — ghosts of objects evicted from T1 (metadata only)
+      * B2 — ghosts of objects evicted from T2
+
+    Invariants (property-tested in tests/test_arc.py): ``|T1|+|T2| <= c``,
+    ``|T1|+|B1| <= c``, ``|T1|+|T2|+|B1|+|B2| <= 2c``, ``0 <= p <= c``.
+    The adaptation target ``p`` is the desired size of T1: a hit in B1
+    (evicted-from-recency demand) grows it, a hit in B2 shrinks it, with
+    the classic integer deltas ``max(1, |B_other| // |B_hit|)``.
+
+    Placement-gated misses (``fill=False``) park *ghost* metadata only: a
+    ghost hit still adapts ``p`` and refreshes the ghost to MRU; a cold miss
+    enters B1 as a ghost (trimming other ghosts, never residents — a parking
+    that would require a resident eviction is skipped). Flat runs
+    (``fill=True`` throughout) are exactly textbook ARC.
+
+    REPLACE's eviction is additionally gated on the cache actually being
+    full — in flat ARC the cache is provably full whenever REPLACE runs, so
+    the guard is bit-neutral there, and under placement gating it stops a
+    ghost-hit promotion from evicting out of a half-empty cache.
+
+    Byte-capacity mode is not supported (the T1/T2 balance point ``p`` is
+    defined in object slots); the constructor rejects ``capacity_bytes``.
+    """
+
+    name = "arc"
+
+    def __init__(self, capacity: int, **kw):
+        super().__init__(capacity, **kw)
+        if self.capacity_bytes:
+            raise ValueError("arc does not support byte-capacity mode")
+        self._t1: OrderedDict[int, None] = OrderedDict()
+        self._t2: OrderedDict[int, None] = OrderedDict()
+        self._b1: OrderedDict[int, None] = OrderedDict()
+        self._b2: OrderedDict[int, None] = OrderedDict()
+        self.p = 0
+
+    def _replace(self, in_b2: bool) -> None:
+        """Demote the LRU of T1 or T2 to the MRU of its ghost list.
+
+        Evicts from T1 when ``|T1| > p`` (or ``|T1| == p`` on a B2 hit, or
+        T2 is empty), else from T2 — the textbook rule, guarded on fullness
+        so placement-parked states never evict below a full cache."""
+        t1, t2 = self._t1, self._t2
+        if len(t1) + len(t2) < self.capacity:
+            return
+        t1n = len(t1)
+        from_t1 = t1n >= 1 and (
+            (in_b2 and t1n == self.p) or t1n > self.p or not t2
+        )
+        if from_t1:
+            victim, _ = t1.popitem(last=False)
+            self._b1[victim] = None
+        else:
+            victim, _ = t2.popitem(last=False)
+            self._b2[victim] = None
+        self.bytes -= self._size(victim)
+        self.evictions += 1
+
+    def request(self, x: int, fill: bool = True) -> bool:
+        t1, t2, b1, b2 = self._t1, self._t2, self._b1, self._b2
+        c = self.capacity
+        if x in t1 or x in t2:  # Case I: resident hit -> MRU of T2
+            self.hits += 1
+            (t1 if x in t1 else t2).pop(x)
+            t2[x] = None
+            return True
+        self.misses += 1
+        in_b1, in_b2 = x in b1, x in b2
+        if in_b1 or in_b2:  # Case II/III: ghost hit
+            if in_b1:
+                self.p = min(c, self.p + max(1, len(b2) // max(1, len(b1))))
+            else:
+                self.p = max(0, self.p - max(1, len(b1) // max(1, len(b2))))
+            if not fill:
+                # parked demand: p adapted above; the ghost refreshes to MRU
+                g = b1 if in_b1 else b2
+                g.pop(x)
+                g[x] = None
+                return False
+            self._replace(in_b2)
+            (b1 if in_b1 else b2).pop(x)
+            t2[x] = None
+            self.bytes += self._size(x)
+            return False
+        # Case IV: cold miss
+        if not fill:
+            # park x as a B1 ghost, trimming ghosts only (never residents)
+            if len(t1) + len(b1) >= c:
+                if not b1:
+                    return False  # trimming would need a resident eviction
+                b1.popitem(last=False)
+            elif len(t1) + len(t2) + len(b1) + len(b2) >= 2 * c and b2:
+                b2.popitem(last=False)
+            b1[x] = None
+            return False
+        if len(t1) + len(b1) >= c:  # Case IV(a): recency side at capacity
+            if b1:
+                b1.popitem(last=False)
+                self._replace(False)
+            else:
+                # T1 itself holds c residents: hard-drop its LRU, no ghost
+                victim, _ = t1.popitem(last=False)
+                self.bytes -= self._size(victim)
+                self.evictions += 1
+        else:  # Case IV(b)
+            total = len(t1) + len(t2) + len(b1) + len(b2)
+            if total >= c:
+                if total >= 2 * c and b2:
+                    b2.popitem(last=False)
+                self._replace(False)
+        t1[x] = None
+        self.bytes += self._size(x)
+        return False
+
+    def contains(self, x: int) -> bool:
+        return x in self._t1 or x in self._t2
+
+    @property
+    def metadata_entries(self) -> int:
+        """Residents + ghosts: ARC's metadata footprint is up to 2c entries."""
+        return len(self._t1) + len(self._t2) + len(self._b1) + len(self._b2)
+
+
 POLICY_NAMES = registry.names(reference=True)
 
 
@@ -763,4 +901,6 @@ def make_policy(
         )
     if name == "gdsf":
         return GDSFCache(capacity, n_objects=n_objects, **bkw)
+    if name == "arc":
+        return ARCCache(capacity, **bkw)
     raise ValueError(f"unknown policy {name!r}; expected one of {POLICY_NAMES}")

@@ -78,6 +78,7 @@ POLICIES: tuple[PolicyInfo, ...] = (
     PolicyInfo("tinylfu", True, True, True, sketch=True, description="sketch-vs-victim admission over LFU eviction (optional doorkeeper bloom front)", options=("window", "sketch_width", "doorkeeper")),
     PolicyInfo("plfua_dyn", True, True, True, sketch=True, description="PLFUA with sketch-refreshed hot set", options=("hot_size", "refresh", "sketch_width")),
     PolicyInfo("gdsf", True, True, True, size_aware=True, description="GreedyDual-Size-Frequency: score = L + freq/size with a global aging credit L ratcheted to each evicted victim's score", options=("capacity_bytes", "max_victims")),
+    PolicyInfo("arc", True, True, True, description="Adaptive Replacement Cache: T1/T2 residents + B1/B2 ghost lists with an adaptive recency/frequency target p (byte-capacity mode unsupported)"),
 )
 
 _BY_NAME = {p.name: p for p in POLICIES}

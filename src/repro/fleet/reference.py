@@ -75,6 +75,8 @@ def build_policy(spec: PolicySpec, sizes=None) -> policies.CachePolicy:
         )
     if spec.kind == "gdsf":
         return policies.GDSFCache(spec.capacity, n_objects=spec.n_objects, **bkw)
+    if spec.kind == "arc":
+        return policies.ARCCache(spec.capacity, **bkw)
     raise ValueError(f"no reference policy for kind {spec.kind!r}")
 
 
@@ -99,6 +101,8 @@ def cache_count(pol: policies.CachePolicy) -> int:
         return len(pol._plfu._freq)
     if isinstance(pol, policies.WLFUCache):
         return len(pol._cache)
+    if isinstance(pol, policies.ARCCache):
+        return len(pol._t1) + len(pol._t2)
     return len(pol._freq)  # the _HeapLFUBase family
 
 
@@ -117,6 +121,12 @@ def peek_victim(pol: policies.CachePolicy) -> int:
     if isinstance(pol, policies.GDSFCache):
         s = pol._score
         return min(s, key=lambda o: (s[o], o))
+    if isinstance(pol, policies.ARCCache):
+        # the LRU of the list REPLACE would demote, under the jitted tier's
+        # x-independent pre-state pick (the |T1| == p B2-hit tiebreak is
+        # dropped — see fleet.sim._victim_key); OrderedDict front == list LRU
+        prefer_t1 = len(pol._t1) > pol.p or not pol._t2
+        return next(iter(pol._t1 if prefer_t1 else pol._t2))
     f = pol._freq
     return min(f, key=lambda o: (f[o], o))
 

@@ -109,6 +109,10 @@ _REQ_OPS = {
     # GDSF touches freq + score dicts and pushes the recomputed priority on
     # every request (the L + freq/size ratchet), one touch more than plain lfu
     "gdsf": 4.0,
+    # ARC probes the four-list directory, moves the id to its target list's
+    # MRU, and adjusts p / trims a ghost on the miss path — list moves are
+    # O(1), so it prices like lru plus the extra directory bookkeeping touch
+    "arc": 4.0,
 }
 #: extra touches per *admitted* request (the PLFUA family meters metadata work
 #: only for the hot set — that asymmetry is the paper's §4 energy argument).

@@ -347,6 +347,16 @@ def _victim_key(spec: PolicySpec, state):
         return state["last"]
     if spec.kind == "gdsf":
         return state["score"]
+    if spec.kind == "arc":
+        # ARC's candidate is the LRU of the list REPLACE would demote. The
+        # pre-state pick drops the x-dependent tiebreak (|T1| == p on a B2
+        # ghost hit): like wlfu's slide, the duel's candidate can then differ
+        # from the step's victim in that corner — same pick in the oracle.
+        lst = state["lst"]
+        t1n = (lst == 1).sum().astype(jnp.int32)
+        t2n = (lst == 2).sum().astype(jnp.int32)
+        pref = jnp.where((t1n > state["p"]) | (t2n == 0), 1, 2)
+        return jnp.where(lst == pref, state["stamp"], jax_cache._I32_MAX)
     return state["freq"]
 
 

@@ -1,4 +1,4 @@
-"""Pallas TPU kernel: VMEM-resident cache-policy simulation — all 7 kinds.
+"""Pallas TPU kernel: VMEM-resident cache-policy simulation — all 9 kinds.
 
 The paper's experiment is 60 cases x 12 samples = 720 independent simulations
 of a 100k-request trace. On TPU we map samples (same-shape sims) to the Pallas
@@ -43,6 +43,15 @@ size 1) and one insertion runs a bounded multi-victim eviction loop — at most
 decision. ``wlfu``/``tinylfu`` under a byte budget are a JAX-scan-only
 combination (``cache_sim_pallas`` raises).
 
+PR 9: the ``arc`` kind. The four ARC lists live as one (1, n_pad) ``lst``
+row (0 = untracked, 1 = T1, 2 = T2, 3 = B1, 4 = B2) plus a ``stamp`` row of
+last-touch times: list sizes are lane-sums over ``lst == L``, each list's LRU
+is a masked argmin over ``stamp``, and the adaptation target ``p`` is a
+scalar carry — the same encoding as the jitted scan, decision for decision.
+The final ``stamp`` row ships through the ``freq`` output slot (exactly like
+lru's recency stamps) and ``(lst == 1) | (lst == 2)`` through the cache mask.
+``arc`` under a byte budget is unsupported everywhere (the spec raises).
+
 PR 8: group-segmented telemetry. With ``n_groups=G`` (static) and a
 grid-shared id -> group catalogue row, the windowed accumulator stacks one
 16-row metric block per group (row = g*16 + m): request-attributed metrics
@@ -79,7 +88,10 @@ _GDSF_SHIFT = registry.GDSF_SHIFT
 
 #: byte-capacity on the Pallas tier covers the base-step family; the ring/
 #: sketch-admission kinds under a byte budget are a JAX-scan-only combination
-BYTE_CAPABLE_KINDS = tuple(k for k in KERNEL_KINDS if k not in ("wlfu", "tinylfu"))
+#: and arc rejects byte mode in every tier (see PolicySpec / ARCCache)
+BYTE_CAPABLE_KINDS = tuple(
+    k for k in KERNEL_KINDS if k not in ("wlfu", "tinylfu", "arc")
+)
 
 # telemetry output rows: METRICS padded up to a TPU-friendly sublane count
 _TEL_ROWS = 16
@@ -555,6 +567,78 @@ def _cache_sim_kernel(
         )
         return out + (tel,) if TEL else out
 
+    def arc_step(t, carry):
+        """Branch-free ARC, mirroring ``jax_cache.step`` lane for lane. The
+        carry is (stamp, in_cache, count, hits, lst, p): ``stamp`` rides in
+        the freq slot of the shared epilogue and ``in_cache`` is re-derived
+        from ``lst`` every step so the standard (freq, in_cache, count, hits)
+        prefix holds. The kernel is the flat cache (no placement gating), so
+        the jitted scan's unfilled park/refresh paths are compile-time off."""
+        if TEL:
+            *carry, tel = carry
+        stamp, in_cache, count, hits, lst, p = carry
+        x = trace_ref[0, t]
+        onehot = iota == x
+        lx = _lane_pick(onehot, lst)
+        hit = (lx == 1) | (lx == 2)
+        g2 = lx == 4
+        ghost = (lx == 3) | g2
+        cold = lx == 0
+        t1n = jnp.sum((lst == 1).astype(jnp.int32))
+        t2n = jnp.sum((lst == 2).astype(jnp.int32))
+        b1n = jnp.sum((lst == 3).astype(jnp.int32))
+        b2n = jnp.sum((lst == 4).astype(jnp.int32))
+        total = t1n + t2n + b1n + b2n
+        # adaptation (ghost hits only): a B1 hit grows the recency target p,
+        # a B2 hit shrinks it — integer deltas, exactly the jitted scan's
+        d1 = jnp.maximum(1, b2n // jnp.maximum(1, b1n))
+        d2 = jnp.maximum(1, b1n // jnp.maximum(1, b2n))
+        p = jnp.where(
+            lx == 3,
+            jnp.minimum(capacity, p + d1),
+            jnp.where(g2, jnp.maximum(0, p - d2), p),
+        )
+        # Case IV ghost trimming (cold misses): IV(a) drops B1's LRU when the
+        # recency side T1+B1 is at capacity (B1 empty -> hard-drop T1's LRU,
+        # no ghost left behind), IV(b) drops B2's LRU at 2c directory entries
+        caseA = cold & (t1n + b1n >= capacity)
+        hard_t1 = caseA & (b1n == 0)
+        gone_b1 = caseA & (b1n > 0)
+        gone_b2 = cold & (~caseA) & (total >= 2 * capacity) & (b2n > 0)
+        list_lru = lambda L: victim_of(stamp, lst == L)
+        b1_oh = list_lru(3)
+        b2_oh = list_lru(4)
+        lst = jnp.where((b1_oh & gone_b1) | (b2_oh & gone_b2), 0, lst)
+        # REPLACE: a miss into a full cache demotes T1's LRU (|T1| > p, or
+        # == p on a B2 hit, or T2 empty) to B1's MRU, else T2's LRU to B2's
+        need_evict = (~hit) & (~hard_t1) & (t1n + t2n >= capacity)
+        from_t1 = (t1n >= 1) & ((g2 & (t1n == p)) | (t1n > p) | (t2n == 0))
+        victim_oh = jnp.where(hard_t1 | from_t1, list_lru(1), list_lru(2))
+        evict = need_evict | hard_t1
+        vdst = jnp.where(hard_t1, 0, jnp.where(from_t1, 3, 4))
+        lst = jnp.where(victim_oh & evict, vdst, lst)
+        stamp = jnp.where(victim_oh & need_evict, t, stamp)
+        # x lands at T2's MRU on any hit or ghost hit, T1's MRU on a cold miss
+        dst = jnp.where(hit | ghost, 2, 1)
+        lst = jnp.where(onehot, dst, lst)
+        stamp = jnp.where(onehot, t, stamp)
+        prev_cache = in_cache
+        in_cache = (lst == 1) | (lst == 2)
+        count = jnp.sum(in_cache.astype(jnp.int32))
+        hits = hits + hit.astype(jnp.int32)
+        if TEL:
+            gargs = (
+                dict(evict_mask=prev_cache & ~in_cache, cache_mask=in_cache,
+                     gx=_lane_pick(onehot, groups_row))
+                if GROUPED
+                else {}
+            )
+            tel = tel_update(
+                tel, t, hit=hit, fill=~hit, evict=evict, count=count, **gargs
+            )
+            return stamp, in_cache, count, hits, lst, p, tel
+        return stamp, in_cache, count, hits, lst, p
+
     # -------------------------------------------------------------- drivers
     freq0 = jnp.zeros((1, n_pad), jnp.int32)
     cache0 = jnp.zeros((1, n_pad), jnp.bool_)
@@ -573,6 +657,11 @@ def _cache_sim_kernel(
         if doorkeeper:
             carry = carry + (jnp.zeros((1, b_pad), jnp.bool_),)
         carry = jax.lax.fori_loop(0, trace_len, tinylfu_step, carry + tel0)
+    elif kind == "arc":
+        lst0 = jnp.zeros((1, n_pad), jnp.int32)
+        carry = jax.lax.fori_loop(
+            0, trace_len, arc_step, (freq0, cache0, zero, zero, lst0, zero) + tel0
+        )
     elif kind == "plfua_dyn":
         # chunked walk, hot mask frozen inside each chunk; the refresh fires
         # only when its whole period lies within the real trace (global-time
@@ -698,7 +787,8 @@ def cache_sim_pallas(
 
     Returns:
       hits:     (S,)      int32 — total hits per sample (CHR = hits / T).
-      freq:     (S, N)    int32 — final frequency table (lru: last-access stamps).
+      freq:     (S, N)    int32 — final frequency table (lru/arc: last-access
+                stamps; arc stamps every *tracked* id, ghosts included).
       in_cache: (S, N)    bool  — final cache contents.
       series:   (S, n_windows, N_METRICS) int32 — only with telemetry_window,
                 matching ``jax_cache.simulate(..., TelemetrySpec(W))`` exactly;

@@ -14,7 +14,7 @@ Every scenario returns ``(n_samples, trace_len)`` int32 with ids in
 cache_sim Pallas kernel (every registry kind), and the N-tier fleet
 simulator ``repro.fleet.simulate_fleet_batch`` (of which the two-tier
 ``repro.cdn.simulate_hierarchy_batch`` is a thin depth-2 wrapper).
-``repro.workloads.device`` ports the same five generators to ``jax.random``
+``repro.workloads.device`` ports the same six generators to ``jax.random``
 so sharded fleets can synthesize their trace chunks on device, inside jit.
 """
 from __future__ import annotations
@@ -33,6 +33,7 @@ from repro.workloads.generators import (
     flash_crowd,
     multi_tenant,
     object_sizes,
+    scan,
     stationary,
     tenant_groups,
 )
@@ -49,6 +50,7 @@ __all__ = [
     "flash_crowd",
     "diurnal",
     "multi_tenant",
+    "scan",
     "tenant_groups",
     "object_sizes",
 ]
@@ -59,6 +61,7 @@ SCENARIOS: dict[str, Callable[..., np.ndarray]] = {
     "flash_crowd": flash_crowd,
     "diurnal": diurnal,
     "multi_tenant": multi_tenant,
+    "scan": scan,
 }
 
 SCENARIO_NAMES = tuple(SCENARIOS)

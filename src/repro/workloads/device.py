@@ -43,6 +43,7 @@ DEVICE_SCENARIO_NAMES = (
     "flash_crowd",
     "diurnal",
     "multi_tenant",
+    "scan",
 )
 
 #: recognised per-scenario overrides (mirrors the host generators' keywords)
@@ -52,6 +53,7 @@ _SCENARIO_OPTS = {
     "flash_crowd": ("n_spikes", "spike_len_frac", "spike_intensity"),
     "diurnal": ("n_cycles", "alpha_swing", "n_chunks"),
     "multi_tenant": ("n_tenants", "weights"),
+    "scan": ("n_sweeps", "sweep_len_frac", "sweep_intensity", "scan_lo_frac"),
 }
 
 
@@ -201,12 +203,45 @@ def _multi_tenant(dspec: DeviceTraceSpec, key: jax.Array) -> jax.Array:
     return out
 
 
+def _scan(dspec: DeviceTraceSpec, key: jax.Array) -> jax.Array:
+    n, T = dspec.n_objects, dspec.trace_len
+    n_sweeps = int(dspec.opt("n_sweeps", 4))
+    sweep_len = max(1, int(round(float(dspec.opt("sweep_len_frac", 0.05)) * T)))
+    intensity = float(dspec.opt("sweep_intensity", 0.8))
+    scan_lo_frac = float(dspec.opt("scan_lo_frac", 0.5))
+    if n_sweeps < 0:
+        raise ValueError(f"n_sweeps must be >= 0, got {n_sweeps}")
+    if not 0.0 <= intensity <= 1.0:
+        raise ValueError(f"sweep_intensity must be in [0, 1], got {intensity}")
+    if not 0.0 <= scan_lo_frac < 1.0:
+        raise ValueError(f"scan_lo_frac must be in [0, 1), got {scan_lo_frac}")
+    k_base, k_mask, k_off = jax.random.split(key, 3)
+    base = _ranks(_cdf(n, dspec.alpha), jax.random.uniform(k_base, (T,)), n)
+    if n_sweeps == 0:
+        return base
+    scan_lo = int(round(scan_lo_frac * n))
+    span = n - scan_lo
+    # window placement is deterministic (host constant), like the host's
+    in_sweep = np.zeros(T, bool)
+    seg = T // n_sweeps
+    for i in range(n_sweeps):
+        start = i * seg + max(0, (seg - sweep_len) // 2)
+        in_sweep[start : start + sweep_len] = True
+    in_sweep_j = jnp.asarray(in_sweep)
+    take = in_sweep_j & (jax.random.uniform(k_mask, (T,)) < intensity)
+    offset = jax.random.randint(k_off, (), 0, span)
+    k = jnp.cumsum(take.astype(jnp.int32)) - 1  # walk position per swept slot
+    ids = (jnp.int32(scan_lo) + (offset + k) % span).astype(jnp.int32)
+    return jnp.where(take, ids, base)
+
+
 _GENERATORS = {
     "stationary": _stationary,
     "churn": _churn,
     "flash_crowd": _flash_crowd,
     "diurnal": _diurnal,
     "multi_tenant": _multi_tenant,
+    "scan": _scan,
 }
 
 

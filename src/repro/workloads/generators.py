@@ -24,6 +24,7 @@ __all__ = [
     "flash_crowd",
     "diurnal",
     "multi_tenant",
+    "scan",
     "tenant_groups",
     "object_sizes",
     "SIZE_DISTS",
@@ -159,6 +160,62 @@ def diurnal(
             if hi > lo:
                 out[s, lo:hi] = _sample_ranks(rng, n_objects, hi - lo, float(a))
     return out
+
+
+def scan(
+    n_objects: int,
+    n_samples: int = zipf.PAPER_NUM_SAMPLES,
+    trace_len: int = zipf.PAPER_TRACE_LEN,
+    *,
+    alpha: float = zipf.PAPER_ALPHA,
+    seed: int = 0,
+    n_sweeps: int = 4,
+    sweep_len_frac: float = 0.05,
+    sweep_intensity: float = 0.8,
+    scan_lo_frac: float = 0.5,
+) -> np.ndarray:
+    """Stationary Zipf punctured by sequential one-touch sweeps — the classic
+    adversary of recency- and frequency-based eviction (a crawler / backup /
+    prefetcher walking the catalogue).
+
+    ``n_sweeps`` fixed windows of ``sweep_len_frac * trace_len`` requests are
+    placed at the centres of equal trace segments; inside a window each
+    position is overwritten with probability ``sweep_intensity`` by the next
+    id of a sequential walk over ``[scan_lo_frac * n_objects, n_objects)``
+    (a per-sample random start offset, the walk position carried across
+    sweeps). As long as the total overwritten count stays below the scan
+    region, every swept id is touched exactly once per pass; repeated sweeps
+    re-walk the same region — re-crawls the cache gains nothing by storing.
+
+    LRU flushes its whole working set per sweep; in-memory LFU churns its
+    freq-1 tail (and restarts evicted metadata at 1, so every re-sweep churns
+    it again); ARC funnels the one-touch ids through T1 while the
+    re-referenced working set survives in T2.
+    """
+    if n_sweeps < 0:
+        raise ValueError(f"n_sweeps must be >= 0, got {n_sweeps}")
+    if not 0.0 <= sweep_intensity <= 1.0:
+        raise ValueError(f"sweep_intensity must be in [0, 1], got {sweep_intensity}")
+    if not 0.0 <= scan_lo_frac < 1.0:
+        raise ValueError(f"scan_lo_frac must be in [0, 1), got {scan_lo_frac}")
+    base = stationary(n_objects, n_samples, trace_len, alpha=alpha, seed=seed).copy()
+    if n_sweeps == 0:
+        return base
+    sweep_len = max(1, int(round(sweep_len_frac * trace_len)))
+    scan_lo = int(round(scan_lo_frac * n_objects))
+    span = n_objects - scan_lo
+    in_sweep = np.zeros(trace_len, bool)
+    seg = trace_len // n_sweeps
+    for i in range(n_sweeps):
+        start = i * seg + max(0, (seg - sweep_len) // 2)
+        in_sweep[start : start + sweep_len] = True
+    for s in range(n_samples):
+        rng = _rng(seed + 611_657, s)
+        take = in_sweep & (rng.random(trace_len) < sweep_intensity)
+        offset = int(rng.integers(0, span))
+        k = np.cumsum(take) - 1  # walk position at each swept slot
+        base[s, take] = scan_lo + (offset + k[take]) % span
+    return base
 
 
 def object_sizes(

@@ -1,0 +1,247 @@
+"""ARC (PR 9): ghost-list invariants, three-tier surface, scan resistance.
+
+Three layers of assurance for the Adaptive Replacement Cache:
+
+1. **Property-based invariant suite** (hypothesis, shimmed when absent):
+   on random traces — flat and placement-gated — the four lists stay
+   pairwise disjoint after *every* request, the directory obeys
+   ``|T1|+|T2| <= c``, ``|T1|+|B1| <= c``, ``|T1|+|T2|+|B1|+|B2| <= 2c``,
+   the adaptation target stays in ``0 <= p <= c``, and a ghost hit moves
+   ``p`` in the documented direction (B1 grows it, B2 shrinks it; every
+   other request leaves it alone). The same per-step invariants are then
+   pinned on the jitted scan's ``lst``-encoded state.
+
+2. **Surface checks**: arc is registered on all three tiers, byte-capacity
+   mode raises in all three (reference constructor, ``PolicySpec``, Pallas
+   entry point — test-asserted like wlfu/tinylfu were in PR 7), and the
+   placement-gated parked-demand semantics behave as documented in
+   docs/policies.md.
+
+3. **Scan-resistance regression** (the ROADMAP prediction this PR pins,
+   analogous to PR 2's churn regression in test_sketch.py): on the ``scan``
+   scenario arc must beat both lru and lfu by a fixed absolute CHR margin,
+   and — measured over the *in-sweep working-set* positions where the
+   collapse concentrates — lru/lfu must collapse versus their stationary
+   baselines while arc and doorkeeper'd tinylfu hold.
+"""
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # pragma: no cover - CI installs hypothesis; shim elsewhere
+    from _hypothesis_fallback import given, settings, strategies as st
+
+import jax
+import jax.numpy as jnp
+
+from repro import workloads
+from repro.core import jax_cache, policies, registry
+from repro.kernels.cache_sim import cache_sim as cache_sim_mod
+
+
+def _lists(pol: policies.ARCCache):
+    return (set(pol._t1), set(pol._t2), set(pol._b1), set(pol._b2))
+
+
+def _assert_invariants(pol: policies.ARCCache, ctx: str):
+    t1, t2, b1, b2 = _lists(pol)
+    c = pol.capacity
+    for i, a in enumerate((t1, t2, b1, b2)):
+        for j, b in enumerate((t1, t2, b1, b2)):
+            if i < j:
+                assert not (a & b), f"{ctx}: lists {i}/{j} overlap: {a & b}"
+    assert len(t1) + len(t2) <= c, f"{ctx}: residents {len(t1)}+{len(t2)} > {c}"
+    assert len(t1) + len(b1) <= c, f"{ctx}: recency side {len(t1)}+{len(b1)} > {c}"
+    assert len(t1) + len(t2) + len(b1) + len(b2) <= 2 * c, f"{ctx}: directory > 2c"
+    assert 0 <= pol.p <= c, f"{ctx}: p={pol.p} outside [0, {c}]"
+    # the resident view agrees with the list decomposition
+    assert {i for i in t1 | t2 if pol.contains(i)} == t1 | t2, ctx
+
+
+# --------------------------------------------------- property-based invariants
+@settings(max_examples=25, deadline=None)
+@given(
+    cap=st.integers(1, 12),
+    n=st.integers(2, 48),
+    seed=st.integers(0, 10_000),
+    gated=st.booleans(),
+)
+def test_ghost_list_invariants_every_step(cap, n, seed, gated):
+    """The four-list invariants hold after every request, on skewed random
+    traces, with and without placement fill-gating."""
+    rng = np.random.default_rng(seed)
+    # skewed trace (half the mass on a popularity head) + uniform tail so
+    # hits, ghost hits, and cold misses all actually occur
+    head = rng.integers(0, max(1, n // 4), 400)
+    tail = rng.integers(0, n, 400)
+    trace = np.where(rng.random(400) < 0.5, head, tail)
+    fills = rng.random(400) < 0.5 if gated else np.ones(400, bool)
+    pol = policies.ARCCache(cap)
+    for t, (x, fl) in enumerate(zip(trace, fills)):
+        p_before = pol.p
+        t1, t2, b1, b2 = _lists(pol)
+        hit = pol.request(int(x), fill=bool(fl))
+        ctx = f"cap={cap} n={n} seed={seed} gated={gated} t={t} x={x}"
+        _assert_invariants(pol, ctx)
+        assert hit == (x in t1 or x in t2), ctx
+        # adaptation direction: B1 ghost hits never shrink p, B2 ghost hits
+        # never grow it, and every non-ghost request leaves it untouched
+        if x in b1:
+            assert pol.p >= p_before, f"{ctx}: B1 hit shrank p"
+            assert pol.p > p_before or p_before == cap, ctx
+        elif x in b2:
+            assert pol.p <= p_before, f"{ctx}: B2 hit grew p"
+            assert pol.p < p_before or p_before == 0, ctx
+        else:
+            assert pol.p == p_before, f"{ctx}: non-ghost request moved p"
+
+
+@pytest.mark.parametrize("gated", (False, True))
+@pytest.mark.parametrize("cap", (2, 5, 9))
+def test_jax_state_invariants_every_step(cap, gated):
+    """The jitted scan's int32 ``lst`` encoding obeys the same invariants at
+    every step (list sizes from mask sums, p from the scalar carry)."""
+    n, T = 48, 600
+    trace = workloads.make_traces("churn", n, 1, T, seed=5)[0]
+    fills = (
+        np.random.default_rng(9).random(T) < 0.5 if gated else np.ones(T, bool)
+    )
+    spec = jax_cache.PolicySpec("arc", n, cap)
+
+    def f(s, xf):
+        x, fl = xf
+        ns, hit = jax_cache.step(spec, s, x, fill=fl)
+        lst = ns["lst"]
+        sizes = jnp.stack([(lst == L).sum() for L in (1, 2, 3, 4)])
+        return ns, (sizes, ns["p"])
+
+    _, (sizes, p) = jax.lax.scan(
+        f,
+        jax_cache.init_state(spec),
+        (jnp.asarray(trace, jnp.int32), jnp.asarray(fills)),
+    )
+    t1n, t2n, b1n, b2n = (np.asarray(sizes[:, i]) for i in range(4))
+    p = np.asarray(p)
+    ctx = f"cap={cap} gated={gated}"
+    assert (t1n + t2n <= cap).all(), ctx
+    assert (t1n + b1n <= cap).all(), ctx
+    assert (t1n + t2n + b1n + b2n <= 2 * cap).all(), ctx
+    assert (p >= 0).all() and (p <= cap).all(), ctx
+
+
+# ------------------------------------------------------------ surface checks
+def test_arc_registered_on_all_three_tiers():
+    inf = registry.info("arc")
+    assert inf.reference and inf.jax and inf.pallas and not inf.sketch
+    assert "arc" in policies.POLICY_NAMES
+    assert "arc" in jax_cache.JAX_POLICY_KINDS
+    assert "arc" in cache_sim_mod.KERNEL_KINDS
+    assert isinstance(policies.make_policy("arc", 4), policies.ARCCache)
+
+
+def test_byte_capacity_mode_raises_on_every_tier():
+    """arc's balance target p is defined in object slots: byte mode is
+    rejected everywhere, like wlfu/tinylfu on the Pallas tier in PR 7."""
+    with pytest.raises(ValueError, match="byte-capacity"):
+        policies.ARCCache(4, capacity_bytes=64)
+    with pytest.raises(ValueError, match="byte-capacity"):
+        jax_cache.PolicySpec("arc", 32, 4, capacity_bytes=64)
+    assert "arc" not in cache_sim_mod.BYTE_CAPABLE_KINDS
+    with pytest.raises(ValueError, match="byte-capacity"):
+        cache_sim_mod.cache_sim_pallas(
+            jnp.zeros((1, 8), jnp.int32),
+            kind="arc",
+            n_objects=32,
+            capacity=4,
+            capacity_bytes=64,
+        )
+
+
+def test_placement_gating_parks_demand_as_ghosts():
+    """Unfilled misses park metadata, never residents (docs/policies.md)."""
+    pol = policies.ARCCache(2)
+    assert pol.request(7, fill=False) is False
+    assert not pol.contains(7) and 7 in pol._b1  # cold miss parked in B1
+    assert pol.request(7) is False  # parked ghost: still a miss...
+    assert pol.contains(7) and 7 in pol._t2  # ...but promoted straight to T2
+    # an unfilled ghost hit adapts p and refreshes the ghost, no eviction
+    pol2 = policies.ARCCache(2)
+    pol2.request(0)
+    pol2.request(0)  # hit: 0 -> T2
+    pol2.request(1)  # T1 = [1]
+    pol2.request(2)  # full: REPLACE demotes 1 -> B1 ghost
+    assert 1 in pol2._b1 and pol2.evictions == 1
+    p_before = pol2.p
+    assert pol2.request(1, fill=False) is False
+    assert 1 in pol2._b1 and not pol2.contains(1)
+    assert pol2.p > p_before and pol2.evictions == 1  # adapted, no eviction
+    # Case IV(a) with B1 empty hard-drops the T1 LRU without leaving a ghost
+    pol3 = policies.ARCCache(1)
+    pol3.request(0)
+    pol3.request(1)
+    assert pol3.evictions == 1 and pol3.metadata_entries == 1
+
+
+# ------------------------------------------------- the scan-resistance pin
+#: the regression configuration is the cache_scan/fleet_scan bench config
+#: (benchmarks/*_bench.py) recorded in BENCH_PR9.json
+SCAN_N, SCAN_CAP, SCAN_T, SCAN_S, SCAN_SEED = 600, 30, 12_000, 3, 33
+SCAN_KW = dict(n_sweeps=6, sweep_len_frac=0.06)
+SCAN_MARGIN = 0.05  # arc must beat lru AND lfu by this absolute CHR
+HOLD_MARGIN = 0.04  # arc/tinylfu in-sweep working-set CHR drop bound
+LRU_COLLAPSE = 0.20  # lru must lose at least this much in-sweep ws CHR
+LFU_COLLAPSE = 0.05  # lfu must lose at least this much in-sweep ws CHR
+
+
+def _sweep_mask(trace_len: int = SCAN_T) -> np.ndarray:
+    """The sweep-window positions, exactly as workloads.scan places them."""
+    sweep_len = max(1, int(round(SCAN_KW["sweep_len_frac"] * trace_len)))
+    seg = trace_len // SCAN_KW["n_sweeps"]
+    mask = np.zeros(trace_len, bool)
+    for i in range(SCAN_KW["n_sweeps"]):
+        start = i * seg + max(0, (seg - sweep_len) // 2)
+        mask[start : start + sweep_len] = True
+    return mask
+
+
+def _chr_pair(kind: str, **spec_kw):
+    """(overall scan CHR, in-sweep working-set CHR on scan, same on
+    stationary) averaged over samples."""
+    spec = jax_cache.PolicySpec(kind, SCAN_N, SCAN_CAP, **spec_kw)
+    sw = _sweep_mask()
+    scan_lo = SCAN_N // 2
+    out = {}
+    for scenario in ("scan", "stationary"):
+        kw = SCAN_KW if scenario == "scan" else {}
+        traces = workloads.make_traces(
+            scenario, SCAN_N, SCAN_S, SCAN_T, seed=SCAN_SEED, **kw
+        )
+        hits = np.asarray(jax_cache.simulate_batch(spec, jnp.asarray(traces)))
+        ws = sw[None, :] & (traces < scan_lo)  # in-sweep working-set requests
+        out[scenario] = (hits.mean(), hits[ws].mean())
+    return out["scan"][0], out["scan"][1], out["stationary"][1]
+
+
+def test_scan_resistance_regression():
+    """Pin the ROADMAP prediction: on the adversarial ``scan`` workload the
+    doorkeeper'd tinylfu and arc hold their in-sweep working-set CHR within
+    HOLD_MARGIN of stationary, lru/lfu collapse by their pinned deltas, and
+    arc beats both lru and lfu overall by >= SCAN_MARGIN absolute CHR
+    (measured margins at this config: arc-lru ~ 0.081, arc-lfu ~ 0.070)."""
+    overall, res = {}, {}
+    for kind, kw in (
+        ("lru", {}),
+        ("lfu", {}),
+        ("arc", {}),
+        ("tinylfu", dict(doorkeeper=256)),
+    ):
+        chr_all, ws_scan, ws_stat = _chr_pair(kind, **kw)
+        overall[kind] = chr_all
+        res[kind] = ws_stat - ws_scan  # the in-sweep working-set collapse
+    assert overall["arc"] >= overall["lru"] + SCAN_MARGIN, (overall, res)
+    assert overall["arc"] >= overall["lfu"] + SCAN_MARGIN, (overall, res)
+    assert res["lru"] >= LRU_COLLAPSE, (overall, res)
+    assert res["lfu"] >= LFU_COLLAPSE, (overall, res)
+    assert res["arc"] <= HOLD_MARGIN, (overall, res)
+    assert res["tinylfu"] <= HOLD_MARGIN, (overall, res)

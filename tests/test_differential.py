@@ -148,6 +148,13 @@ def test_pallas_matches_both_oracles(kind, doorkeeper, scenario):
             np.asarray(freq_k)[0][cached], (np.asarray(state["last"]) + 1)[cached],
             err_msg=f"kernel vs jax stamps: {ctx}",
         )
+    elif kind == "arc":
+        # the kernel ships ARC's stamp row through the freq slot — every
+        # tracked lane, ghosts included, must carry the scan's exact stamp
+        np.testing.assert_array_equal(
+            np.asarray(freq_k)[0], np.asarray(state["stamp"]),
+            err_msg=f"kernel vs jax stamps: {ctx}",
+        )
     else:
         np.testing.assert_array_equal(
             np.asarray(freq_k)[0], np.asarray(state["freq"]),
@@ -168,7 +175,10 @@ def test_pallas_matches_both_oracles(kind, doorkeeper, scenario):
 def test_matrix_is_total():
     """The harness really does cover every kind and every scenario."""
     assert set(jax_cache.JAX_POLICY_KINDS) >= set(jax_cache.SKETCH_POLICY_KINDS)
-    assert len(workloads.SCENARIO_NAMES) >= 5
+    assert len(jax_cache.JAX_POLICY_KINDS) >= 9  # PR 9: arc joins the matrix
+    assert "arc" in jax_cache.JAX_POLICY_KINDS
+    assert len(workloads.SCENARIO_NAMES) >= 6  # PR 9: the adversarial scan
+    assert "scan" in workloads.SCENARIO_NAMES
     for kind in jax_cache.JAX_POLICY_KINDS:
         build_policy(_spec(kind, CAPS[0]))  # every kind has a reference oracle
     # the Pallas matrix is total too: every jax kind appears, plus the

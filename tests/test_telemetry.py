@@ -445,6 +445,17 @@ def test_compare_gate():
     # report-only unless strict
     assert cmp_.report(regs, [], strict=False) == 0
     assert cmp_.report(regs, [], strict=True) == 1
-    # disjoint rows compare vacuously
+    # a vanished baseline row is a regression in its own right (PR 9):
+    # under --strict the gate fails instead of passing vacuously
     regs, notes = cmp_.compare(base, {"rows": []})
-    assert regs == [] and any("absent" in n for n in notes)
+    assert len(regs) == 1 and "absent" in regs[0]
+    assert "fleet/stationary/plfu" in regs[0]  # names the vanished row(s)
+    assert cmp_.report(regs, notes, strict=False) == 0  # still report-only
+    assert cmp_.report(regs, notes, strict=True) == 1
+    # extra current-only rows never trip the gate
+    cur = payload(0.84, 20000, 50.0)
+    cur["rows"].append(
+        {"name": "fleet/scan/arc", "us_per_call": 1.0, "derived": "chr=0.5"}
+    )
+    regs, _ = cmp_.compare(base, cur)
+    assert regs == []

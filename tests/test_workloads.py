@@ -114,6 +114,45 @@ def test_multi_tenant_blocks_and_weights():
             assert (in_block < block // 10).mean() > 0.25
 
 
+def test_scan_sweeps_are_sequential_cold_walks():
+    base = workloads.make_traces("stationary", N, 1, T, seed=12)[0]
+    swept = workloads.make_traces(
+        "scan", N, 1, T, seed=12, sweep_len_frac=0.03
+    )[0]
+    changed = swept != base
+    assert changed.any()
+    lo = N // 2
+    # every overwritten request points into the scan span [n/2, n)
+    assert (swept[changed] >= lo).all()
+    # the sweep is a *sequential* walk: consecutive overwrites step +1 mod
+    # span (an overwrite that collides with the base draw hides one step,
+    # so tolerate a small fraction of larger gaps)
+    span = N - lo
+    steps = np.diff(swept[changed] - lo) % span
+    assert (steps == 1).mean() > 0.9, steps[steps != 1][:10]
+    # one-touch per sweep window: 0.03 * T taken positions < span, so no id
+    # repeats inside any single sweep — the scan-resistance premise
+    sweep_len = max(1, int(round(0.03 * T)))
+    seg = T // 4
+    for i in range(4):
+        start = i * seg + max(0, (seg - sweep_len) // 2)
+        w = slice(start, start + sweep_len)
+        ids = swept[w][changed[w]]
+        assert len(np.unique(ids)) == ids.size, f"sweep {i} retouches an id"
+    # nothing outside the sweep windows is touched
+    in_windows = np.zeros(T, bool)
+    for i in range(4):
+        start = i * seg + max(0, (seg - sweep_len) // 2)
+        in_windows[start : start + sweep_len] = True
+    assert not changed[~in_windows].any()
+
+
+def test_scan_zero_sweeps_is_stationary():
+    a = workloads.make_traces("scan", N, 1, 2_000, seed=9, n_sweeps=0)
+    b = workloads.make_traces("stationary", N, 1, 2_000, seed=9)
+    np.testing.assert_array_equal(a, b)
+
+
 def test_registry_and_tracespec():
     with pytest.raises(ValueError, match="unknown scenario"):
         workloads.make_traces("nope", N)
