@@ -12,7 +12,9 @@ classes:
   (higher is worse): a relative change past ``--perf-tol`` (default 0.5,
   i.e. 50%) is a regression. Wall-clock on shared CI runners is noisy, which
   is why the default is generous and why ``benchmarks.run --compare`` is
-  report-only unless ``--strict`` is passed.
+  report-only unless ``--strict`` is passed. A zero-valued throughput
+  baseline has no ratio — such rows degrade to coverage-only (presence
+  checked, throughput not gated) and say so in the notes.
 * **coverage** — a baseline row absent from the current run is itself a
   regression (PR 9): a vanished benchmark must not pass silently. Compare
   against a baseline recorded from the same ``--only`` group set.
@@ -97,14 +99,23 @@ def compare(
                         f"{name}: {key} {bv:.4f} -> {cv:.4f} "
                         f"(drop {bv - cv:.4f} > tol {chr_tol})"
                     )
-            elif key == "steps_per_s" and bv > 0:
-                if cv < bv * (1 - perf_tol):
-                    regressions.append(
-                        f"{name}: steps_per_s {bv:.0f} -> {cv:.0f} "
-                        f"({cv / bv:.2f}x < {1 - perf_tol:.2f}x)"
+            elif key in ("steps_per_s", "us_per_call"):
+                # a zero baseline has no meaningful ratio (e.g. a row recorded
+                # without timing, or an untimed placeholder) — comparing would
+                # divide by zero, so the row degrades to coverage-only: its
+                # presence is still checked, its throughput is not gated
+                if bv <= 0:
+                    notes.append(
+                        f"{name}: {key} baseline is 0 — coverage-only "
+                        f"(no throughput ratio)"
                     )
-            elif key == "us_per_call" and bv > 0:
-                if cv > bv * (1 + perf_tol):
+                elif key == "steps_per_s":
+                    if cv < bv * (1 - perf_tol):
+                        regressions.append(
+                            f"{name}: steps_per_s {bv:.0f} -> {cv:.0f} "
+                            f"({cv / bv:.2f}x < {1 - perf_tol:.2f}x)"
+                        )
+                elif cv > bv * (1 + perf_tol):
                     regressions.append(
                         f"{name}: us_per_call {bv:.3f} -> {cv:.3f} "
                         f"({cv / bv:.2f}x > {1 + perf_tol:.2f}x)"

@@ -31,9 +31,9 @@ def main() -> None:
         help="comma-separated group list (fig2..fig11, metadata, cache_py, "
         "cache_jax, cache_pallas, kernel_vs_jax, cdn, cdn_router, cdn_topo, "
         "fleet_policies, fleet_depth, fleet_placement, fleet_scale, "
-        "cache_sizes, fleet_bytes, cache_scan, fleet_scan, serving_energy, "
-        "roofline, cache_roofline, telemetry_timing, telemetry_overhead, "
-        "telemetry_tenants) — see docs/benchmarks.md",
+        "cache_sizes, fleet_bytes, cache_scan, fleet_scan, fleet_stream, "
+        "serving_energy, roofline, cache_roofline, telemetry_timing, "
+        "telemetry_overhead, telemetry_tenants) — see docs/benchmarks.md",
     )
     ap.add_argument(
         "--record",
@@ -75,6 +75,7 @@ def main() -> None:
         roofline_bench,
         scan_bench,
         serving_energy,
+        stream_bench,
         telemetry_bench,
     )
 
@@ -85,6 +86,7 @@ def main() -> None:
     groups.update(fleet_bench.ALL)
     groups.update(bytes_bench.ALL)
     groups.update(scan_bench.ALL)
+    groups.update(stream_bench.ALL)
     groups.update(serving_energy.ALL)
     groups.update(roofline_bench.ALL)
     groups.update(telemetry_bench.ALL)

@@ -28,6 +28,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
+import math
 from typing import Any
 
 import jax
@@ -222,6 +223,8 @@ def step(
     fill: jax.Array | None = None,
     sizes: jax.Array | None = None,
     cap_bytes: jax.Array | None = None,
+    table: jax.Array | None = None,
+    bloom_tab: jax.Array | None = None,
 ):
     """One request. Returns (new_state, hit: bool). Order of operations matches
     the Python reference exactly (see tests/test_jax_cache.py).
@@ -240,7 +243,15 @@ def step(
     ``sizes`` is the per-object byte-size array (traced, ``None`` = unit
     sizes); ``cap_bytes`` optionally overrides ``spec.capacity_bytes`` with a
     traced per-node budget, mirroring ``cap``. Both are only consulted when
-    ``spec.size_aware``."""
+    ``spec.size_aware``.
+
+    ``table``/``bloom_tab`` optionally override the sketch bucket / bloom-bit
+    constants with *traced* per-object rows ((n, DEPTH) / (n, BLOOM_DEPTH)) —
+    the streaming fast path (repro.fleet.stream) runs this step on a compact
+    working-set state whose lane ids are not the global ids, so it gathers
+    the true hash rows and passes them in. ``None`` (the default) keeps the
+    host-side ``spec._bucket_table()`` constants folded into the jit,
+    bit-identical to the pre-override behaviour."""
     x = x.astype(jnp.int32)
     in_cache = state["in_cache"]
     count = state["count"]
@@ -381,13 +392,14 @@ def step(
     if spec.kind == "tinylfu":
         # sketch first (add, then age), exactly as TinyLFUCache.request does
         freq, rows, seen = state["freq"], state["sketch"], state["seen"]
-        table = jnp.asarray(spec._bucket_table())
+        if table is None:
+            table = jnp.asarray(spec._bucket_table())
         idx = table[x]
         if spec.doorkeeper:
             # doorkeeper gate: first touch per window marks the bloom only;
             # the sketch increments from the second touch on. bloom_set is
             # idempotent, so the update stays branch-free.
-            btab = jnp.asarray(spec._bloom_table())
+            btab = jnp.asarray(spec._bloom_table()) if bloom_tab is None else bloom_tab
             bidx = btab[x]
             in_dk = sketch.bloom_contains(state["bloom"], bidx)
             rows = jnp.where(in_dk, sketch.rows_add(rows, idx), rows)
@@ -464,7 +476,10 @@ def step(
         # the step only feeds the sketch; hot-set recomputation is *global-time*
         # and lives at the chunk boundaries of _chunked_scan / refresh_hot, so
         # vmapped fleets never pay a per-step estimate-all + top-k
-        rows = sketch.rows_add(state["sketch"], jnp.asarray(spec._bucket_table())[x])
+        rows = sketch.rows_add(
+            state["sketch"],
+            (jnp.asarray(spec._bucket_table()) if table is None else table)[x],
+        )
         # dynamic hot gates admission only: a cached object keeps hitting (and
         # bumping) after it leaves the hot set, until PLFU eviction removes it
         admitted = state["hot"][x] | hit
@@ -570,6 +585,42 @@ def _step_events(spec: PolicySpec, s, ns, hit, x, a, sizes=None, og=None):
     return ev
 
 
+def _refresh_cell(spec: PolicySpec, cap, instrument, sizes, cap_bytes, og):
+    """The scan bodies shared by :func:`_chunked_scan` (bounded, host-side
+    fire schedule) and :func:`stream_chunked_scan` (unbounded, traced global
+    time): a masked per-request ``step`` scan over one refresh chunk, then a
+    per-chunk ``refresh_hot`` applied where the chunk's fire flag is set.
+    Keeping one cell guarantees the two drivers are the same program on the
+    same inputs — the streaming equivalence tests pin exactly that."""
+
+    def f(s, xa):
+        x, a = xa
+        ns, hit = step(spec, s, x, cap, sizes=sizes, cap_bytes=cap_bytes)
+        ns = jax.tree_util.tree_map(lambda o, n_: jnp.where(a, n_, o), s, ns)
+        if instrument:
+            return ns, (hit & a, _step_events(spec, s, ns, hit, x, a, sizes, og))
+        return ns, hit & a
+
+    def chunk(s, inp):
+        xs, acts, fire_c = inp
+        s, out = jax.lax.scan(f, s, (xs, acts))
+        refreshed = refresh_hot(spec, s)
+        if instrument:
+            diff = s["hot"] != refreshed["hot"]
+            churn = jnp.where(fire_c, diff.sum().astype(jnp.int32), 0)
+            chunk_ev = {"fired": fire_c, "churn": churn}
+            if og is not None:
+                chunk_ev["churn_g"] = jnp.where(
+                    fire_c, diff.astype(jnp.int32) @ og, 0
+                )
+        s = jax.tree_util.tree_map(lambda o, r: jnp.where(fire_c, r, o), s, refreshed)
+        if instrument:
+            return s, (out, chunk_ev)
+        return s, out
+
+    return chunk
+
+
 def _chunked_scan(
     spec: PolicySpec, state, trace, active=None, cap=None, instrument=False,
     sizes=None, cap_bytes=None, og=None,
@@ -602,31 +653,7 @@ def _chunked_scan(
     # would diverge from the reference whenever T % L != 0
     fire = (jnp.arange(n_chunks) + 1) * L <= T
 
-    def f(s, xa):
-        x, a = xa
-        ns, hit = step(spec, s, x, cap, sizes=sizes, cap_bytes=cap_bytes)
-        ns = jax.tree_util.tree_map(lambda o, n_: jnp.where(a, n_, o), s, ns)
-        if instrument:
-            return ns, (hit & a, _step_events(spec, s, ns, hit, x, a, sizes, og))
-        return ns, hit & a
-
-    def chunk(s, inp):
-        xs, acts, fire_c = inp
-        s, out = jax.lax.scan(f, s, (xs, acts))
-        refreshed = refresh_hot(spec, s)
-        if instrument:
-            diff = s["hot"] != refreshed["hot"]
-            churn = jnp.where(fire_c, diff.sum().astype(jnp.int32), 0)
-            chunk_ev = {"fired": fire_c, "churn": churn}
-            if og is not None:
-                chunk_ev["churn_g"] = jnp.where(
-                    fire_c, diff.astype(jnp.int32) @ og, 0
-                )
-        s = jax.tree_util.tree_map(lambda o, r: jnp.where(fire_c, r, o), s, refreshed)
-        if instrument:
-            return s, (out, chunk_ev)
-        return s, out
-
+    chunk = _refresh_cell(spec, cap, instrument, sizes, cap_bytes, og)
     state, out = jax.lax.scan(
         chunk,
         state,
@@ -641,6 +668,81 @@ def _chunked_scan(
     events = {k: unpad(v) for k, v in ev.items()}
     events.update(chunk_ev)  # (n_chunks, ...) fired/churn stay chunk-shaped
     return state, unpad(hits), events
+
+
+def stream_sub_len(spec: PolicySpec, chunk_len: int) -> int:
+    """Refresh sub-chunk length of one streaming chunk: ``gcd(L, G)`` tiles
+    any chunk length exactly, and every whole multiple of the refresh period
+    ``L`` lands on a sub-chunk boundary — so the traced fire test in
+    :func:`stream_chunked_scan` reproduces the bounded engine's refresh
+    schedule for *any* chunk length, not just divisors of ``L``."""
+    return math.gcd(spec.effective_refresh, chunk_len)
+
+
+def stream_chunked_scan(
+    spec: PolicySpec, state, trace, active=None, cap=None, *, t0,
+    instrument=False, sizes=None, cap_bytes=None, og=None,
+):
+    """The unbounded-stream twin of :func:`_chunked_scan`: one fixed-shape
+    chunk of a request stream whose global start position is the *traced*
+    scalar ``t0``. Refresh boundaries are global-time — a sub-chunk ending at
+    global position ``p`` refreshes iff ``p % effective_refresh == 0`` — so
+    running K chunks of length G back to back is bit-identical to one
+    bounded ``_chunked_scan`` over the concatenated trace (the same
+    :func:`_refresh_cell` program, fed the same fire schedule).
+
+    Returns ``(state, hits)`` or, with ``instrument``, ``(state, hits,
+    events)`` where the chunk-shaped ``fired``/``churn`` events cover this
+    chunk's ``G // stream_sub_len(spec, G)`` sub-chunks.
+    """
+    (G,) = trace.shape
+    sub = stream_sub_len(spec, G)
+    n_sub = G // sub
+    if active is None:
+        active = jnp.ones((G,), jnp.bool_)
+    t0 = jnp.asarray(t0, jnp.int32)
+    ends = t0 + (jnp.arange(n_sub, dtype=jnp.int32) + 1) * sub
+    fire = ends % jnp.int32(spec.effective_refresh) == 0
+
+    chunk = _refresh_cell(spec, cap, instrument, sizes, cap_bytes, og)
+    state, out = jax.lax.scan(
+        chunk,
+        state,
+        (
+            trace.astype(jnp.int32).reshape(n_sub, sub),
+            active.reshape(n_sub, sub),
+            fire,
+        ),
+    )
+    if not instrument:
+        return state, out.reshape(-1)
+    (hits, ev), chunk_ev = out
+    flat = lambda arr: arr.reshape((-1,) + arr.shape[2:])
+    events = {k: flat(v) for k, v in ev.items()}
+    events.update(chunk_ev)  # (n_sub, ...) fired/churn stay sub-chunk-shaped
+    return state, flat(hits), events
+
+
+@functools.partial(jax.jit, static_argnums=0, donate_argnums=1)
+def run_chunk(spec: PolicySpec, state, trace, t0=0, sizes=None):
+    """One donated streaming chunk of a flat cache: scan ``step`` over a
+    fixed-shape trace chunk, *consuming* the carry buffers (``state`` is
+    donated, so directory/sketch/ARC-list arrays round-trip in place instead
+    of being copied every chunk). ``t0`` is the chunk's traced global start
+    position — only plfua_dyn consults it (global-time refresh). Returns
+    ``(new_state, hits)``; K calls over consecutive chunks are bit-identical
+    to one :func:`simulate` over the concatenated trace.
+
+    Note the donation contract: the caller must not reuse the ``state`` it
+    passed in — time it with ``telemetry.measure(..., make_args=...)``, which
+    re-materializes donated arguments per call."""
+    if sizes is not None:
+        sizes = jnp.asarray(sizes, jnp.int32)
+    if spec.kind == "plfua_dyn":
+        return stream_chunked_scan(spec, state, trace, t0=t0, sizes=sizes)
+    return jax.lax.scan(
+        lambda s, x: step(spec, s, x, sizes=sizes), state, trace.astype(jnp.int32)
+    )
 
 
 def instrumented_scan(
@@ -675,15 +777,19 @@ def instrumented_scan(
 
 def telemetry_series(
     spec: PolicySpec, telemetry, trace_len: int, hits, events, active=None,
-    groups_t=None,
+    groups_t=None, chunk_len=None,
 ):
     """Bucket one node's event series into [..., n_windows, N_METRICS]
     (int32) under jit — or, when ``telemetry.n_groups > 0``, into the
     group-segmented [..., n_windows, n_groups, N_METRICS] layout
     (``groups_t`` = per-trace-position group ids required). ``active=None``
     is the flat-cache convention (every position is a request and every
-    miss a fill offer)."""
-    chunk_len = spec.effective_refresh if spec.kind == "plfua_dyn" else None
+    miss a fill offer). ``chunk_len`` overrides the length of the chunks
+    that produced the chunk-shaped ``fired``/``churn`` events — streaming
+    callers pass their gcd sub-chunk length; the default is the bounded
+    plfua_dyn convention (one chunk per refresh period)."""
+    if chunk_len is None:
+        chunk_len = spec.effective_refresh if spec.kind == "plfua_dyn" else None
     if telemetry.n_groups:
         if groups_t is None:
             raise ValueError("telemetry.n_groups > 0 requires a groups catalogue")

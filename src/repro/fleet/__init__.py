@@ -20,7 +20,11 @@ map). Multi-device: ``fleet.simulate_fleet_sharded`` splits the edge tier
 over a mesh (collective miss aggregation); ``fleet.simulate_fleet_device``
 shards the sample axis with on-device trace generation (weak scaling) —
 both honour placement. The legacy two-tier API in :mod:`repro.cdn` is a
-thin wrapper over depth-2 topologies.
+thin wrapper over depth-2 topologies. For unbounded request streams (line
+rate, not one bounded trace per call) see :mod:`repro.fleet.stream`:
+``FleetStream`` / ``stream_fleet`` push fixed-shape chunks through a
+donated carry, bit-identical to ``simulate_fleet`` on the concatenated
+trace.
 """
 from repro.fleet import placement
 from repro.fleet.topology import (
@@ -55,6 +59,13 @@ from repro.fleet.shard import (
     simulate_fleet_device,
     simulate_fleet_sharded,
 )
+from repro.fleet.stream import (
+    FAST_KINDS,
+    FleetStream,
+    StreamConfig,
+    StreamStats,
+    stream_fleet,
+)
 
 __all__ = [
     "Topology",
@@ -80,4 +91,9 @@ __all__ = [
     "tier_counters",
     "fleet_mesh",
     "mesh_size",
+    "FAST_KINDS",
+    "FleetStream",
+    "StreamConfig",
+    "StreamStats",
+    "stream_fleet",
 ]

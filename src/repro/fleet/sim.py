@@ -377,10 +377,8 @@ def _dyn_chunk(topo: Topology) -> int | None:
     return g
 
 
-def _placed_run(
+def _placed_prelude(
     topo: Topology,
-    trace,
-    assigns,
     *,
     level0_states=None,
     level0_caps=None,
@@ -389,26 +387,12 @@ def _placed_run(
     sizes=None,
     og=None,
 ):
-    """The time-major scan shared by the single-device and edge-sharded
-    placed paths. ``trace`` (T,) int32, ``assigns`` one (T,) int32 per level.
-
-    With ``edge_axis`` set this runs *inside* a shard_map body: the level-0
-    stacked state/caps hold only this device's contiguous slice of edges
-    (``level0_states`` / ``level0_caps``), the probe rebuilds the global
-    edge-served bit with one ``psum`` per step, and upper levels run
-    replicated (identical on every device, being pure functions of
-    replicated inputs).
-
-    Returns ``(states, pstates, fills, admitted, hit_lv)`` where ``hit_lv``
-    is one (T,) bool per level, ``fills``/``admitted`` one (K_l,) int32 per
-    level (level 0 local in the sharded case), and ``pstates`` maps admit
-    levels to their placement-sketch state.
-
-    ``instrument`` (static, single-device only) additionally emits the
-    per-level telemetry event series and extends the return to
-    ``(..., hit_lv, tel_lv, chunk_len)``; the placement gate makes
-    ``fill_offers`` engine-computed here (a consulted miss whose gate was
-    open), unlike the level-major engine where every miss is an offer.
+    """Shared setup of the time-major placed engine: the per-level specs,
+    the zero carry (states / placement sketches / fill + admitted counters)
+    and the ``step_t`` scan body. Used by the bounded :func:`_placed_run`
+    and the streaming engine (:mod:`repro.fleet.stream`), so both scan the
+    *same program* over their chunks — the bit-identity the stream↔bounded
+    differential tests pin. Returns ``(specs, dyn_levels, carry0, step_t)``.
     """
     if instrument and edge_axis is not None:
         raise NotImplementedError("telemetry is single-device (no edge mesh)")
@@ -417,7 +401,6 @@ def _placed_run(
     ):
         raise NotImplementedError("byte-capacity placement is single-device")
     L = topo.n_levels
-    (T,) = trace.shape
     specs = [lvl[0] for lvl in topo.levels]
     parsed = [placement_mod.parse(p) for p in topo.placements]
 
@@ -587,33 +570,17 @@ def _placed_run(
             return carry, (tuple(hits), tuple(tel))
         return carry, tuple(hits)
 
-    # chunked over the gcd of the plfua_dyn refresh periods so the
-    # estimate-all + top-k stays amortised (cf. jax_cache._chunked_scan)
     dyn_levels = [l for l in range(L) if specs[l].kind == "plfua_dyn"]
-    G = _dyn_chunk(topo) or T
-    n_chunks = -(-T // G)
-    pad = n_chunks * G - T
-    t_arr = jnp.arange(n_chunks * G, dtype=jnp.int32)
-    x_p = jnp.concatenate([trace, jnp.zeros((pad,), jnp.int32)])
-    valid_p = jnp.concatenate(
-        [jnp.ones((T,), jnp.bool_), jnp.zeros((pad,), jnp.bool_)]
-    )
-    assigns_p = tuple(
-        jnp.concatenate([a, jnp.zeros((pad,), jnp.int32)]) for a in assigns
-    )
-    # a refresh fires only at boundaries that are whole multiples of the
-    # level's own period *and* lie within the real trace (no partial tail)
-    fire = np.array(
-        [
-            [
-                (c + 1) * G <= T
-                and ((c + 1) * G) % specs[l].effective_refresh == 0
-                for l in dyn_levels
-            ]
-            for c in range(n_chunks)
-        ],
-        bool,
-    ).reshape(n_chunks, len(dyn_levels))
+    carry0 = (tuple(states), pstates, tuple(fills), tuple(admitted))
+    return specs, dyn_levels, carry0, step_t
+
+
+def _placed_chunk_fn(specs, dyn_levels, step_t, *, instrument=False, og=None):
+    """The placed engine's per-chunk scan body: scan ``step_t`` over one
+    chunk, then apply each plfua_dyn level's vmapped hot-set refresh where
+    that level's fire flag is set (with churn capture under ``instrument``).
+    Shared between the bounded host-scheduled scan and the streaming
+    traced-global-time scan."""
 
     def chunk_fn(carry, inp):
         xs, fire_c = inp
@@ -643,8 +610,124 @@ def _placed_run(
             return carry, (hits, tel, tuple(churns), tuple(churns_g))
         return carry, out
 
+    return chunk_fn
+
+
+def _placed_untile(out, T, n_levels, dyn_levels, fire, *, instrument=False, og=None):
+    """Flatten a placed chunk scan's stacked output back to trace-major.
+
+    ``fire`` is the (n_chunks, n_dyn) refresh schedule — host numpy for the
+    bounded engine, traced for the streaming one (both flow through the same
+    jnp ops). Truncation to ``[:T]`` drops the bounded engine's padded tail;
+    streaming chunks pass ``T == n_chunks * chunk_len`` so nothing is cut.
+    Returns ``hit_lv`` or ``(hit_lv, tel_lv)`` under ``instrument``."""
+    if not instrument:
+        return [h.reshape(-1)[:T] for h in out]
+    hits, tel, churns, churns_g = out
+    hit_lv = [h.reshape(-1)[:T] for h in hits]
+    # un-chunk the event series: scalars (n_chunks, G) -> (T,); the per-step
+    # occupancy snapshot (n_chunks, G, K) -> (K, T); grouped events keep
+    # their trailing group axis — evict_g (n_chunks, G, n_g) -> (T, n_g),
+    # count_g (n_chunks, G, K, n_g) -> (K, T, n_g)
+    tel_lv = []
+    for l in range(n_levels):
+        d = {}
+        for k, v in tel[l].items():
+            if k == "evict_g":
+                d[k] = v.reshape((-1,) + v.shape[2:])[:T]
+            elif k == "count_g":
+                d[k] = jnp.moveaxis(v.reshape((-1,) + v.shape[2:])[:T], 0, 1)
+            elif v.ndim == 2:
+                d[k] = v.reshape(-1)[:T]
+            else:
+                d[k] = v.reshape(-1, v.shape[-1])[:T].T
+        tel_lv.append(d)
+    fire = jnp.asarray(fire)
+    n_chunks = fire.shape[0]
+    for j, l in enumerate(dyn_levels):
+        K = churns[j].shape[-1]
+        # all nodes of a dyn level refresh on the same global-time schedule
+        tel_lv[l]["fired"] = jnp.broadcast_to(fire[:, j], (K, n_chunks))
+        tel_lv[l]["churn"] = churns[j].T  # (n_chunks, K) -> (K, n_chunks)
+        if og is not None:
+            # (n_chunks, K, n_g) -> (K, n_chunks, n_g)
+            tel_lv[l]["churn_g"] = jnp.moveaxis(churns_g[j], 0, 1)
+    return hit_lv, tel_lv
+
+
+def _placed_run(
+    topo: Topology,
+    trace,
+    assigns,
+    *,
+    level0_states=None,
+    level0_caps=None,
+    edge_axis: str | None = None,
+    instrument: bool = False,
+    sizes=None,
+    og=None,
+):
+    """The time-major scan shared by the single-device and edge-sharded
+    placed paths. ``trace`` (T,) int32, ``assigns`` one (T,) int32 per level.
+
+    With ``edge_axis`` set this runs *inside* a shard_map body: the level-0
+    stacked state/caps hold only this device's contiguous slice of edges
+    (``level0_states`` / ``level0_caps``), the probe rebuilds the global
+    edge-served bit with one ``psum`` per step, and upper levels run
+    replicated (identical on every device, being pure functions of
+    replicated inputs).
+
+    Returns ``(states, pstates, fills, admitted, hit_lv)`` where ``hit_lv``
+    is one (T,) bool per level, ``fills``/``admitted`` one (K_l,) int32 per
+    level (level 0 local in the sharded case), and ``pstates`` maps admit
+    levels to their placement-sketch state.
+
+    ``instrument`` (static, single-device only) additionally emits the
+    per-level telemetry event series and extends the return to
+    ``(..., hit_lv, tel_lv, chunk_len)``; the placement gate makes
+    ``fill_offers`` engine-computed here (a consulted miss whose gate was
+    open), unlike the level-major engine where every miss is an offer.
+    """
+    (T,) = trace.shape
+    specs, dyn_levels, carry0, step_t = _placed_prelude(
+        topo,
+        level0_states=level0_states,
+        level0_caps=level0_caps,
+        edge_axis=edge_axis,
+        instrument=instrument,
+        sizes=sizes,
+        og=og,
+    )
+
+    # chunked over the gcd of the plfua_dyn refresh periods so the
+    # estimate-all + top-k stays amortised (cf. jax_cache._chunked_scan)
+    G = _dyn_chunk(topo) or T
+    n_chunks = -(-T // G)
+    pad = n_chunks * G - T
+    t_arr = jnp.arange(n_chunks * G, dtype=jnp.int32)
+    x_p = jnp.concatenate([trace, jnp.zeros((pad,), jnp.int32)])
+    valid_p = jnp.concatenate(
+        [jnp.ones((T,), jnp.bool_), jnp.zeros((pad,), jnp.bool_)]
+    )
+    assigns_p = tuple(
+        jnp.concatenate([a, jnp.zeros((pad,), jnp.int32)]) for a in assigns
+    )
+    # a refresh fires only at boundaries that are whole multiples of the
+    # level's own period *and* lie within the real trace (no partial tail)
+    fire = np.array(
+        [
+            [
+                (c + 1) * G <= T
+                and ((c + 1) * G) % specs[l].effective_refresh == 0
+                for l in dyn_levels
+            ]
+            for c in range(n_chunks)
+        ],
+        bool,
+    ).reshape(n_chunks, len(dyn_levels))
+
+    chunk_fn = _placed_chunk_fn(specs, dyn_levels, step_t, instrument=instrument, og=og)
     chunk = lambda a: a.reshape(n_chunks, G, *a.shape[1:])
-    carry0 = (tuple(states), pstates, tuple(fills), tuple(admitted))
     (states, pstates, fills, admitted), out = jax.lax.scan(
         chunk_fn,
         carry0,
@@ -658,36 +741,12 @@ def _placed_run(
             jnp.asarray(fire),
         ),
     )
+    untiled = _placed_untile(
+        out, T, topo.n_levels, dyn_levels, fire, instrument=instrument, og=og
+    )
     if not instrument:
-        hit_lv = [h.reshape(-1)[:T] for h in out]
-        return list(states), pstates, list(fills), list(admitted), hit_lv
-    hits, tel, churns, churns_g = out
-    hit_lv = [h.reshape(-1)[:T] for h in hits]
-    # un-chunk the event series: scalars (n_chunks, G) -> (T,); the per-step
-    # occupancy snapshot (n_chunks, G, K) -> (K, T); grouped events keep
-    # their trailing group axis — evict_g (n_chunks, G, n_g) -> (T, n_g),
-    # count_g (n_chunks, G, K, n_g) -> (K, T, n_g)
-    tel_lv = []
-    for l in range(L):
-        d = {}
-        for k, v in tel[l].items():
-            if k == "evict_g":
-                d[k] = v.reshape((-1,) + v.shape[2:])[:T]
-            elif k == "count_g":
-                d[k] = jnp.moveaxis(v.reshape((-1,) + v.shape[2:])[:T], 0, 1)
-            elif v.ndim == 2:
-                d[k] = v.reshape(-1)[:T]
-            else:
-                d[k] = v.reshape(-1, v.shape[-1])[:T].T
-        tel_lv.append(d)
-    for j, l in enumerate(dyn_levels):
-        K = churns[j].shape[-1]
-        # all nodes of a dyn level refresh on the same global-time schedule
-        tel_lv[l]["fired"] = jnp.broadcast_to(jnp.asarray(fire[:, j]), (K, n_chunks))
-        tel_lv[l]["churn"] = churns[j].T  # (n_chunks, K) -> (K, n_chunks)
-        if og is not None:
-            # (n_chunks, K, n_g) -> (K, n_chunks, n_g)
-            tel_lv[l]["churn_g"] = jnp.moveaxis(churns_g[j], 0, 1)
+        return list(states), pstates, list(fills), list(admitted), untiled
+    hit_lv, tel_lv = untiled
     return list(states), pstates, list(fills), list(admitted), hit_lv, tel_lv, G
 
 

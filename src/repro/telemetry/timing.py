@@ -74,7 +74,7 @@ def j_per_step(cpu_seconds: float, steps: int) -> float:
 
 def measure(
     fn, *args, steps: int, static=(), repeats: int = 3, warmup: int = 1,
-    profile_dir=None, **kwargs
+    profile_dir=None, make_args=None, **kwargs
 ) -> Timing:
     """Measure ``fn(*args, **kwargs)`` with compile/execute separation.
 
@@ -84,6 +84,16 @@ def measure(
     positional indices (keyword arguments are assumed static and baked in).
     Plain callables are timed the same way with ``compile_s = 0``.
 
+    ``make_args``: required when ``fn`` donates input buffers (e.g. the
+    streaming engines' carry state). Reusing one argument tuple across the
+    warmup + every timed repeat would hand the executable buffers a previous
+    call already consumed — an error on backends that reclaim them, silently
+    stale state elsewhere. The thunk returns a fresh ``args`` tuple (full
+    positional list; the ``static`` filter is applied to it too) and runs
+    *before* the clock each repeat, with its outputs blocked on, so argument
+    materialization never leaks into the timing. ``args`` then only shapes
+    the trace/compile; the measured calls consume the thunk's buffers.
+
     ``profile_dir``: when set, one extra (untimed) call runs inside
     ``jax.profiler.trace(profile_dir)`` *after* the timed repeats, writing a
     TensorBoard-loadable device trace next to the numbers it explains. The
@@ -92,26 +102,36 @@ def measure(
     """
     if steps < 1:
         raise ValueError(f"steps must be >= 1, got {steps}")
+    skip = set(static)
+    filt = lambda a: tuple(x for i, x in enumerate(a) if i not in skip)
     if getattr(fn, "lower", None) is not None:
         t0 = time.perf_counter()
         compiled = fn.lower(*args, **kwargs).compile()
         compile_s = time.perf_counter() - t0
-        skip = set(static)
-        dyn = tuple(a for i, a in enumerate(args) if i not in skip)
-        call = lambda: compiled(*dyn)
+        if make_args is None:
+            dyn = filt(args)
+            prep = lambda: dyn
+        else:
+            prep = lambda: jax.block_until_ready(filt(make_args()))
+        call = lambda a: compiled(*a)
     else:
         compile_s = 0.0
-        call = lambda: fn(*args, **kwargs)
+        if make_args is None:
+            prep = lambda: args
+        else:
+            prep = lambda: jax.block_until_ready(make_args())
+        call = lambda a: fn(*a, **kwargs)
     for _ in range(max(warmup, 1)):
-        jax.block_until_ready(call())
+        jax.block_until_ready(call(prep()))
     times = []
     for _ in range(max(repeats, 1)):
+        a = prep()
         t0 = time.perf_counter()
-        jax.block_until_ready(call())
+        jax.block_until_ready(call(a))
         times.append(time.perf_counter() - t0)
     if profile_dir is not None:
         with jax.profiler.trace(str(profile_dir)):
-            jax.block_until_ready(call())
+            jax.block_until_ready(call(prep()))
     return Timing(
         steps=int(steps),
         repeats=len(times),

@@ -32,9 +32,11 @@ __all__ = [
     "DEVICE_SCENARIO_NAMES",
     "DeviceTraceSpec",
     "gen_sample",
+    "gen_stream_chunk",
     "make_traces_device",
     "object_sizes_device",
     "sample_key",
+    "stream_chunk_key",
 ]
 
 DEVICE_SCENARIO_NAMES = (
@@ -301,3 +303,26 @@ def make_traces_device(dspec: DeviceTraceSpec) -> jax.Array:
         jnp.arange(dspec.n_samples, dtype=jnp.int32)
     )
     return jax.vmap(lambda k: gen_sample(dspec, k))(keys)
+
+
+def stream_chunk_key(dspec: DeviceTraceSpec, sample, chunk) -> jax.Array:
+    """PRNG key of one chunk of an unbounded stream: the sample key folded
+    with the chunk index, so chunk ``c`` is a pure function of
+    ``(seed, sample, c)`` — any consumer (the streaming fleet engine, a
+    bounded reference rebuilding the concatenated trace) synthesizes the
+    identical chunk wherever and whenever it runs."""
+    return jax.random.fold_in(sample_key(dspec, sample), chunk)
+
+
+@functools.partial(jax.jit, static_argnums=0)
+def gen_stream_chunk(dspec: DeviceTraceSpec, sample, chunk) -> jax.Array:
+    """One (trace_len,) int32 chunk of sample ``sample``'s unbounded stream.
+
+    ``dspec.trace_len`` is the *chunk* length here, and any time structure of
+    the scenario (churn phases, flash-crowd spikes, diurnal cycles, scan
+    sweeps) unrolls **within each chunk** — the stream is an i.i.d. sequence
+    of scenario instances, not one scenario stretched to infinity. ``sample``
+    and ``chunk`` are traced, so the streaming driver dispatches chunk
+    ``c + 1`` while chunk ``c`` simulates without recompiling (one compiled
+    generator per dspec — double buffering)."""
+    return gen_sample(dspec, stream_chunk_key(dspec, sample, chunk))

@@ -534,3 +534,52 @@ def test_two_tier_serving_constructor_accepts_placement():
     assert fc.offer(5, "p5")
     assert fc.levels[1][0].peek(5) == "p5"  # parent stored it
     assert all(e.peek(5) is None for e in fc.levels[0])  # edges did not
+
+
+# ----------------------------------------------------------- padded tail pin
+@pytest.mark.parametrize("r", [7, 29])
+def test_placed_partial_tail_no_leakage(r):
+    """The placed engine pads its time scan to a multiple of the gcd refresh
+    chunk (sim._placed_run). The padded tail must be invisible: with
+    ``T = G*k + r`` the telemetry window series, occupancy snapshots, final
+    states and counters of a prob(1.0) tree (placed engine) must equal the
+    lce tree (level-major engine) bit for bit — padding leakage on either
+    side (phantom occupancy samples, a tail refresh fire, window spill)
+    breaks the identity. The window is chosen to not divide T either."""
+    import jax.numpy as jnp
+
+    from repro.telemetry import TelemetrySpec
+
+    G = 30  # the plfua_dyn refresh period = the placed engine's gcd chunk
+    T = G * 4 + r
+    tel = TelemetrySpec(window={7: 127, 29: 149}[r], n_groups=3)
+    rng = np.random.default_rng(0)
+    groups = rng.integers(0, 3, size=N).astype(np.int32)
+
+    def mk(pl):
+        return fleet.tree(
+            n_objects=N, widths=(3, 1), kinds=("lru", "plfua_dyn"),
+            capacities=(5, 13), refresh=(0, G), placements=("lce", pl),
+        )
+
+    trace = workloads.make_traces("churn", N, 1, T, seed=5)[0]
+    t_lce = mk("lce")
+    assignment = t_lce.assignment(trace)
+    a = fleet.simulate_fleet(
+        t_lce, jnp.asarray(trace), jnp.asarray(assignment), tel, groups=groups
+    )
+    b = fleet.simulate_fleet(
+        mk("prob(1.0)"), jnp.asarray(trace), jnp.asarray(assignment), tel,
+        groups=groups,
+    )
+    _assert_same_result(a, b, ctx=f"tail r={r}")
+    for l in range(2):
+        np.testing.assert_array_equal(
+            np.asarray(a["telemetry"][l]), np.asarray(b["telemetry"][l]),
+            err_msg=f"telemetry level {l}, tail r={r}",
+        )
+        np.testing.assert_array_equal(
+            np.asarray(a["telemetry_pressure"][l]),
+            np.asarray(b["telemetry_pressure"][l]),
+            err_msg=f"pressure level {l}, tail r={r}",
+        )

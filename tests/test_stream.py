@@ -1,0 +1,333 @@
+"""Stream ↔ bounded differential suite (PR 10).
+
+The streaming fleet engine (:mod:`repro.fleet.stream`) promises *bit
+identity*: K pushed chunks of length G reproduce ``simulate_fleet`` (or the
+flat ``jax_cache.simulate``) on the concatenated trace exactly — hit series,
+final states, tier counters, grouped telemetry series stitched across chunk
+boundaries, eviction pressure. That promise is what makes the line-rate
+bench numbers (BENCH_PR10 ``fleet_stream`` group) legitimate measurements of
+*the same algorithms* the paper tables score, so this suite pins it over:
+
+* all 9 policy kinds × stationary/churn on a depth-2 tree with grouped
+  telemetry (level-major engine underneath);
+* the placed engine (lcd / prob / admit) on a plfua_dyn tree, where the
+  stream's traced global-time fire schedule must reproduce the bounded
+  host-side one — including a chunk length that does *not* divide the
+  refresh period (gcd sub-chunking);
+* the fast compact-lane path against the dense flat simulator for every
+  FAST_KIND (the candidate-prefix bound, tie-breaks included);
+* the double-buffered ``stream_fleet`` driver against a bounded run over
+  the same on-device-generated chunks.
+"""
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro import fleet, workloads
+from repro.core import jax_cache
+from repro.core.jax_cache import PolicySpec
+from repro.fleet.stream import FAST_KINDS, FleetStream, StreamConfig, stream_fleet
+from repro.telemetry import TelemetrySpec
+
+N, G, K = 96, 50, 4
+T = G * K
+ALL_KINDS = ("lru", "lfu", "wlfu", "plfu", "plfua", "plfua_dyn", "tinylfu", "gdsf", "arc")
+
+_rng = np.random.default_rng(0)
+GROUPS = _rng.integers(0, 3, size=N).astype(np.int32)
+SIZES = _rng.integers(1, 9, size=N).astype(np.int32)
+TEL = TelemetrySpec(window=25, n_groups=3)
+
+
+def _topo(kind, **kw):
+    return fleet.tree(
+        n_objects=N, widths=(3, 1), kinds=kind, capacities=(5, 13),
+        window=48 if kind == "wlfu" else 0,
+        refresh=30 if kind == "plfua_dyn" else 0,
+        **kw,
+    )
+
+
+def _run_stream(cfg, trace, assignment, **kw):
+    """Push the trace through in K chunks; return (FleetStream, per-chunk hit
+    tuples)."""
+    fs = FleetStream(cfg, **kw)
+    hits = []
+    for c in range(K):
+        sl = slice(c * G, (c + 1) * G)
+        a = None if assignment is None else jnp.asarray(assignment[sl])
+        out = fs.push(jnp.asarray(trace[sl]), a)
+        hits.append(out["hit"])
+    return fs, hits
+
+
+def _assert_stream_matches(bounded, fs, hits_chunks, *, tel=False, ctx=""):
+    """Full bounded-vs-stream parity: hit series, counters, states, rollup,
+    and (with ``tel``) the stitched telemetry series + pressure."""
+    st = fs.stats()
+    for l in range(len(bounded["hit"])):
+        cat = np.concatenate([np.asarray(h[l]) for h in hits_chunks])
+        np.testing.assert_array_equal(
+            cat, np.asarray(bounded["hit"][l]), err_msg=f"{ctx}: hit level {l}"
+        )
+        for k in bounded["tiers"][l]:
+            np.testing.assert_array_equal(
+                np.asarray(bounded["tiers"][l][k]), np.asarray(st.tiers[l][k]),
+                err_msg=f"{ctx}: tiers[{l}][{k}]",
+            )
+        for k in bounded["states"][l]:
+            np.testing.assert_array_equal(
+                np.asarray(bounded["states"][l][k]),
+                np.asarray(fs.states()[l][k]),
+                err_msg=f"{ctx}: states[{l}][{k}]",
+            )
+    assert st.requests == T and st.chunks == K
+    assert st.origin_misses == int(np.asarray(bounded["origin_miss"]).sum()), ctx
+    assert st.hits == T - st.origin_misses
+    assert st.total_chr == pytest.approx(st.hits / T)
+    if tel:
+        for l in range(len(bounded["telemetry"])):
+            np.testing.assert_array_equal(
+                np.asarray(bounded["telemetry"][l]), np.asarray(st.telemetry[l]),
+                err_msg=f"{ctx}: telemetry level {l}",
+            )
+        for l in range(len(bounded["telemetry_pressure"])):
+            np.testing.assert_array_equal(
+                np.asarray(bounded["telemetry_pressure"][l]),
+                np.asarray(st.telemetry_pressure[l]),
+                err_msg=f"{ctx}: pressure level {l}",
+            )
+
+
+# ----------------------------------------------------------- config contract
+def test_stream_config_validation():
+    topo = _topo("lru")
+    with pytest.raises(ValueError, match="chunk_len"):
+        StreamConfig(topo=topo, chunk_len=0)
+    # position-keyed upper routers would diverge when the stream resets t
+    sticky = fleet.tree(
+        n_objects=N, widths=(3, 2, 1), kinds="lru", capacities=(5, 9, 13),
+        routers=("hash", "sticky", "tree"),
+    )
+    with pytest.raises(ValueError, match="position-independent"):
+        StreamConfig(topo=sticky, chunk_len=G)
+    # telemetry windows must tile the chunk so series stitch by concatenation
+    with pytest.raises(ValueError, match="window"):
+        StreamConfig(topo=topo, chunk_len=G, telemetry=TelemetrySpec(window=30))
+    # fast-path preconditions
+    with pytest.raises(ValueError, match="depth-1"):
+        StreamConfig(topo=topo, chunk_len=G, fast=True)
+    flat_arc = fleet.tree(n_objects=N, widths=(1,), kinds="arc", capacities=13)
+    with pytest.raises(ValueError, match="fast=True supports"):
+        StreamConfig(topo=flat_arc, chunk_len=G, fast=True)
+    flat = fleet.tree(n_objects=N, widths=(1,), kinds="lru", capacities=13)
+    with pytest.raises(ValueError, match="telemetry"):
+        StreamConfig(
+            topo=flat, chunk_len=G, fast=True, telemetry=TelemetrySpec(window=25)
+        )
+    dyn = fleet.tree(
+        n_objects=N, widths=(1,), kinds="plfua_dyn", capacities=13, refresh=30
+    )
+    with pytest.raises(ValueError, match="refresh"):
+        StreamConfig(topo=dyn, chunk_len=G, fast=True)  # 30 % 50 != 0
+
+
+def test_stream_push_contract():
+    topo = _topo("lru")
+    fs = FleetStream(StreamConfig(topo=topo, chunk_len=G))
+    with pytest.raises(ValueError, match="shape"):
+        fs.push(jnp.zeros((G + 1,), jnp.int32))
+    # sticky *edge* router is fine for the engine (assignment is an input),
+    # but cannot be synthesized on device — an explicit array is required
+    sticky_edge = fleet.tree(
+        n_objects=N, widths=(3, 1), kinds="lru", capacities=(5, 13),
+        router="sticky",
+    )
+    fs = FleetStream(StreamConfig(topo=sticky_edge, chunk_len=G))
+    with pytest.raises(ValueError, match="assignment"):
+        fs.push(jnp.zeros((G,), jnp.int32))
+
+
+# --------------------------------------------- level-major engine, all kinds
+@pytest.mark.parametrize("scenario", ["stationary", "churn"])
+@pytest.mark.parametrize("kind", ALL_KINDS)
+def test_stream_level_major_bit_identity(kind, scenario):
+    """K chunks == one bounded simulate_fleet, all 9 kinds, with grouped
+    telemetry + byte accounting stitched across chunk boundaries. G=50 does
+    not divide plfua_dyn's refresh=30: the stream's gcd sub-chunking must
+    reproduce the bounded global-time fire schedule."""
+    topo = _topo(kind)
+    trace = workloads.make_traces(scenario, N, 1, T, seed=3)[0]
+    assignment = topo.assignment(trace)
+    bounded = fleet.simulate_fleet(
+        topo, jnp.asarray(trace), jnp.asarray(assignment), TEL,
+        sizes=SIZES, groups=GROUPS,
+    )
+    cfg = StreamConfig(topo=topo, chunk_len=G, telemetry=TEL)
+    fs, hits = _run_stream(cfg, trace, assignment, sizes=SIZES, groups=GROUPS)
+    _assert_stream_matches(
+        bounded, fs, hits, tel=True, ctx=f"{kind}/{scenario}"
+    )
+
+
+def test_stream_group_sum_identity():
+    """The stitched grouped series sums over the group axis to the bounded
+    *ungrouped* series — the group axis stays observational across chunk
+    boundaries (window spill or double-bucketing at a seam would break it)."""
+    topo = _topo("plfua_dyn")
+    trace = workloads.make_traces("churn", N, 1, T, seed=11)[0]
+    assignment = topo.assignment(trace)
+    plain = fleet.simulate_fleet(
+        topo, jnp.asarray(trace), jnp.asarray(assignment),
+        TelemetrySpec(window=25),
+    )
+    cfg = StreamConfig(topo=topo, chunk_len=G, telemetry=TEL)
+    fs, _ = _run_stream(cfg, trace, assignment, groups=GROUPS)
+    st = fs.stats()
+    for l in range(topo.n_levels):
+        np.testing.assert_array_equal(
+            np.asarray(st.telemetry[l]).sum(axis=2),
+            np.asarray(plain["telemetry"][l]),
+            err_msg=f"group-sum != ungrouped series, level {l}",
+        )
+
+
+# ------------------------------------------------------------- placed engine
+@pytest.mark.parametrize("pl", ["lcd", "prob(0.3)", "admit"])
+def test_stream_placed_bit_identity(pl):
+    """Placement couples the levels per step -> the stream shares the placed
+    engine's scan cell; parity covers the placement sketches' carry, the
+    traced refresh schedule and the scattered telemetry."""
+    topo = fleet.tree(
+        n_objects=N, widths=(3, 1), kinds=("lru", "plfua_dyn"),
+        capacities=(5, 13), refresh=(0, 30), placements=("lce", pl),
+    )
+    trace = workloads.make_traces("churn", N, 1, T, seed=5)[0]
+    assignment = topo.assignment(trace)
+    bounded = fleet.simulate_fleet(
+        topo, jnp.asarray(trace), jnp.asarray(assignment), TEL,
+        sizes=SIZES, groups=GROUPS,
+    )
+    cfg = StreamConfig(topo=topo, chunk_len=G, telemetry=TEL)
+    fs, hits = _run_stream(cfg, trace, assignment, sizes=SIZES, groups=GROUPS)
+    _assert_stream_matches(bounded, fs, hits, tel=True, ctx=f"placed {pl}")
+
+
+# ------------------------------------------------------------ fast-lane path
+_FAST_SPECS = {
+    "lru": {}, "lfu": {}, "plfu": {"hot_size": 24}, "plfua": {"hot_size": 24},
+    "plfua_dyn": {"hot_size": 24, "refresh": 2 * G}, "gdsf": {}, "tinylfu": {},
+}
+
+
+@pytest.mark.parametrize("kind", FAST_KINDS)
+def test_stream_fast_parity(kind):
+    """The compact working-set engine == the dense flat simulator, hit for
+    hit and state field for state field — the candidate-prefix bound and the
+    id-sorted tie-break hold across chunk boundaries (plfua_dyn's refresh =
+    2 chunks exercises the boundary cond)."""
+    kw = _FAST_SPECS[kind]
+    spec = PolicySpec(kind=kind, n_objects=N, capacity=13, **kw)
+    trace = workloads.make_traces("churn", N, 1, T, seed=7)[0]
+    ref_hits, ref_state = jax_cache.simulate(spec, jnp.asarray(trace))
+    topo = fleet.tree(
+        n_objects=N, widths=(1,), kinds=kind, capacities=13,
+        **{k: (v,) for k, v in kw.items()},
+    )
+    fs = FleetStream(StreamConfig(topo=topo, chunk_len=G, fast=True))
+    hits = []
+    for c in range(K):
+        out = fs.push(jnp.asarray(trace[c * G:(c + 1) * G]))
+        hits.append(np.asarray(out["hit"][0]))
+    np.testing.assert_array_equal(
+        np.concatenate(hits), np.asarray(ref_hits), err_msg=f"fast {kind} hits"
+    )
+    fstate = fs.states()[0]
+    for k in ref_state:
+        np.testing.assert_array_equal(
+            np.asarray(ref_state[k]), np.asarray(fstate[k]),
+            err_msg=f"fast {kind} state[{k}]",
+        )
+    st = fs.stats()
+    assert st.hits == int(np.asarray(ref_hits).sum())
+    assert st.requests == T
+    assert int(st.tiers[0]["count"][0]) == int(ref_state["count"])
+
+
+def test_stream_fast_sized_gdsf():
+    """Size-aware victim scoring flows through the compact lanes (the sizes
+    catalogue is gathered per lane like the sketch tables)."""
+    spec = PolicySpec(kind="gdsf", n_objects=N, capacity=13)
+    trace = workloads.make_traces("stationary", N, 1, T, seed=9)[0]
+    ref_hits, ref_state = jax_cache.simulate(spec, jnp.asarray(trace), sizes=SIZES)
+    topo = fleet.tree(n_objects=N, widths=(1,), kinds="gdsf", capacities=13)
+    fs = FleetStream(StreamConfig(topo=topo, chunk_len=G, fast=True), sizes=SIZES)
+    hits = []
+    for c in range(K):
+        out = fs.push(jnp.asarray(trace[c * G:(c + 1) * G]))
+        hits.append(np.asarray(out["hit"][0]))
+    np.testing.assert_array_equal(np.concatenate(hits), np.asarray(ref_hits))
+    for k in ref_state:
+        np.testing.assert_array_equal(
+            np.asarray(ref_state[k]), np.asarray(fs.states()[0][k]),
+            err_msg=f"sized gdsf state[{k}]",
+        )
+
+
+# --------------------------------------------------------- on-device routing
+def test_stream_device_routing_hash():
+    """push(assignment=None) routes on device with the id-pure hash router;
+    parity against a bounded run fed the *same* device-routed assignment."""
+    from repro.cdn import router
+
+    topo = fleet.tree(
+        n_objects=N, widths=(4, 1), kinds="lru", capacities=(5, 13),
+    )
+    trace = workloads.make_traces("stationary", N, 1, T, seed=13)[0]
+    assignment = np.asarray(
+        router.route_device(jnp.asarray(trace), 4, "hash", session_len=64)
+    )
+    bounded = fleet.simulate_fleet(
+        topo, jnp.asarray(trace), jnp.asarray(assignment)
+    )
+    fs = FleetStream(StreamConfig(topo=topo, chunk_len=G))
+    hits = []
+    for c in range(K):
+        out = fs.push(jnp.asarray(trace[c * G:(c + 1) * G]))  # no assignment
+        hits.append(out["hit"])
+    _assert_stream_matches(bounded, fs, hits, ctx="device-routed")
+
+
+# ------------------------------------------- double-buffered stream_fleet
+def test_stream_fleet_double_buffered_generation():
+    """stream_fleet's generate-ahead loop == a bounded run over the host
+    concatenation of the same on-device chunks, and the rollup carries the
+    measured wall clock (req/s, J/step)."""
+    from repro.workloads.device import DeviceTraceSpec, gen_stream_chunk
+
+    n_chunks = 4
+    dspec = DeviceTraceSpec("stationary", N, n_samples=1, trace_len=G, seed=17)
+    topo = fleet.tree(n_objects=N, widths=(1, 1), kinds="lru", capacities=(5, 13))
+    cfg = StreamConfig(topo=topo, chunk_len=G)
+    st = stream_fleet(cfg, dspec, n_chunks)
+    chunks = [
+        np.asarray(gen_stream_chunk(dspec, jnp.int32(0), jnp.int32(c)))
+        for c in range(n_chunks)
+    ]
+    full = jnp.asarray(np.concatenate(chunks))
+    bounded = fleet.simulate_fleet(
+        topo, full, jnp.zeros((n_chunks * G,), jnp.int32)
+    )
+    assert st.requests == n_chunks * G and st.chunks == n_chunks
+    assert st.origin_misses == int(np.asarray(bounded["origin_miss"]).sum())
+    for l in range(2):
+        np.testing.assert_array_equal(
+            np.asarray(st.tiers[l]["hits"]),
+            np.asarray(bounded["tiers"][l]["hits"]),
+        )
+    assert st.elapsed_s is not None and st.elapsed_s > 0
+    assert st.req_per_s == pytest.approx(st.requests / st.elapsed_s)
+    assert st.j_per_step is not None and st.j_per_step > 0
+    with pytest.raises(ValueError, match="trace_len"):
+        stream_fleet(StreamConfig(topo=topo, chunk_len=G + 1), dspec, 2)

@@ -459,3 +459,91 @@ def test_compare_gate():
     )
     regs, _ = cmp_.compare(base, cur)
     assert regs == []
+
+
+def test_measure_make_args_rematerializes_donated_args():
+    """A donated-input function consumes its argument buffers: reusing one
+    args tuple across warmup + repeats (the pre-fix behaviour) would feed the
+    executable buffers a previous call already donated away. ``make_args``
+    must be invoked once per call — warmup, every timed repeat, and the
+    profile capture — and its cost must stay outside the clock."""
+    import functools
+
+    import jax
+    import jax.numpy as jnp
+
+    made = {"n": 0}
+
+    @functools.partial(jax.jit, donate_argnums=0)
+    def consume(state, x):
+        return state + x.sum()
+
+    x = jnp.arange(16.0)
+
+    def make_args():
+        made["n"] += 1
+        return (jnp.zeros(()), x)
+
+    tr = telemetry.measure(
+        consume, jnp.zeros(()), x, steps=16, repeats=3, warmup=2,
+        make_args=make_args,
+    )
+    # 2 warmup + 3 timed calls, each from a fresh argument tuple
+    assert made["n"] == 5
+    assert tr.repeats == 3 and tr.execute_s > 0 and tr.compile_s > 0
+
+    # plain (non-jitted) callables honour the thunk the same way
+    made["n"] = 0
+    seen = []
+    tr2 = telemetry.measure(
+        lambda s, v: seen.append(int(s)), jnp.zeros(()), x, steps=1,
+        repeats=2, warmup=1, make_args=make_args,
+    )
+    assert made["n"] == 3 and tr2.compile_s == 0.0
+
+    # the streaming engine's own donated chunk runner, end to end: the same
+    # carry must never be passed twice, and the measured numbers stay sane
+    from repro.core.jax_cache import PolicySpec
+
+    spec = PolicySpec(kind="lru", n_objects=64, capacity=8)
+    trace = jnp.asarray(
+        workloads.make_traces("stationary", 64, 1, 128, seed=3)[0]
+    )
+    tr3 = telemetry.measure(
+        jax_cache.run_chunk, spec, jax_cache.init_state(spec), trace,
+        static=(0,), steps=128, repeats=2,
+        make_args=lambda: (spec, jax_cache.init_state(spec), trace),
+    )
+    assert tr3.execute_s > 0
+
+
+def test_compare_gate_zero_baseline_is_coverage_only():
+    """A zero-valued throughput baseline has no ratio: the row must degrade
+    to coverage-only (presence still gated, throughput not) instead of
+    dividing by zero or silently skipping."""
+    cmp_ = _load_compare()
+
+    def payload(sps, us):
+        return {
+            "rows": [
+                {
+                    "name": "fleet_stream/lru",
+                    "us_per_call": us,
+                    "derived": f"steps_per_s={sps} total_chr=0.5",
+                }
+            ]
+        }
+
+    base = payload(0, 0.0)
+    # zero baseline: never a throughput regression, whatever the current run
+    regs, notes = cmp_.compare(base, payload(5, 1e9))
+    assert regs == []
+    assert sum("coverage-only" in n for n in notes) == 2  # steps_per_s + us_per_call
+    assert any("steps_per_s" in n and "fleet_stream/lru" in n for n in notes)
+    # presence is still gated: the row vanishing remains a regression
+    regs, _ = cmp_.compare(base, {"rows": []})
+    assert len(regs) == 1 and "absent" in regs[0]
+    # nonzero baselines keep the ratio gate exactly as before
+    regs, notes = cmp_.compare(payload(1000, 10.0), payload(10, 1000.0))
+    assert len(regs) == 2
+    assert not any("coverage-only" in n for n in notes)
